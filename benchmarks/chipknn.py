@@ -1,0 +1,36 @@
+"""Paper section 4.6 (CHIP-KNN comparison): throughput in GB/s vs dimension d.
+
+CHIP-KNN's bandwidth collapses beyond d=128 (115 GB/s at d=128, evaluated
+only to d=128); the paper's architectures hold ~190 GB/s out to d=4096
+because the distance pipeline is dimension-agnostic. Our TPU formulation has
+the same property structurally: the MXU GEMM's arithmetic intensity GROWS
+with d, so bytes/s stays bandwidth-bound and flat (or rises) in d.
+
+We sweep d at fixed dataset bytes and report effective GB/s =
+(n*d*4 bytes) / scan time for the FQ-SD path.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, timeit
+from repro.core import ExactKNN
+from repro.data import query_stream, vector_dataset
+
+DIMS = (16, 64, 128, 769, 2048, 4096)
+TOTAL_FLOATS = 24_000_000  # fixed dataset volume across dims
+
+
+def run(quick: bool = False):
+    total = TOTAL_FLOATS // (8 if quick else 1)
+    for d in DIMS:
+        n = max(1024, total // d)
+        x = vector_dataset(n, d, seed=0)
+        q = query_stream(x, 16, seed=1)
+        eng = ExactKNN(k=16, chunk_rows=8192).fit(x)
+        t = timeit(lambda: eng.query_batch(q))
+        gbs = n * d * 4 / t / 1e9
+        emit(f"chipknn/d{d}", t * 1e6,
+             f"n={n};d={d};scan_GBps={gbs:.2f};queries=16")
+
+
+if __name__ == "__main__":
+    run()

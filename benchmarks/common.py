@@ -1,0 +1,46 @@
+"""Shared benchmark utilities: timing, energy model, CSV emission.
+
+Energy is MODELED, not measured (no power rails on this host): J = wall
+time x device TDP. All methods in a table run on the same host, so
+queries/J ratios equal inverse time ratios — the comparison methodology of
+the paper (Table 2/3) is reproduced; absolute joules are a proxy and are
+labeled as such. TDP constants: repro.roofline.hw.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+from repro.roofline.hw import XEON_E5_2683V4_WATTS
+
+ROWS: list[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def timeit(fn: Callable, *args, repeats: int = 3, warmup: int = 1) -> float:
+    """Median wall seconds per call (blocks on async dispatch)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def energy_j(seconds: float, watts: float = XEON_E5_2683V4_WATTS) -> float:
+    return seconds * watts
+
+
+def queries_per_joule(n_queries: int, seconds: float,
+                      watts: float = XEON_E5_2683V4_WATTS) -> float:
+    return n_queries / energy_j(seconds, watts)

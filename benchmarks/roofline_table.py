@@ -1,0 +1,57 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md section Roofline)."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parent.parent / "artifacts" / "dryrun"
+
+
+def load(mesh: str = "single") -> list[dict]:
+    rows = []
+    for p in sorted(ARTIFACTS.glob(f"*__{mesh}.json")):
+        r = json.loads(p.read_text())
+        if r.get("ok"):
+            rows.append(r)
+    return rows
+
+
+def fmt_row(r: dict) -> str:
+    ro = r["roofline"]
+    mem = r["memory_analysis"]
+    step = max(ro["compute_s"], ro["memory_s"], ro["collective_s"])
+    frac = ro["compute_s"] / step if step else 0.0
+    return (f"{r['arch']:<22}{r['shape']:<15}{ro['compute_s']:>10.4f}"
+            f"{ro['memory_s']:>10.4f}{ro['collective_s']:>12.4f}"
+            f"  {ro['bottleneck']:<11}{ro['useful_flops_ratio']:>7.2f}"
+            f"{frac:>7.2%}"
+            f"{mem['per_device_bytes']/2**30:>9.1f}"
+            f"  {'Y' if mem['fits_v5e_hbm'] else 'N'}")
+
+
+HEADER = (f"{'arch':<22}{'shape':<15}{'compute_s':>10}{'memory_s':>10}"
+          f"{'collect_s':>12}  {'bottleneck':<11}{'useful':>7}{'roofl%':>7}"
+          f"{'GiB/dev':>9}  fits")
+
+
+def run(quick: bool = False):
+    from benchmarks.common import emit
+
+    rows = load("single")
+    print(HEADER)
+    for r in rows:
+        print(fmt_row(r))
+        ro = r["roofline"]
+        step = max(ro["compute_s"], ro["memory_s"], ro["collective_s"])
+        emit(f"roofline/{r['arch']}/{r['shape']}", step * 1e6,
+             f"bottleneck={ro['bottleneck']};compute_s={ro['compute_s']:.4f};"
+             f"memory_s={ro['memory_s']:.4f};collective_s={ro['collective_s']:.4f};"
+             f"useful={ro['useful_flops_ratio']:.3f};"
+             f"roofline_frac={ro['compute_s']/step if step else 0:.3f}")
+    multi = load("multi")
+    ok = sum(1 for r in multi if r.get("ok"))
+    emit("dryrun/multi_pod_cells", 0.0, f"compiled_ok={ok}")
+
+
+if __name__ == "__main__":
+    run()

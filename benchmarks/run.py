@@ -1,0 +1,47 @@
+"""Benchmark harness entry point — one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+
+Emits ``name,us_per_call,derived`` CSV rows (stdout), matching:
+    table2/*     paper Table 2  (latency / throughput / energy, 3 datasets)
+    table3/*     paper Table 3  (cutoff k vs parallelism trade-off)
+    chipknn/*    section 4.6    (GB/s vs dimension, CHIP-KNN comparison)
+    roofline/*   EXPERIMENTS.md Roofline (from dry-run artifacts)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="reduced sizes")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: table2,table3,chipknn,roofline")
+    args = ap.parse_args(argv)
+
+    from benchmarks import chipknn, roofline_table, table2, table3
+
+    sections = {
+        "table2": table2.run,
+        "table3": table3.run,
+        "chipknn": chipknn.run,
+        "roofline": roofline_table.run,
+    }
+    chosen = (args.only.split(",") if args.only else list(sections))
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in chosen:
+        try:
+            sections[name](quick=args.quick)
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            print(f"{name},0,ERROR", flush=True)
+    return failures
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,53 @@
+"""Paper Table 3: trading off cutoff k against degree of parallelism.
+
+The paper's RQ3: lowering k frees FPGA logic that converts into more
+parallel workers (k=1024/16w -> k=72/24w gives +43% throughput for FD-SQ).
+The TPU analogue: a smaller k shrinks the queue-merge stage (log k bitonic
+stages / smaller lax.top_k) and frees the same compute for distance work,
+so throughput rises as k drops at fixed hardware. We sweep the paper's
+(k, workers) ladder on the MARCO proxy and report the same three metrics.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, queries_per_joule, timeit
+from repro.core import ExactKNN
+from repro.data import query_stream, vector_dataset
+
+# the paper's FD-SQ ladder (k, workers)
+LADDER = [(1024, 16), (418, 19), (200, 22), (72, 24)]
+FQSD_LADDER = [(1024, 16), (64, 16), (22, 19), (10, 22), (3, 24)]
+
+
+def run(quick: bool = False):
+    n, d, m = (20_000 if quick else 200_000), 769, 32
+    x = vector_dataset(n, d, seed=0)
+    q = query_stream(x, m, seed=1)
+
+    base = None
+    for k, workers in LADDER:
+        eng = ExactKNN(k=k, n_partitions=8).fit(x)
+        t = timeit(lambda: eng.query(q[0]))
+        qps = 1 / t
+        base = base or t
+        derived = (f"mode=fdsq;k={k};workers={workers};latency_ms={t*1e3:.2f};"
+                   f"qps={qps:.1f};q_per_J={queries_per_joule(1, t):.3f};"
+                   f"speedup_vs_k1024={base/t:.2f}")
+        emit(f"table3/fdsq/k{k}", t * 1e6, derived)
+
+    base = None
+    for k, workers in FQSD_LADDER:
+        eng = ExactKNN(k=k, n_partitions=8, chunk_rows=16384).fit(x)
+        t = timeit(lambda: eng.query_batch(q))
+        qps = m / t
+        base = base or t
+        derived = (f"mode=fqsd;k={k};workers={workers};"
+                   f"latency_ms={t/m*1e3:.2f};qps={qps:.1f};"
+                   f"q_per_J={queries_per_joule(m, t):.3f};"
+                   f"speedup_vs_k1024={base/t:.2f}")
+        emit(f"table3/fqsd/k{k}", t / m * 1e6, derived)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,64 @@
+"""MeshGraphNet world-edge construction with the exact-kNN engine.
+
+    PYTHONPATH=src python examples/gnn_world_edges.py
+
+MeshGraphNet (arXiv:2010.03409) adds "world edges" between mesh nodes that
+are CLOSE IN SPACE but far on the mesh (collision handling). That proximity
+search is exactly the paper's problem: for every node, find its k nearest
+nodes in world space. Here the kNN engine builds the world edges, then one
+MeshGraphNet step runs on the combined mesh+world graph.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import ExactKNN
+from repro.models import gnn as G
+
+
+def main():
+    rng = np.random.default_rng(0)
+    n = 2_000  # cloth-like 2D mesh folded in 3D
+    u = rng.uniform(0, 1, (n, 2)).astype(np.float32)
+    world = np.stack(  # fold the sheet so distant mesh nodes nearly touch
+        [u[:, 0], np.abs(u[:, 1] - 0.5), np.sin(4 * np.pi * u[:, 1]) * 0.05],
+        axis=1).astype(np.float32)
+
+    # mesh edges: 8-NN in PARAMETER space (the regular mesh)
+    k_mesh, k_world = 8, 4
+    mesh_nn = ExactKNN(k=k_mesh + 1).fit(u).query_batch(u)
+    mesh_src = np.repeat(np.arange(n), k_mesh)
+    mesh_dst = np.asarray(mesh_nn.indices[:, 1:]).reshape(-1)  # skip self
+
+    # world edges: kNN in WORLD space, keep pairs that are far on the mesh
+    world_nn = ExactKNN(k=k_world + 1).fit(world).query_batch(world)
+    w_src = np.repeat(np.arange(n), k_world)
+    w_dst = np.asarray(world_nn.indices[:, 1:]).reshape(-1)
+    mesh_gap = np.linalg.norm(u[w_src] - u[w_dst], axis=1)
+    keep = mesh_gap > 0.25  # near in world, far on mesh = collision pair
+    w_src, w_dst = w_src[keep], w_dst[keep]
+    print(f"mesh edges: {len(mesh_src)}, world (collision) edges: {len(w_src)} "
+          f"(exact kNN over {n} nodes, both searches)")
+
+    senders = np.concatenate([mesh_src, w_src]).astype(np.int32)
+    receivers = np.concatenate([mesh_dst, w_dst]).astype(np.int32)
+    rel = world[senders] - world[receivers]
+    edges = np.concatenate(
+        [rel, np.linalg.norm(rel, axis=1, keepdims=True)], axis=1)
+
+    cfg = G.GNNConfig(name="mgn-demo", n_layers=5, d_hidden=32,
+                      d_node_in=3, d_edge_in=4, d_out=3)
+    params = G.init(jax.random.key(0), cfg)
+    graph = {
+        "nodes": jnp.asarray(world),
+        "edges": jnp.asarray(edges, jnp.float32),
+        "senders": jnp.asarray(senders),
+        "receivers": jnp.asarray(receivers),
+    }
+    pred = G.apply(params, cfg, graph)
+    print(f"MeshGraphNet forward on mesh+world graph: output {pred.shape}, "
+          f"finite={bool(jnp.isfinite(pred).all())}")
+
+
+if __name__ == "__main__":
+    main()

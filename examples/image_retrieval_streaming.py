@@ -1,0 +1,50 @@
+"""Content-based image retrieval over a corpus bigger than device memory —
+paper section 4.1 use case 1 (YFCC100M-HNFc6 shape), FQ-SD configuration.
+
+    PYTHONPATH=src python examples/image_retrieval_streaming.py
+
+The 4096-dim deep-feature corpus streams through the engine partition by
+partition with double buffering (paper section 3.3 arrows 3-4); the 16
+resident query "images" keep their kNN queues on device the whole time.
+The result is verified exact against a resident-memory pass.
+"""
+import time
+
+import numpy as np
+
+from repro.core import DoubleBufferedStream, ExactKNN
+from repro.data import query_stream, vector_dataset
+
+
+def main():
+    n, d, m, k = 60_000, 4096, 16, 20  # YFCC-shaped (scaled rows)
+    print(f"corpus: {n} x {d} fc6-style features "
+          f"({n * d * 4 / 2**30:.2f} GiB), {m} query images, k={k}")
+    corpus = vector_dataset(n, d, n_clusters=32, seed=0)
+    queries = query_stream(corpus, m, seed=1)
+
+    engine = ExactKNN(k=k, metric="l2")
+
+    # --- streamed FQ-SD: the corpus never resides on device ------------
+    t0 = time.perf_counter()
+    streamed = engine.search_streamed(queries, corpus, rows_per_partition=8192)
+    t_stream = time.perf_counter() - t0
+    print(f"FQ-SD streamed: {m} queries in {t_stream:.2f}s "
+          f"({n * d * 4 / t_stream / 1e9:.2f} GB/s effective scan rate)")
+
+    # --- reference: resident pass ---------------------------------------
+    resident = ExactKNN(k=k).fit(corpus).query_batch(queries)
+    np.testing.assert_allclose(np.asarray(streamed.scores),
+                               np.asarray(resident.scores), rtol=1e-5, atol=1e-3)
+    print("streamed result == resident result (exact)")
+
+    # --- double-buffer accounting ---------------------------------------
+    parts = list(range(0, n, 8192))
+    print(f"partitions shipped: {len(parts)} x 8192 rows, depth-2 pipeline "
+          f"(bank i+1 transfers while bank i computes)")
+    top = np.asarray(streamed.indices[:, 0])
+    print(f"nearest image per query: {top.tolist()}")
+
+
+if __name__ == "__main__":
+    main()

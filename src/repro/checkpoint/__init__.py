@@ -1,0 +1,5 @@
+"""Fault-tolerant checkpointing: atomic, async, sharding-aware, elastic."""
+from repro.checkpoint.ckpt import load_checkpoint, save_checkpoint
+from repro.checkpoint.manager import CheckpointManager
+
+__all__ = ["save_checkpoint", "load_checkpoint", "CheckpointManager"]

@@ -1,0 +1,37 @@
+"""Architecture registry: --arch <id> resolution for launch/ and tests."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import ArchConfig, ShapeSpec  # noqa: F401
+
+_MODULES = {
+    "kimi-k2-1t-a32b": "repro.configs.kimi_k2_1t_a32b",
+    "qwen3-moe-30b-a3b": "repro.configs.qwen3_moe_30b_a3b",
+    "qwen2.5-14b": "repro.configs.qwen2_5_14b",
+    "starcoder2-7b": "repro.configs.starcoder2_7b",
+    "minicpm-2b": "repro.configs.minicpm_2b",
+    "meshgraphnet": "repro.configs.meshgraphnet",
+    "dlrm-rm2": "repro.configs.dlrm_rm2",
+    "two-tower-retrieval": "repro.configs.two_tower_retrieval",
+    "bst": "repro.configs.bst",
+    "wide-deep": "repro.configs.wide_deep",
+    "knn-search": "repro.configs.knn_paper",  # the paper's own workloads
+}
+
+ASSIGNED_ARCHS = tuple(a for a in _MODULES if a != "knn-search")
+ALL_ARCHS = tuple(_MODULES)
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(_MODULES[arch_id]).ARCH
+
+
+def iter_cells(archs=None):
+    """Yield (arch_config, shape_spec) for every assigned cell."""
+    for a in archs or ASSIGNED_ARCHS:
+        cfg = get_config(a)
+        for s in cfg.shapes:
+            yield cfg, s

@@ -1,0 +1,45 @@
+"""repro.core — exact kNN search engine (the paper's primary contribution).
+
+Public API:
+    ExactKNN            engine facade (FD-SQ / FQ-SD, single-chip or mesh)
+    TopK                result container (sorted scores + global indices)
+    fqsd_scan           chunked streamed-dataset search (throughput)
+    fdsq_search         partition-parallel resident-dataset search (latency)
+    fqsd_streamed       host-streamed search with double buffering
+    fdsq_sharded/fqsd_sharded/fqsd_ring   mesh-distributed executors
+"""
+from repro.core.distance import (
+    cosine_distance,
+    inner_product,
+    l2_sq,
+    pairwise_scores,
+    row_norms_sq,
+)
+from repro.core.engine import EnginePlan, ExactKNN
+from repro.core.fdsq import fdsq_query_stream, fdsq_search
+from repro.core.fqsd import fqsd_scan, fqsd_streamed
+from repro.core.partition import PaddedDataset, iter_partitions, make_padded
+from repro.core.quantized import QuantizedDataset, knn_quantized, quantize_dataset
+from repro.core.sharded import fdsq_sharded, fqsd_ring, fqsd_sharded, shard_dataset
+from repro.core.streaming import DoubleBufferedStream, prefetch_to_device
+from repro.core.topk import (
+    TopK,
+    empty_topk,
+    knn_oracle,
+    merge_topk,
+    merge_two_sorted,
+    topk_smallest,
+    tree_merge_sorted,
+)
+
+__all__ = [
+    "ExactKNN", "EnginePlan", "TopK",
+    "fqsd_scan", "fqsd_streamed", "fdsq_search", "fdsq_query_stream",
+    "fdsq_sharded", "fqsd_sharded", "fqsd_ring", "shard_dataset",
+    "pairwise_scores", "l2_sq", "inner_product", "cosine_distance",
+    "row_norms_sq", "topk_smallest", "merge_topk", "merge_two_sorted",
+    "tree_merge_sorted", "empty_topk", "knn_oracle",
+    "PaddedDataset", "make_padded", "iter_partitions",
+    "DoubleBufferedStream", "prefetch_to_device",
+    "QuantizedDataset", "quantize_dataset", "knn_quantized",
+]

@@ -1,0 +1,206 @@
+"""ExactKNN — the public facade over FQ-SD / FD-SQ (the paper's contribution).
+
+One engine object plays the role of the single FPGA hardware configuration:
+both logical configurations run on the same compiled building blocks, and
+switching between them at run time never recompiles for shapes already seen
+(the executable cache is the analogue of "no reflashing", section 3.2).
+
+Usage:
+    eng = ExactKNN(k=10, metric="l2")
+    eng.fit(dataset)                       # FD-SQ: resident dataset
+    res = eng.query(q)                     # latency path
+    res = eng.query_batch(Q)               # FQ-SD over the resident data
+    res = eng.search_streamed(Q, host_it)  # FQ-SD: dataset > device memory
+
+Distributed (mesh) usage routes to repro.core.sharded; Pallas-fused kernels
+are selected with backend="pallas" (validated in interpret mode on CPU,
+compiled for TPU MXU/VMEM on hardware).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Literal, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import partition as part
+from repro.core import sharded as sh
+from repro.core.distance import Metric, validate_metric
+from repro.core.fdsq import fdsq_search
+from repro.core.fqsd import fqsd_scan, fqsd_streamed
+from repro.core.topk import TopK
+
+Backend = Literal["xla", "pallas"]
+
+
+@dataclasses.dataclass
+class EnginePlan:
+    """Resolved execution plan — logged for observability / tests."""
+
+    mode: str  # "fdsq" | "fqsd" | "fqsd-streamed" | "fdsq-sharded" | ...
+    backend: Backend
+    m: int
+    k: int
+    metric: str
+    chunk_rows: int
+    n_partitions: int
+
+
+class ExactKNN:
+    def __init__(
+        self,
+        k: int,
+        metric: Metric = "l2",
+        backend: Backend = "xla",
+        chunk_rows: int = 8192,
+        n_partitions: int = 8,
+        mesh: jax.sharding.Mesh | None = None,
+        mesh_axes: Sequence[str] = ("data", "model"),
+        dtype=jnp.float32,
+    ):
+        validate_metric(metric)
+        if k < 1:
+            raise ValueError("k must be >= 1")
+        self.k = int(k)
+        self.metric = metric
+        self.backend: Backend = backend
+        self.chunk_rows = int(chunk_rows)
+        self.n_partitions = int(n_partitions)
+        self.mesh = mesh
+        self.mesh_axes = tuple(mesh_axes)
+        self.dtype = dtype
+        self._ds: part.PaddedDataset | None = None
+        self._sharded_fdsq = None
+        self._sharded_fqsd = None
+        self._plans: list[EnginePlan] = []
+
+    # ------------------------------------------------------------------ fit
+    def fit(self, vectors: np.ndarray | jax.Array) -> "ExactKNN":
+        """Load the dataset device-resident (FD-SQ, fig. 2 arrow 1)."""
+        v = jnp.asarray(vectors, dtype=self.dtype)
+        if v.ndim != 2:
+            raise ValueError(f"expected (N, d) dataset, got {v.shape}")
+        row_mult = self._row_mult(v.shape[0])
+        padded = part.make_padded(v, row_mult=row_mult, dim_mult=part.LANE)
+        if self.mesh is not None:
+            vec, nrm = sh.shard_dataset(
+                self.mesh, padded.vectors, padded.norms, self.mesh_axes
+            )
+            padded = part.PaddedDataset(vec, nrm, padded.n_valid, 0)
+            self._sharded_fdsq = sh.fdsq_sharded(
+                self.mesh, self.k, self.metric, self.mesh_axes
+            )
+        self._ds = padded
+        return self
+
+    def _row_mult(self, n: int) -> int:
+        """Partition-count alignment: rows must split over partitions/shards."""
+        mult = part.LANE * self.n_partitions
+        if self.mesh is not None:
+            total = 1
+            for ax in self.mesh_axes:
+                total *= self.mesh.shape[ax]
+            mult = max(mult, part.LANE * total)
+        return mult
+
+    @property
+    def n(self) -> int:
+        self._require_fit()
+        return self._ds.n_valid
+
+    def _require_fit(self):
+        if self._ds is None:
+            raise RuntimeError("call .fit(dataset) first")
+
+    def _pad_queries(self, q) -> jax.Array:
+        q = jnp.asarray(q, dtype=self.dtype)
+        if q.ndim == 1:
+            q = q[None, :]
+        return part.pad_dim(q, self._ds.vectors.shape[1])
+
+    def _log(self, mode: str, m: int):
+        self._plans.append(
+            EnginePlan(
+                mode, self.backend, m, self.k, self.metric,
+                self.chunk_rows, self.n_partitions,
+            )
+        )
+
+    @property
+    def plans(self) -> list[EnginePlan]:
+        return list(self._plans)
+
+    # ---------------------------------------------------------------- FD-SQ
+    def query(self, q) -> TopK:
+        """Low-latency path: one query (or micro-batch) vs resident dataset."""
+        self._require_fit()
+        qv = self._pad_queries(q)
+        self._log("fdsq" + ("-sharded" if self.mesh else ""), qv.shape[0])
+        if self.mesh is not None:
+            return self._sharded_fdsq(qv, self._ds.vectors, self._ds.norms)
+        if self.backend == "pallas":
+            from repro.kernels.knn import ops as knn_ops
+
+            return knn_ops.knn(
+                qv, self._ds.vectors, self.k, metric=self.metric,
+                x_norms=self._ds.norms,
+            )
+        return fdsq_search(
+            qv, self._ds.vectors, self._ds.norms, self.k, self.metric,
+            self.n_partitions,
+        )
+
+    def query_stream(self, queries_iter: Iterable) -> Iterable[TopK]:
+        """Streamed queries, one at a time (fig. 2 arrows 3-5)."""
+        for q in queries_iter:
+            out = self.query(q)
+            yield TopK(out.scores[0], out.indices[0])
+
+    # ---------------------------------------------------------------- FQ-SD
+    def query_batch(self, queries) -> TopK:
+        """Throughput path: a batch of M queries over the resident dataset."""
+        self._require_fit()
+        qv = self._pad_queries(queries)
+        self._log("fqsd" + ("-sharded" if self.mesh else ""), qv.shape[0])
+        if self.mesh is not None:
+            if self._sharded_fqsd is None:
+                self._sharded_fqsd = sh.fqsd_ring(self.mesh, self.k, self.metric)
+            return self._sharded_fqsd(qv, self._ds.vectors, self._ds.norms)
+        if self.backend == "pallas":
+            from repro.kernels.knn import ops as knn_ops
+
+            return knn_ops.knn(
+                qv, self._ds.vectors, self.k, metric=self.metric,
+                x_norms=self._ds.norms,
+            )
+        chunk = min(self.chunk_rows, self._ds.vectors.shape[0])
+        while self._ds.vectors.shape[0] % chunk:
+            chunk //= 2
+        return fqsd_scan(
+            qv, self._ds.vectors, self._ds.norms, self.k, self.metric, chunk
+        )
+
+    def search_streamed(
+        self,
+        queries,
+        host_vectors: np.ndarray,
+        rows_per_partition: int = 65536,
+        prefetch_depth: int = 2,
+    ) -> TopK:
+        """FQ-SD over a host dataset too large for device memory (fig. 1).
+
+        Queries are loaded once (arrow 1); partitions stream through the
+        double buffer (arrows 3-4); results come back at the end (arrow 5).
+        """
+        q = jnp.asarray(queries, dtype=self.dtype)
+        if q.ndim == 1:
+            q = q[None, :]
+        d_pad = part.round_up(host_vectors.shape[1], part.LANE)
+        q = part.pad_dim(q, d_pad)
+        self._log("fqsd-streamed", q.shape[0])
+        parts = part.iter_partitions(host_vectors, rows_per_partition)
+        return fqsd_streamed(
+            q, parts, self.k, self.metric, prefetch_depth=prefetch_depth
+        )

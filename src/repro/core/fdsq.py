@@ -1,0 +1,78 @@
+"""FD-SQ — Fixed Dataset, Streamed Queries (latency-optimized; paper fig. 2).
+
+The dataset is resident, split into N partitions; each incoming query fans
+out over all partitions in parallel, every partition produces a local top-k,
+and the locals are merged through one shared queue. On a single chip the
+"partitions" are the grid steps of the fused kernel / scan; across a mesh
+they are device shards merged by an exact tree reduction (see
+`repro.core.sharded` for the shard_map version with ring overlap).
+
+Latency knobs mirror the paper's RQ3: smaller cutoff k -> cheaper merge ->
+more effective parallel workers per query.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.distance import Metric, validate_metric
+from repro.core.fqsd import chunk_step
+from repro.core.topk import TopK, empty_topk, tree_merge_sorted
+
+
+@functools.partial(jax.jit, static_argnames=("k", "metric", "n_partitions"))
+def fdsq_search(
+    query: jax.Array,
+    dataset: jax.Array,
+    dataset_norms: jax.Array,
+    k: int,
+    metric: Metric = "l2",
+    n_partitions: int = 8,
+) -> TopK:
+    """Answer one query (or a micro-batch) over a resident dataset.
+
+    query : (m, d) with small m (paper: m=1); dataset : (N, d) padded.
+    The N partitions are processed as a *parallel* (vmapped) fan-out — the N
+    distance-computation instances of fig. 2 — then tree-merged into the
+    shared queue. XLA is free to execute partition branches concurrently;
+    on TPU each branch is an independent MXU stream.
+    """
+    validate_metric(metric)
+    n, d = dataset.shape
+    if n % n_partitions:
+        raise ValueError(f"N={n} not divisible by n_partitions={n_partitions}")
+    rows = n // n_partitions
+    parts = dataset.reshape(n_partitions, rows, d)
+    norms = dataset_norms.reshape(n_partitions, rows)
+    bases = jnp.arange(n_partitions, dtype=jnp.int32) * rows
+
+    def one_partition(vectors, vnorms, base):
+        init = empty_topk((query.shape[0],), k)
+        return chunk_step(init, query, vectors, vnorms, base, rows, metric)
+
+    locals_ = jax.vmap(one_partition)(parts, norms, bases)  # (P, m, k)
+    return tree_merge_sorted(locals_.scores, locals_.indices)
+
+
+def fdsq_query_stream(
+    queries_iter,
+    dataset: jax.Array,
+    dataset_norms: jax.Array,
+    k: int,
+    metric: Metric = "l2",
+    n_partitions: int = 8,
+):
+    """Process a stream of incoming queries one at a time (paper arrows 3-5).
+
+    Yields TopK per query. The executable is compiled once for the (1, d)
+    query shape — switching between FD-SQ and FQ-SD never "reflashes"
+    (recompiles) as long as shapes repeat (see engine plan cache).
+    """
+    for q in queries_iter:
+        q = jnp.asarray(q)
+        if q.ndim == 1:
+            q = q[None, :]
+        out = fdsq_search(q, dataset, dataset_norms, k, metric, n_partitions)
+        yield TopK(out.scores[0], out.indices[0])

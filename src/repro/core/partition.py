@@ -1,0 +1,103 @@
+"""Dataset partitioning and padding (paper section 3.2 alignment rules).
+
+The paper splits the dataset into N disjoint equal partitions "aligned to the
+FPGA data transfer width with padding when needed". The TPU analogues:
+
+* chunk rows to a multiple of the kernel's n-tile (lane alignment, 128);
+* pad the feature dim to the MXU contraction width (multiple of 128 ideally,
+  at minimum 8 sublanes x dtype packing);
+* padded rows carry +inf distance so they can never enter a kNN queue.
+
+Padding is done ONCE at fit/stream time, never per query.
+"""
+from __future__ import annotations
+
+import math
+from typing import Iterator, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+LANE = 128  # TPU lane width; also MXU tile edge.
+
+
+def round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+class PaddedDataset(NamedTuple):
+    """A device-ready, alignment-padded dataset partition."""
+
+    vectors: jax.Array  # (n_pad, d_pad)
+    norms: jax.Array  # (n_pad,) — +inf on padded rows
+    n_valid: int  # true row count
+    base_index: int  # global index of row 0
+
+
+def pad_dim(x: np.ndarray | jax.Array, d_pad: int):
+    d = x.shape[-1]
+    if d == d_pad:
+        return x
+    if d > d_pad:
+        raise ValueError(f"d={d} exceeds padded dim {d_pad}")
+    pad = [(0, 0)] * (x.ndim - 1) + [(0, d_pad - d)]
+    return jnp.pad(x, pad) if isinstance(x, jax.Array) else np.pad(x, pad)
+
+
+def pad_rows(x: np.ndarray | jax.Array, n_pad: int):
+    n = x.shape[0]
+    if n == n_pad:
+        return x
+    pad = [(0, n_pad - n)] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, pad) if isinstance(x, jax.Array) else np.pad(x, pad)
+
+
+def aligned_shape(n: int, d: int, row_mult: int = LANE, dim_mult: int = LANE):
+    return round_up(max(n, 1), row_mult), round_up(d, dim_mult)
+
+
+def make_padded(
+    vectors, base_index: int = 0, row_mult: int = LANE, dim_mult: int = LANE
+) -> PaddedDataset:
+    """Pad one partition; padded rows get +inf norm => +inf L2 score.
+
+    For the `ip`/`cos` metrics padded rows are all-zero vectors whose score is
+    0 / 1; exactness there is maintained by index masking in the executors
+    (scores of index -1 rows are forced to +inf before queue insertion).
+    """
+    n, d = vectors.shape
+    n_pad, d_pad = aligned_shape(n, d, row_mult, dim_mult)
+    v = pad_rows(pad_dim(jnp.asarray(vectors), d_pad), n_pad)
+    norms = jnp.sum(v.astype(jnp.float32) ** 2, axis=-1)
+    norms = jnp.where(jnp.arange(n_pad) < n, norms, jnp.inf)
+    return PaddedDataset(v, norms, n, base_index)
+
+
+def num_partitions(n_rows: int, rows_per_part: int) -> int:
+    return max(1, math.ceil(n_rows / rows_per_part))
+
+
+def iter_partitions(
+    vectors: np.ndarray, rows_per_part: int, row_mult: int = LANE, dim_mult: int = LANE
+) -> Iterator[PaddedDataset]:
+    """Host-side generator of equal padded partitions (paper arrow 3).
+
+    Every partition has identical padded shape so the device executable is
+    compiled once — the analogue of the fixed FPGA bitstream.
+    """
+    n = vectors.shape[0]
+    rows_per_part = round_up(rows_per_part, row_mult)
+    for start in range(0, n, rows_per_part):
+        chunk = vectors[start : start + rows_per_part]
+        chunk = pad_rows(chunk, rows_per_part)  # equal sizes incl. last
+        p = make_padded(chunk, base_index=start, row_mult=row_mult, dim_mult=dim_mult)
+        # make_padded's validity mask must reflect the true rows of the final
+        # (possibly short) chunk, not the equal-size padded buffer:
+        n_valid = min(rows_per_part, n - start)
+        norms = jnp.where(jnp.arange(p.vectors.shape[0]) < n_valid, p.norms, jnp.inf)
+        yield PaddedDataset(p.vectors, norms, n_valid, start)
+
+
+def valid_mask(n_pad: int, n_valid: int) -> jax.Array:
+    return jnp.arange(n_pad, dtype=jnp.int32) < n_valid

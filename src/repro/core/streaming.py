@@ -1,0 +1,69 @@
+"""Host->device double-buffered dataset streaming (paper section 3.3).
+
+The paper keeps the PCIe 16x link at ~12.5/16 GB/s by writing partition i+1
+into FPGA memory bank ((i+1 mod 2)+1) while the FPGA computes on partition i
+from the other bank. JAX's dispatch is asynchronous: `jax.device_put`
+initiates a DMA that overlaps with in-flight computation, so the same
+conflict-free producer/consumer schedule is expressed by keeping exactly one
+transfer ahead of the consumer (depth=2 == two memory banks; deeper queues
+trade host memory for jitter tolerance).
+
+On the CPU test platform transfers are cheap; the *structure* (one partition
+in flight, consumer never blocks on the producer unless the host is slower
+than compute) is what carries to TPU, where it is the difference between
+HBM-bandwidth-bound and PCIe-bound FQ-SD throughput.
+"""
+from __future__ import annotations
+
+import collections
+from typing import Callable, Iterable, Iterator, TypeVar
+
+import jax
+
+T = TypeVar("T")
+
+
+class DoubleBufferedStream:
+    """Iterate device-resident items while prefetching `depth-1` ahead.
+
+    put_fn defaults to jax.device_put; pass a sharded device_put for
+    multi-chip streaming (FQ-SD over a mesh).
+    """
+
+    def __init__(
+        self,
+        host_iter: Iterable[T],
+        depth: int = 2,
+        put_fn: Callable[[T], T] | None = None,
+    ):
+        if depth < 1:
+            raise ValueError("depth must be >= 1")
+        self._it = iter(host_iter)
+        self._depth = depth
+        self._put = put_fn or jax.device_put
+        self._buf: collections.deque = collections.deque()
+        self.transfers = 0  # observability: number of partitions shipped
+
+    def _fill(self) -> None:
+        while len(self._buf) < self._depth:
+            try:
+                item = next(self._it)
+            except StopIteration:
+                return
+            # device_put returns immediately (async dispatch); the DMA for
+            # partition i+1 overlaps the consumer's compute on partition i —
+            # the two "memory banks" of the paper.
+            self._buf.append(self._put(item))
+            self.transfers += 1
+
+    def __iter__(self) -> Iterator[T]:
+        self._fill()
+        while self._buf:
+            item = self._buf.popleft()
+            self._fill()  # enqueue next bank before yielding control
+            yield item
+
+
+def prefetch_to_device(host_iter: Iterable[T], depth: int = 2, put_fn=None):
+    """Functional alias used by the data pipelines."""
+    return iter(DoubleBufferedStream(host_iter, depth=depth, put_fn=put_fn))

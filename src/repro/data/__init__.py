@@ -1,0 +1,13 @@
+"""Data pipelines: synthetic generators + double-buffered device prefetch."""
+from repro.data.synthetic import (
+    click_log_stream,
+    token_stream,
+    vector_dataset,
+    query_stream,
+)
+from repro.data.pipeline import DataPipeline
+
+__all__ = [
+    "token_stream", "click_log_stream", "vector_dataset", "query_stream",
+    "DataPipeline",
+]

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the kNN hot path (validated in interpret mode).
+
+l2dist — MXU-tiled squared-L2 distance matrix (3-stage pipeline analogue)
+topk   — streaming top-k over a score matrix (the kNN queue as VMEM scratch)
+knn    — fused distance+queue: the paper's full dataflow, distances never
+         touch HBM (see kernels/knn/kernel.py header for the traffic math)
+
+Shared: bitonic.py — gather-free compare-exchange networks used by both
+queue kernels and usable as plain jnp code.
+"""

@@ -1,0 +1,116 @@
+"""Vectorized bitonic networks — lane-parallel compare-exchange primitives.
+
+The FPGA kNN queue is a chain of k compare-swap nodes processing one element
+per cycle. The VPU is an (8 x 128)-lane SIMD machine, so the element-serial
+queue becomes O(log^2) *stages* of full-width compare-exchanges. Everything
+here is written with roll/iota/where only (no gathers, no lane reshapes) so
+it lowers inside Pallas TPU kernels; the same functions double as jnp
+reference code.
+
+All arrays are (..., L) with L a power of two; (values, indices) move as
+pairs and comparisons are lexicographic (value, index) so exact-score ties
+break to the smaller index — identical semantics to the systolic queue's
+stable drain.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def _is_pow2(x: int) -> bool:
+    return x > 0 and (x & (x - 1)) == 0
+
+
+def _pair_less(v1, i1, v2, i2):
+    """(v1, i1) < (v2, i2) lexicographically."""
+    return (v1 < v2) | ((v1 == v2) & (i1 < i2))
+
+
+def _compare_exchange(vals, idxs, s: int, take_smaller):
+    """One compare-exchange stage at XOR-distance s (s a power of two).
+
+    take_smaller : bool array broadcastable to vals — True where this lane
+    keeps the smaller of (self, partner). Partner of lane i is lane i^s,
+    realized with two rolls + a bit mask (gather-free).
+    """
+    lane = lax.broadcasted_iota(jnp.int32, vals.shape, vals.ndim - 1)
+    upper = (lane & s) != 0  # I am the +s element of my pair
+    fwd_v = jnp.roll(vals, -s, axis=-1)  # vals[i+s]
+    bwd_v = jnp.roll(vals, s, axis=-1)  # vals[i-s]
+    fwd_i = jnp.roll(idxs, -s, axis=-1)
+    bwd_i = jnp.roll(idxs, s, axis=-1)
+    part_v = jnp.where(upper, bwd_v, fwd_v)
+    part_i = jnp.where(upper, bwd_i, fwd_i)
+    partner_smaller = _pair_less(part_v, part_i, vals, idxs)
+    choose_partner = jnp.where(take_smaller, partner_smaller, ~partner_smaller)
+    out_v = jnp.where(choose_partner, part_v, vals)
+    out_i = jnp.where(choose_partner, part_i, idxs)
+    return out_v, out_i
+
+
+def bitonic_sort(vals, idxs):
+    """Full ascending bitonic sort over the last axis (length power of two).
+
+    log^2(L) compare-exchange stages, each O(L) vectorized work across all
+    leading axes — the throughput-form of the paper's one-element-per-cycle
+    queue insertion.
+    """
+    L = vals.shape[-1]
+    if not _is_pow2(L):
+        raise ValueError(f"bitonic_sort needs power-of-two length, got {L}")
+    lane = lax.broadcasted_iota(jnp.int32, vals.shape, vals.ndim - 1)
+    k = 2
+    while k <= L:
+        asc = (lane & k) == 0  # block direction alternates at span k
+        s = k // 2
+        while s >= 1:
+            lower = (lane & s) == 0
+            take_smaller = lower == asc
+            vals, idxs = _compare_exchange(vals, idxs, s, take_smaller)
+            s //= 2
+        k *= 2
+    return vals, idxs
+
+
+def bitonic_merge_ascending(vals, idxs):
+    """Sort a *bitonic* (..., L) sequence ascending: log(L) stages."""
+    L = vals.shape[-1]
+    if not _is_pow2(L):
+        raise ValueError(f"bitonic_merge needs power-of-two length, got {L}")
+    lane = lax.broadcasted_iota(jnp.int32, vals.shape, vals.ndim - 1)
+    s = L // 2
+    while s >= 1:
+        take_smaller = (lane & s) == 0
+        vals, idxs = _compare_exchange(vals, idxs, s, take_smaller)
+        s //= 2
+    return vals, idxs
+
+
+def topk_update(buf_v, buf_i, cand_v, cand_i):
+    """Streaming top-k update: merge k sorted-ascending candidates into a
+    sorted-ascending (..., k) buffer. THE kernel-resident kNN queue step.
+
+    buf asc + candidates asc:
+      1. reverse candidates (desc);
+      2. lane-wise lexicographic min into the buffer — after this the buffer
+         holds exactly the k smallest of the union (each buffer lane's
+         partner in the would-be 2k bitonic sequence), and is itself bitonic;
+      3. one bitonic merge re-sorts ascending.
+    Cost: log(k)+1 stages versus the FPGA queue's k-cycle drain.
+    """
+    if buf_v.shape != cand_v.shape:
+        raise ValueError(f"buffer/candidates shape mismatch {buf_v.shape} vs {cand_v.shape}")
+    rev_v = jnp.flip(cand_v, axis=-1)
+    rev_i = jnp.flip(cand_i, axis=-1)
+    take_rev = _pair_less(rev_v, rev_i, buf_v, buf_i)
+    v = jnp.where(take_rev, rev_v, buf_v)
+    i = jnp.where(take_rev, rev_i, buf_i)
+    return bitonic_merge_ascending(v, i)
+
+
+def sort_topk_tile(scores, idxs, k_eff: int):
+    """Sort a (..., L) tile ascending and return its first k_eff columns."""
+    v, i = bitonic_sort(scores, idxs)
+    return v[..., :k_eff], i[..., :k_eff]

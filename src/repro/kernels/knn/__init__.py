@@ -1,0 +1,1 @@
+from repro.kernels.knn.ops import knn

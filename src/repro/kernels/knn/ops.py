@@ -1,0 +1,68 @@
+"""Jitted public wrapper for the fused kNN kernel (engine backend="pallas")."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.topk import TopK
+from repro.kernels.knn.kernel import knn_pallas
+
+
+def _round_up(v: int, m: int) -> int:
+    return ((v + m - 1) // m) * m
+
+
+def _next_pow2(v: int) -> int:
+    p = 1
+    while p < v:
+        p <<= 1
+    return p
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "metric", "block_m", "block_n", "block_d", "interpret"),
+)
+def knn(
+    q: jax.Array,
+    x: jax.Array,
+    k: int,
+    metric: str = "l2",
+    x_norms: jax.Array | None = None,
+    block_m: int = 128,
+    block_n: int = 512,
+    block_d: int = 512,
+    interpret: bool | None = None,
+) -> TopK:
+    """Exact kNN of (M, d) queries over (N, d) dataset -> TopK((M,k),(M,k)).
+
+    Handles all padding: d zero-padded (exact for both metrics), N padded
+    with +inf-norm rows (excluded by the in-kernel validity mask), k rounded
+    to a power of two for the bitonic queue then sliced. If `x_norms` is
+    given (engine-resident datasets precompute them) padded entries must
+    already be +inf.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if metric not in ("l2", "ip"):
+        raise ValueError(f"fused kernel supports l2|ip, got {metric}")
+    m, d = q.shape
+    n, _ = x.shape
+    k_eff = _next_pow2(k)
+    bn = max(block_n, k_eff)
+    bm, bd = block_m, min(block_d, _round_up(d, 128))
+    mp, np_, dp = _round_up(m, bm), _round_up(n, bn), _round_up(d, bd)
+
+    qp = jnp.pad(q, ((0, mp - m), (0, dp - d)))
+    xp = jnp.pad(x, ((0, np_ - n), (0, dp - d)))
+    if x_norms is None:
+        xn = jnp.sum(x.astype(jnp.float32) ** 2, axis=-1)
+    else:
+        xn = x_norms.astype(jnp.float32)
+    xn = jnp.pad(xn, (0, np_ - n), constant_values=jnp.inf)[None, :]
+
+    v, i = knn_pallas(qp, xp, xn, k_eff, metric, bm, bn, bd, interpret)
+    v, i = v[:m, :k], i[:m, :k]
+    return TopK(v, jnp.where(jnp.isfinite(v), i, -1))

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the fused kNN kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def knn_ref(
+    q: jax.Array, x: jax.Array, k: int, metric: str = "l2"
+) -> tuple[jax.Array, jax.Array]:
+    """Exact kNN from dense scores. (M, d), (N, d) -> (M, k) vals + idx."""
+    q32, x32 = q.astype(jnp.float32), x.astype(jnp.float32)
+    cross = q32 @ x32.T
+    if metric == "l2":
+        qn = jnp.sum(q32 * q32, axis=-1, keepdims=True)
+        xn = jnp.sum(x32 * x32, axis=-1)
+        s = jnp.maximum(qn - 2.0 * cross + xn[None, :], 0.0)
+    elif metric == "ip":
+        s = -cross
+    else:
+        raise ValueError(metric)
+    m, n = s.shape
+    idx = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[None, :], (m, n))
+    sv, si = jax.lax.sort((s, idx), dimension=-1, num_keys=2)
+    if n >= k:
+        return sv[:, :k], si[:, :k]
+    pad = k - n
+    sv = jnp.concatenate([sv, jnp.full((m, pad), jnp.inf, jnp.float32)], axis=1)
+    si = jnp.concatenate([si, jnp.full((m, pad), -1, jnp.int32)], axis=1)
+    return sv, si

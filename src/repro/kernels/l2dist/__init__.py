@@ -1,0 +1,1 @@
+from repro.kernels.l2dist.ops import l2dist

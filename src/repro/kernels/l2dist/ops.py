@@ -1,0 +1,49 @@
+"""Jitted public wrapper for the l2dist kernel: padding + backend dispatch."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.l2dist.kernel import l2dist_pallas
+from repro.kernels.l2dist.ref import l2dist_ref
+
+
+def _round_up(v: int, m: int) -> int:
+    return ((v + m - 1) // m) * m
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "block_d", "interpret")
+)
+def l2dist(
+    q: jax.Array,
+    x: jax.Array,
+    block_m: int = 256,
+    block_n: int = 256,
+    block_d: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Squared L2 distance matrix via the Pallas kernel, any (M, N, d).
+
+    Inputs are zero-padded to block multiples (zero pads contribute 0 to all
+    three terms, so the valid region is exact); the result is sliced back.
+    interpret=None auto-selects interpret mode off-TPU.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    m, d = q.shape
+    n, _ = x.shape
+    bm = min(block_m, _round_up(m, 8))
+    bn = min(block_n, _round_up(n, 128))
+    bd = min(block_d, _round_up(d, 128))
+    mp, np_, dp = _round_up(m, bm), _round_up(n, bn), _round_up(d, bd)
+    qp = jnp.pad(q, ((0, mp - m), (0, dp - d)))
+    xp = jnp.pad(x, ((0, np_ - n), (0, dp - d)))
+    out = l2dist_pallas(qp, xp, bm, bn, bd, interpret)
+    return out[:m, :n]
+
+
+def l2dist_reference(q: jax.Array, x: jax.Array) -> jax.Array:
+    return l2dist_ref(q, x)

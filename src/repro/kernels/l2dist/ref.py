@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the l2dist kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def l2dist_ref(q: jax.Array, x: jax.Array) -> jax.Array:
+    """Squared euclidean distance matrix, (M, d) x (N, d) -> (M, N) f32."""
+    q32 = q.astype(jnp.float32)
+    x32 = x.astype(jnp.float32)
+    qn = jnp.sum(q32 * q32, axis=-1, keepdims=True)
+    xn = jnp.sum(x32 * x32, axis=-1)
+    cross = q32 @ x32.T
+    return jnp.maximum(qn - 2.0 * cross + xn[None, :], 0.0)

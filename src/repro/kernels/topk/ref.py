@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the streaming top-k kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def topk_ref(scores: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
+    """k smallest per row, sorted ascending, ties to smaller index.
+
+    scores (M, N) -> (values (M, k) f32, indices (M, k) i32).
+    """
+    m, n = scores.shape
+    idx = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[None, :], (m, n))
+    s, i = jax.lax.sort((scores.astype(jnp.float32), idx), dimension=-1, num_keys=2)
+    if n >= k:
+        return s[:, :k], i[:, :k]
+    pad = k - n
+    s = jnp.concatenate([s, jnp.full((m, pad), jnp.inf, jnp.float32)], axis=1)
+    i = jnp.concatenate([i, jnp.full((m, pad), -1, jnp.int32)], axis=1)
+    return s, i

@@ -1,0 +1,114 @@
+"""Materialize real inputs for a Cell (smoke tests, benchmarks, examples).
+
+Params come from the models' init functions (not random tensors shaped like
+params — routers/softmaxes need sane magnitudes); batches are synthesized
+with valid id ranges.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.launch.steps import Cell, build_cell
+from repro.models import gnn as G
+from repro.models import recsys as R
+from repro.models import transformer as T
+from repro.optim import adamw_init
+from repro.optim.adamw import AdamWConfig
+
+
+def materialize(arch: ArchConfig, shape: ShapeSpec, smoke: bool = True, seed: int = 0):
+    """Returns (cell, concrete positional args)."""
+    cell = build_cell(arch, shape, smoke=smoke)
+    rng = np.random.default_rng(seed)
+    key = jax.random.key(seed)
+
+    if arch.family == "lm":
+        cfg: T.LMConfig = arch.smoke_model if smoke else arch.model
+        params = T.init(key, cfg)
+        args = [params]
+        if shape.kind == "train":
+            opt = adamw_init(params, AdamWConfig(moment_dtype=arch.train_moment_dtype))
+            batch = {
+                k: jnp.asarray(rng.integers(0, cfg.vocab, v.shape), jnp.int32)
+                for k, v in cell.inputs[2].items()
+            }
+            args += [opt, batch]
+        elif shape.kind == "prefill":
+            args.append(jnp.asarray(
+                rng.integers(0, cfg.vocab, cell.inputs[1].shape), jnp.int32))
+        else:  # decode
+            cache_sds = cell.inputs[1]
+            cache = {
+                "k": jnp.zeros(cache_sds["k"].shape, cache_sds["k"].dtype),
+                "v": jnp.zeros(cache_sds["v"].shape, cache_sds["v"].dtype),
+                "len": jnp.int32(cache_sds["k"].shape[2] // 2),
+            }
+            args += [cache, jnp.asarray(
+                rng.integers(0, cfg.vocab, cell.inputs[2].shape), jnp.int32)]
+        return cell, tuple(args)
+
+    if arch.family == "gnn":
+        base: G.GNNConfig = arch.smoke_model if smoke else arch.model
+        d_feat = cell.inputs[2]["graph"]["nodes"].shape[-1]
+        cfg = dataclasses.replace(base, d_node_in=d_feat)
+        params = G.init(key, cfg)
+        opt = adamw_init(params, AdamWConfig(moment_dtype=arch.train_moment_dtype))
+        batch_sds = cell.inputs[2]
+        g = {}
+        nodes_sds = batch_sds["graph"]["nodes"]
+        n_nodes = nodes_sds.shape[-2]
+        for k_, v in batch_sds["graph"].items():
+            if k_ in ("senders", "receivers"):
+                g[k_] = jnp.asarray(rng.integers(0, n_nodes, v.shape), jnp.int32)
+            elif k_ == "edge_mask":
+                g[k_] = jnp.ones(v.shape, bool)
+            else:
+                g[k_] = jnp.asarray(rng.standard_normal(v.shape), v.dtype)
+        batch = {"graph": g,
+                 "targets": jnp.asarray(
+                     rng.standard_normal(batch_sds["targets"].shape), jnp.float32)}
+        if "node_mask" in batch_sds:
+            batch["node_mask"] = jnp.ones(batch_sds["node_mask"].shape, jnp.float32)
+        return cell, (params, opt, batch)
+
+    if arch.family == "recsys":
+        cfg: R.RecsysConfig = arch.smoke_model if smoke else arch.model
+        params = R.init(key, cfg)
+
+        def rand_batch(sds):
+            out = {}
+            for k_, v in sds.items():
+                if k_ == "dense":
+                    out[k_] = jnp.asarray(rng.standard_normal(v.shape), jnp.float32)
+                elif k_ == "label":
+                    out[k_] = jnp.asarray(rng.integers(0, 2, v.shape), jnp.float32)
+                elif k_ == "sparse":
+                    cols = [rng.integers(0, cfg.table_sizes[i], v.shape[:-1] + (1,))
+                            for i in range(v.shape[-1])]
+                    out[k_] = jnp.asarray(np.concatenate(cols, -1), jnp.int32)
+                elif k_ in ("seq", "target", "user", "item"):
+                    out[k_] = jnp.asarray(
+                        rng.integers(0, cfg.table_sizes[0], v.shape), jnp.int32)
+            return out
+
+        if shape.kind == "train":
+            opt = adamw_init(params, AdamWConfig(moment_dtype=arch.train_moment_dtype))
+            return cell, (params, opt, rand_batch(cell.inputs[2]))
+        if shape.kind == "serve":
+            return cell, (params, rand_batch(cell.inputs[1]))
+        uid = jnp.asarray(rng.integers(0, cfg.table_sizes[0], cell.inputs[1].shape), jnp.int32)
+        cand = jnp.asarray(rng.standard_normal(cell.inputs[2].shape), jnp.float32)
+        return cell, (params, uid, cand)
+
+    if arch.family == "knn":
+        q = jnp.asarray(rng.standard_normal(cell.inputs[0].shape), jnp.float32)
+        v = jnp.asarray(rng.standard_normal(cell.inputs[1].shape), jnp.float32)
+        nrm = jnp.sum(v * v, axis=-1)
+        return cell, (q, v, nrm)
+
+    raise ValueError(arch.family)

@@ -1,0 +1,79 @@
+"""Serving driver: kNN retrieval (the paper's workloads) or LM decode.
+
+    PYTHONPATH=src python -m repro.launch.serve --mode knn --n 20000 --d 128 \
+        --k 10 --queries 200 [--fqsd]
+    PYTHONPATH=src python -m repro.launch.serve --mode lm --arch minicpm-2b
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+
+def serve_knn(args):
+    from repro.core import ExactKNN
+    from repro.data import query_stream, vector_dataset
+    from repro.serving import Request, RetrievalServer
+
+    x = vector_dataset(args.n, args.d, seed=0)
+    q = query_stream(x, args.queries, seed=1)
+    eng = ExactKNN(k=args.k, n_partitions=args.partitions).fit(x)
+    if args.fqsd:  # throughput mode: one big batch (paper FQ-SD)
+        t0 = time.perf_counter()
+        out = eng.query_batch(q)
+        dt = time.perf_counter() - t0
+        print(f"FQ-SD: {args.queries} queries in {dt*1e3:.1f} ms "
+              f"({args.queries/dt:.1f} q/s); top1[0]={int(out.indices[0,0])}")
+        return
+    srv = RetrievalServer(eng, batch_window_s=0.0, max_batch=1)
+    lat = []
+    for res in srv.serve(Request(i, q[i]) for i in range(args.queries)):
+        lat.append(res.latency_ms)
+    lat = np.asarray(lat)
+    print(f"FD-SQ: served {srv.stats()['served']} queries  "
+          f"p50={np.percentile(lat,50):.2f}ms p99={np.percentile(lat,99):.2f}ms "
+          f"mean={lat.mean():.2f}ms")
+
+
+def serve_lm(args):
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import transformer as T
+    from repro.serving import DecodeServer
+
+    arch = get_config(args.arch)
+    cfg = arch.smoke_model
+    params = T.init(jax.random.key(0), cfg)
+    srv = DecodeServer(params, cfg, n_slots=4, max_len=128)
+    for rid in range(args.queries):
+        srv.submit(rid, prompt_token=(rid % (cfg.vocab - 1)) + 1, n_tokens=8)
+    t0 = time.perf_counter()
+    done = srv.run_until_drained()
+    dt = time.perf_counter() - t0
+    tok = sum(len(s.tokens) - 1 for s in done)
+    print(f"LM decode: {len(done)} seqs, {tok} tokens in {dt:.2f}s "
+          f"({tok/dt:.1f} tok/s, continuous batching over 4 slots)")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=["knn", "lm"], default="knn")
+    ap.add_argument("--n", type=int, default=20000)
+    ap.add_argument("--d", type=int, default=128)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--queries", type=int, default=100)
+    ap.add_argument("--partitions", type=int, default=8)
+    ap.add_argument("--fqsd", action="store_true")
+    ap.add_argument("--arch", default="minicpm-2b")
+    args = ap.parse_args(argv)
+    if args.mode == "knn":
+        serve_knn(args)
+    else:
+        serve_lm(args)
+
+
+if __name__ == "__main__":
+    main()

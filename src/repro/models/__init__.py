@@ -1,0 +1,1 @@
+"""Model substrates: transformer LMs (dense/MoE), MeshGraphNet, recsys."""

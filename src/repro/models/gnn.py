@@ -1,0 +1,165 @@
+"""MeshGraphNet (arXiv:2010.03409) — encode-process-decode message passing.
+
+Message passing is built on `jax.ops.segment_sum` over an edge index (JAX has
+no SpMM beyond BCOO): edge messages scatter into destination nodes. This IS
+the system's GNN kernel regime (SpMM-by-scatter), per the assignment brief.
+
+Supports all four assigned shapes through one code path:
+    full_graph_sm / ogb_products  — one big (padded) edge list
+    minibatch_lg                  — sampled subgraph from repro.models.sampler
+    molecule                      — batched small graphs via a leading batch dim
+
+The paper-technique tie-in: MeshGraphNet's world-space ("collision") edges
+are built by proximity search — examples/gnn_world_edges uses the exact kNN
+engine to construct them.
+
+Distribution: edge arrays shard over ("pod","data","model"); segment_sum
+produces partial node aggregates that jax.lax.psum-combine under GSPMD when
+node state is replicated (full-batch shapes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.runtime.sharding import shard
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNConfig:
+    name: str
+    n_layers: int = 15
+    d_hidden: int = 128
+    mlp_layers: int = 2
+    aggregator: str = "sum"  # sum | mean | max
+    d_node_in: int = 1433
+    d_edge_in: int = 4
+    d_out: int = 1
+    dtype: Any = jnp.float32
+    remat: bool = False
+    scan_unroll: bool = False  # dry-run cost probes
+
+    def params_count(self) -> int:
+        def mlp_p(d_in):
+            total, d = 0, d_in
+            for _ in range(self.mlp_layers):
+                total += d * self.d_hidden + self.d_hidden
+                d = self.d_hidden
+            return total
+        enc = mlp_p(self.d_node_in) + mlp_p(self.d_edge_in)
+        proc = self.n_layers * (mlp_p(3 * self.d_hidden) + mlp_p(2 * self.d_hidden))
+        dec = mlp_p(self.d_hidden) + self.d_hidden * self.d_out + self.d_out
+        return enc + proc + dec
+
+
+def _init_mlp(key, d_in, d_hidden, n_layers, dtype, d_out=None):
+    dims = [d_in] + [d_hidden] * (n_layers - 1) + [d_out or d_hidden]
+    ks = jax.random.split(key, len(dims) - 1)
+    return [
+        {
+            "w": (jax.random.normal(k, (a, b), jnp.float32) / jnp.sqrt(a)).astype(dtype),
+            "b": jnp.zeros((b,), dtype),
+        }
+        for k, a, b in zip(ks, dims[:-1], dims[1:])
+    ]
+
+
+def _mlp(params, x):
+    for i, lyr in enumerate(params):
+        x = x @ lyr["w"] + lyr["b"]
+        if i + 1 < len(params):
+            x = jax.nn.relu(x)
+    return x
+
+
+def init(key: jax.Array, cfg: GNNConfig):
+    kn, ke, kp, kd = jax.random.split(key, 4)
+
+    def init_proc(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "edge_mlp": _init_mlp(k1, 3 * cfg.d_hidden, cfg.d_hidden, cfg.mlp_layers, cfg.dtype),
+            "node_mlp": _init_mlp(k2, 2 * cfg.d_hidden, cfg.d_hidden, cfg.mlp_layers, cfg.dtype),
+        }
+
+    return {
+        "node_enc": _init_mlp(kn, cfg.d_node_in, cfg.d_hidden, cfg.mlp_layers, cfg.dtype),
+        "edge_enc": _init_mlp(ke, cfg.d_edge_in, cfg.d_hidden, cfg.mlp_layers, cfg.dtype),
+        "procs": jax.vmap(init_proc)(jax.random.split(kp, cfg.n_layers)),
+        "decoder": _init_mlp(kd, cfg.d_hidden, cfg.d_hidden, cfg.mlp_layers, cfg.dtype,
+                             d_out=cfg.d_out),
+    }
+
+
+def _aggregate(messages, dst, n_nodes, aggregator, edge_mask=None):
+    if edge_mask is not None:
+        messages = messages * edge_mask[:, None].astype(messages.dtype)
+        dst = jnp.where(edge_mask, dst, n_nodes)  # scatter pads to a sink row
+        n_seg = n_nodes + 1
+    else:
+        n_seg = n_nodes
+    if aggregator == "sum":
+        agg = jax.ops.segment_sum(messages, dst, num_segments=n_seg)
+    elif aggregator == "mean":
+        s = jax.ops.segment_sum(messages, dst, num_segments=n_seg)
+        c = jax.ops.segment_sum(jnp.ones_like(dst, messages.dtype), dst, num_segments=n_seg)
+        agg = s / jnp.maximum(c, 1.0)[:, None]
+    elif aggregator == "max":
+        agg = jax.ops.segment_max(messages, dst, num_segments=n_seg)
+        agg = jnp.where(jnp.isfinite(agg), agg, 0.0)
+    else:
+        raise ValueError(aggregator)
+    return agg[:n_nodes] if edge_mask is not None else agg
+
+
+def apply(params, cfg: GNNConfig, graph: dict) -> jax.Array:
+    """graph = {nodes (N, d_node_in), edges (E, d_edge_in),
+    senders (E,), receivers (E,), optional edge_mask (E,) bool}.
+    Returns per-node predictions (N, d_out).
+    """
+    n_nodes = graph["nodes"].shape[0]
+    x = _mlp(params["node_enc"], graph["nodes"].astype(cfg.dtype))
+    e = _mlp(params["edge_enc"], graph["edges"].astype(cfg.dtype))
+    snd = graph["senders"]
+    rcv = graph["receivers"]
+    mask = graph.get("edge_mask")
+    e = shard(e, "edges", None)
+
+    def proc(carry, lp):
+        x, e = carry
+        inp = jnp.concatenate([e, x[snd], x[rcv]], axis=-1)
+        e_new = e + _mlp(lp["edge_mlp"], shard(inp, "edges", None))
+        agg = _aggregate(e_new, rcv, n_nodes, cfg.aggregator, mask)
+        x_new = x + _mlp(lp["node_mlp"], jnp.concatenate([x, agg], axis=-1))
+        return (x_new, e_new), None
+
+    proc_fn = jax.checkpoint(proc) if cfg.remat else proc
+    (x, e), _ = jax.lax.scan(proc_fn, (x, e), params["procs"],
+                             unroll=cfg.n_layers if cfg.scan_unroll else 1)
+    return _mlp(params["decoder"], x)
+
+
+def apply_batched(params, cfg: GNNConfig, graphs: dict) -> jax.Array:
+    """Batched small graphs (molecule shape): leading batch dim on all arrays."""
+    return jax.vmap(lambda g: apply(params, cfg, g))(graphs)
+
+
+def loss_fn(params, cfg: GNNConfig, batch) -> tuple[jax.Array, dict]:
+    """Node-level regression (MeshGraphNet's next-step dynamics loss)."""
+    graph = batch["graph"]
+    target = batch["targets"]
+    if graph["nodes"].ndim == 3:  # batched molecules
+        pred = apply_batched(params, cfg, graph)
+    else:
+        pred = apply(params, cfg, graph)
+    err = (pred.astype(jnp.float32) - target.astype(jnp.float32)) ** 2
+    node_mask = batch.get("node_mask")
+    if node_mask is not None:
+        err = err * node_mask[..., None]
+        loss = err.sum() / jnp.maximum(node_mask.sum() * cfg.d_out, 1.0)
+    else:
+        loss = err.mean()
+    return loss, {"mse": loss}

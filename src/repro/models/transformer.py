@@ -1,0 +1,329 @@
+"""Transformer LM (dense + MoE, GQA + RoPE) with scan-over-layers.
+
+Covers all five assigned LM architectures through one config-driven
+implementation. Layer parameters are stacked on a leading L axis and the
+forward pass is a lax.scan (+ optional remat) — compile time and HLO size
+stay flat in depth (61-layer kimi compiles the same program as 2-layer
+smoke configs).
+
+Entry points:
+    init(key, cfg)                  -> params pytree
+    apply(params, cfg, tokens)      -> logits  (training forward, causal)
+    loss_fn(params, cfg, batch)     -> (loss, aux)
+    init_cache(cfg, batch, max_len) -> decode cache pytree
+    decode_step(params, cfg, cache, token) -> (logits, cache)  serve_step
+    param_specs(cfg)                -> PartitionSpec pytree (FSDP x TP)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+from repro.runtime.sharding import resolve, shard
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int  # dense FFN hidden; for MoE archs this is the per-expert dim
+    vocab: int
+    n_experts: int = 0  # 0 => dense FFN
+    expert_top_k: int = 0
+    qkv_bias: bool = False
+    rope_theta: float = 1e4
+    norm_eps: float = 1e-6
+    capacity_factor: float = 1.25
+    remat: bool = True
+    scan_unroll: bool = False  # fully unroll layer scan (dry-run cost probes)
+    dtype: Any = jnp.bfloat16
+    flash_threshold: int = 2048
+    q_block: int = 512
+    kv_block: int = 1024
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def vocab_padded(self) -> int:
+        """Vocab rounded to 128 (Megatron-style): keeps the vocab dim
+        shardable over a 16-way model axis and MXU-lane aligned. Pad logits
+        are masked to -inf; pad ids are never emitted (minicpm's odd
+        122753 -> 122880)."""
+        return ((self.vocab + 127) // 128) * 128
+
+    def params_count(self) -> int:
+        """Total parameter count (embedding + layers + head)."""
+        d, dh = self.d_model, self.d_head
+        attn = d * (self.n_heads * dh) * 2 + d * (self.n_kv_heads * dh) * 2
+        if self.is_moe:
+            ffn = self.n_experts * 3 * d * self.d_ff + d * self.n_experts
+        else:
+            ffn = 3 * d * self.d_ff
+        per_layer = attn + ffn + 2 * d
+        return self.vocab_padded * d * 2 + self.n_layers * per_layer + d
+
+    def active_params_count(self) -> int:
+        """Active parameters per token (MoE: only routed experts)."""
+        if not self.is_moe:
+            return self.params_count()
+        d, dh = self.d_model, self.d_head
+        attn = d * (self.n_heads * dh) * 2 + d * (self.n_kv_heads * dh) * 2
+        ffn = self.expert_top_k * 3 * d * self.d_ff + d * self.n_experts
+        per_layer = attn + ffn + 2 * d
+        return self.vocab_padded * d * 2 + self.n_layers * per_layer + d
+
+
+# ------------------------------------------------------------------- init
+def init(key: jax.Array, cfg: LMConfig):
+    k_embed, k_layers, k_head = jax.random.split(key, 3)
+
+    def init_layer(k):
+        ka, km = jax.random.split(k)
+        p = {
+            "ln1": L.init_rmsnorm(cfg.d_model, jnp.float32),
+            "ln2": L.init_rmsnorm(cfg.d_model, jnp.float32),
+            "attn": L.init_attention(
+                ka, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head,
+                cfg.qkv_bias, cfg.dtype,
+            ),
+        }
+        if cfg.is_moe:
+            p["moe"] = L.init_moe(km, cfg.d_model, cfg.n_experts, cfg.d_ff, cfg.dtype)
+        else:
+            p["mlp"] = L.init_mlp(km, cfg.d_model, cfg.d_ff, cfg.dtype)
+        return p
+
+    layer_params = jax.vmap(init_layer)(jax.random.split(k_layers, cfg.n_layers))
+    vp = cfg.vocab_padded
+    return {
+        "embed": (jax.random.normal(k_embed, (vp, cfg.d_model), jnp.float32)
+                  * 0.02).astype(cfg.dtype),
+        "layers": layer_params,
+        "final_norm": L.init_rmsnorm(cfg.d_model, jnp.float32),
+        "head": (jax.random.normal(k_head, (cfg.d_model, vp), jnp.float32)
+                 / math.sqrt(cfg.d_model)).astype(cfg.dtype),
+    }
+
+
+def param_specs(cfg: LMConfig, training: bool = True):
+    """PartitionSpec pytree: TP over `model`; FSDP over (pod, data) when
+    training. For SERVING (training=False) params replicate over the data
+    axes instead: decode would otherwise all-gather every FSDP shard on
+    every step — the dominant collective term of the baseline decode cells
+    (EXPERIMENTS.md section Perf, iteration B).
+
+    Stacked layer params have a leading L axis (never sharded). Matrices
+    shard the TP-parallel dim over `model` and the other dim over the fsdp
+    axes — ZeRO-3-style fully-sharded parameters.
+    """
+    fsdp = resolve(("fsdp",))[0] if training else None
+    tp = resolve(("heads",))[0]
+
+    def mat(d_in_ax, d_out_ax, stacked=True):
+        spec = (d_in_ax, d_out_ax)
+        return P(*((None,) + spec if stacked else spec))
+
+    attn = {
+        "wq": mat(fsdp, tp), "wk": mat(fsdp, tp), "wv": mat(fsdp, tp),
+        "wo": mat(tp, fsdp),
+    }
+    if cfg.qkv_bias:
+        attn.update({"bq": P(None, tp), "bk": P(None, tp), "bv": P(None, tp)})
+    layer = {
+        "ln1": {"scale": P(None, None)},
+        "ln2": {"scale": P(None, None)},
+        "attn": attn,
+    }
+    if cfg.is_moe:
+        layer["moe"] = {
+            "router": P(None, None, None),
+            "w_gate": P(None, tp, fsdp, None),
+            "w_up": P(None, tp, fsdp, None),
+            "w_down": P(None, tp, None, fsdp),
+        }
+    else:
+        layer["mlp"] = {
+            "w_gate": mat(fsdp, tp), "w_up": mat(fsdp, tp), "w_down": mat(tp, fsdp),
+        }
+    return {
+        "embed": P(tp, fsdp),
+        "layers": layer,
+        "final_norm": {"scale": P(None)},
+        "head": P(fsdp, tp),
+    }
+
+
+# ---------------------------------------------------------------- forward
+def _layer_forward(cfg: LMConfig, lp, x, positions):
+    h = L.attention(
+        L_params := lp["attn"], L.rmsnorm(lp["ln1"], x, cfg.norm_eps), positions,
+        n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, d_head=cfg.d_head,
+        rope_theta=cfg.rope_theta, causal=True,
+        flash_threshold=cfg.flash_threshold, q_block=cfg.q_block,
+        kv_block=cfg.kv_block,
+    )
+    x = x + h
+    y = L.rmsnorm(lp["ln2"], x, cfg.norm_eps)
+    if cfg.is_moe:
+        m, aux = L.moe(
+            lp["moe"], y, n_experts=cfg.n_experts, top_k=cfg.expert_top_k,
+            capacity_factor=cfg.capacity_factor,
+        )
+    else:
+        m, aux = L.mlp(lp["mlp"], y), jnp.float32(0)
+    return x + m, aux
+
+
+def apply(params, cfg: LMConfig, tokens: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """tokens (B, S) -> (logits (B, S, V) f32, moe aux loss)."""
+    b, s = tokens.shape
+    x = params["embed"][tokens]  # gather; sharded table => all-gather of rows
+    x = shard(x, "batch", "seq", "embed")
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    def body(carry, lp):
+        x, aux = carry
+        x, a = _layer_forward(cfg, lp, x, positions)
+        return (x, aux + a), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    (x, aux), _ = lax.scan(body_fn, (x, jnp.float32(0)), params["layers"],
+                           unroll=cfg.n_layers if cfg.scan_unroll else 1)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = (x @ params["head"]).astype(jnp.float32)
+    logits = _mask_pad_vocab(logits, cfg)
+    return shard(logits, "batch", "seq", "vocab"), aux
+
+
+def _mask_pad_vocab(logits: jax.Array, cfg: LMConfig) -> jax.Array:
+    if cfg.vocab_padded == cfg.vocab:
+        return logits
+    v_ids = lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    return jnp.where(v_ids < cfg.vocab, logits, -jnp.inf)
+
+
+def loss_fn(params, cfg: LMConfig, batch) -> tuple[jax.Array, dict]:
+    """Causal LM loss; batch = {"tokens": (B, S+1)} or {"tokens","labels"}."""
+    if "labels" in batch:
+        tokens, labels = batch["tokens"], batch["labels"]
+    else:
+        tokens, labels = batch["tokens"][:, :-1], batch["tokens"][:, 1:]
+    logits, aux = apply(params, cfg, tokens)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = (logz - gold).mean()
+    total = nll + 0.01 * aux
+    return total, {"nll": nll, "moe_aux": aux}
+
+
+def prefill(params, cfg: LMConfig, tokens: jax.Array, max_len: int | None = None):
+    """Serving prefill: (B, S) tokens -> (last-token logits (B, V), cache).
+
+    Never materializes (B, S, V) logits (640 GB for qwen2.5 at 32k x 32) —
+    only the last position projects through the head. The per-layer K/V come
+    back as scan ys and become the decode cache.
+    """
+    b, s = tokens.shape
+    x = params["embed"][tokens].astype(cfg.dtype)
+    x = shard(x, "batch", "seq", "embed")
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    def body(x, lp):
+        h, k, v = L.attention(
+            lp["attn"], L.rmsnorm(lp["ln1"], x, cfg.norm_eps), positions,
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, d_head=cfg.d_head,
+            rope_theta=cfg.rope_theta, causal=True,
+            flash_threshold=cfg.flash_threshold, q_block=cfg.q_block,
+            kv_block=cfg.kv_block, return_kv=True,
+        )
+        x = x + h
+        y = L.rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        if cfg.is_moe:
+            m, _ = L.moe(lp["moe"], y, n_experts=cfg.n_experts,
+                         top_k=cfg.expert_top_k, capacity_factor=cfg.capacity_factor)
+        else:
+            m = L.mlp(lp["mlp"], y)
+        return x + m, (k.astype(cfg.dtype), v.astype(cfg.dtype))
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, (ks, vs) = lax.scan(body_fn, x, params["layers"],
+                           unroll=cfg.n_layers if cfg.scan_unroll else 1)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = _mask_pad_vocab((x[:, -1, :] @ params["head"]).astype(jnp.float32), cfg)
+    if max_len is not None and max_len > s:
+        pad = ((0, 0), (0, 0), (0, max_len - s), (0, 0), (0, 0))
+        ks, vs = jnp.pad(ks, pad), jnp.pad(vs, pad)
+    cache = {"k": ks, "v": vs, "len": jnp.int32(s)}
+    return logits, cache
+
+
+# ----------------------------------------------------------------- decode
+def init_cache(cfg: LMConfig, batch: int, max_len: int, dtype=None):
+    dtype = dtype or cfg.dtype
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.d_head)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def cache_specs(cfg: LMConfig):
+    """KV cache sharding: batch over data, kv-heads over model; for batch=1
+    long-context the sequence dim shards over model instead (flash-merge
+    handled by XLA's SPMD partitioner on the masked softmax)."""
+    batch_ax = resolve(("batch",))[0]
+    tp = resolve(("kv_heads",))[0]
+    return {
+        "k": P(None, batch_ax, None, tp, None),
+        "v": P(None, batch_ax, None, tp, None),
+        "len": P(),
+    }
+
+
+def decode_step(params, cfg: LMConfig, cache, tokens: jax.Array):
+    """One decode step: tokens (B, 1) -> logits (B, V); cache advances by 1.
+
+    Scan over layers with the per-layer cache slice as carry-free xs/ys.
+    """
+    b = tokens.shape[0]
+    x = params["embed"][tokens].astype(cfg.dtype)
+    cache_len = cache["len"]
+
+    def body(x, xs):
+        lp, ck, cv = xs
+        h, nk, nv = L.decode_attention(
+            lp["attn"], L.rmsnorm(lp["ln1"], x, cfg.norm_eps), ck, cv, cache_len,
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, d_head=cfg.d_head,
+            rope_theta=cfg.rope_theta,
+        )
+        x = x + h
+        y = L.rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        if cfg.is_moe:
+            m, _ = L.moe(
+                lp["moe"], y, n_experts=cfg.n_experts, top_k=cfg.expert_top_k,
+                capacity_factor=max(cfg.capacity_factor, 8.0),  # tiny T decode
+            )
+        else:
+            m = L.mlp(lp["mlp"], y)
+        return x + m, (nk, nv)
+
+    x, (nk, nv) = lax.scan(body, x, (params["layers"], cache["k"], cache["v"]),
+                           unroll=cfg.n_layers if cfg.scan_unroll else 1)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = _mask_pad_vocab((x[:, 0, :] @ params["head"]).astype(jnp.float32), cfg)
+    new_cache = {"k": nk, "v": nv, "len": cache_len + 1}
+    return logits, new_cache

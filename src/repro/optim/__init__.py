@@ -1,0 +1,10 @@
+"""Optimizers, schedules, and distributed-training tricks."""
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update, apply_updates
+from repro.optim.schedules import constant, cosine_schedule, wsd_schedule
+from repro.optim.compression import compress_int8, decompress_int8, ErrorFeedback
+
+__all__ = [
+    "AdamWState", "adamw_init", "adamw_update", "apply_updates",
+    "cosine_schedule", "wsd_schedule", "constant",
+    "compress_int8", "decompress_int8", "ErrorFeedback",
+]

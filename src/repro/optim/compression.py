@@ -1,0 +1,60 @@
+"""Gradient compression for the DP all-reduce: int8 + error feedback.
+
+At 256-1024 chips the gradient all-reduce is the cross-pod bandwidth hog
+(the `pod` axis crosses DCN, not ICI). compress_int8 quantizes per-row to
+int8 before the reduce (4x wire bytes), and ErrorFeedback accumulates the
+quantization residual locally so the bias vanishes over steps (EF-SGD,
+arXiv:1901.09847). Used by launch/train.py when --compress-grads is set.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Compressed(NamedTuple):
+    q: jax.Array  # int8
+    scale: jax.Array  # f32 per leading row
+
+
+def compress_int8(x: jax.Array) -> Compressed:
+    if x.ndim == 0:
+        s = jnp.maximum(jnp.abs(x) / 127.0, 1e-12)
+        return Compressed(jnp.round(x / s).astype(jnp.int8), s)
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    s = jnp.maximum(amax / 127.0, 1e-12)
+    return Compressed(jnp.clip(jnp.round(x / s), -127, 127).astype(jnp.int8), s)
+
+
+def decompress_int8(c: Compressed) -> jax.Array:
+    return c.q.astype(jnp.float32) * c.scale
+
+
+class ErrorFeedback(NamedTuple):
+    residual: Any  # pytree of f32, mirrors grads
+
+    @staticmethod
+    def init(grads) -> "ErrorFeedback":
+        return ErrorFeedback(jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), grads))
+
+
+def compress_with_feedback(grads, ef: ErrorFeedback):
+    """Returns (compressed pytree, new_ef). Decompress-side is lossless."""
+
+    def one(g, r):
+        corrected = g.astype(jnp.float32) + r
+        c = compress_int8(corrected)
+        return c, corrected - decompress_int8(c)
+
+    out = jax.tree.map(one, grads, ef.residual)
+    comp = jax.tree.map(lambda g, o: o[0], grads, out)
+    resid = jax.tree.map(lambda g, o: o[1], grads, out)
+    return comp, ErrorFeedback(resid)
+
+
+def decompress_tree(comp, template):
+    return jax.tree.map(
+        lambda t, c: decompress_int8(c).astype(t.dtype), template, comp
+    )

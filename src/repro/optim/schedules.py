@@ -1,0 +1,39 @@
+"""LR schedules: constant, cosine, and WSD (Warmup-Stable-Decay, MiniCPM
+arXiv:2404.06395 — the schedule of the assigned minicpm-2b arch)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    def f(step):
+        return jnp.float32(lr)
+    return f
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int, floor: float = 0.0):
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = peak_lr * s / max(warmup, 1)
+        t = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (peak_lr - floor) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(s < warmup, warm, cos)
+    return f
+
+
+def wsd_schedule(peak_lr: float, warmup: int, stable: int, decay: int,
+                 floor_frac: float = 0.1):
+    """Warmup -> Stable plateau -> exponential-ish Decay (MiniCPM section 4).
+
+    The decay phase multiplies down to floor_frac * peak over `decay` steps.
+    """
+    floor = peak_lr * floor_frac
+
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = peak_lr * s / max(warmup, 1)
+        t = jnp.clip((s - warmup - stable) / max(decay, 1), 0.0, 1.0)
+        dec = peak_lr * (floor / peak_lr) ** t
+        out = jnp.where(s < warmup, warm, jnp.where(s < warmup + stable, peak_lr, dec))
+        return jnp.maximum(out, 0.0)
+    return f

@@ -1,0 +1,29 @@
+"""Hardware constants for the roofline model (TPU v5e target)."""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class HwSpec:
+    name: str
+    peak_flops_bf16: float  # per chip, FLOP/s
+    hbm_bw: float  # per chip, B/s
+    link_bw: float  # per ICI link, B/s
+    hbm_bytes: int  # per chip capacity
+    tdp_watts: float  # for the energy model in benchmarks
+
+
+TPU_V5E = HwSpec(
+    name="tpu-v5e",
+    peak_flops_bf16=197e12,
+    hbm_bw=819e9,
+    link_bw=50e9,
+    hbm_bytes=16 * 2**30,
+    tdp_watts=170.0,  # board power estimate used by the energy proxy
+)
+
+# Reference devices from the paper's evaluation (energy model, Table 2/3)
+ALVEO_U55C_WATTS = 150.0
+XEON_E5_2683V4_WATTS = 120.0
+A100_40G_WATTS = 400.0

@@ -1,0 +1,5 @@
+"""Online serving: kNN retrieval service (FD-SQ) and LM decode server."""
+from repro.serving.retrieval import RetrievalServer, Request, Result
+from repro.serving.lm import DecodeServer
+
+__all__ = ["RetrievalServer", "Request", "Result", "DecodeServer"]

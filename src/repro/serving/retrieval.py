@@ -1,0 +1,88 @@
+"""Online kNN retrieval service — the paper's FD-SQ deployment shape.
+
+Requests arrive as a stream (paper fig. 2 arrow 3); the server answers them
+through the engine's latency path, optionally micro-batching requests that
+arrive within `batch_window_s` (the paper's RQ3 trade-off: larger windows
+raise throughput, the FD-SQ fan-out keeps per-query latency flat).
+
+In-process simulation of the deployment: a real cluster fronts this with an
+RPC layer, but admission, micro-batching, deadline accounting, and the
+engine calls are exactly these.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Iterable, Iterator
+
+import numpy as np
+
+from repro.core.engine import ExactKNN
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    vector: np.ndarray
+    arrival_s: float = 0.0
+    deadline_ms: float | None = None
+
+
+@dataclasses.dataclass
+class Result:
+    rid: int
+    indices: np.ndarray
+    scores: np.ndarray
+    latency_ms: float
+    batched: int  # how many requests shared the execution
+
+
+class RetrievalServer:
+    def __init__(
+        self,
+        engine: ExactKNN,
+        batch_window_s: float = 0.0,
+        max_batch: int = 16,
+    ):
+        if engine._ds is None:
+            raise ValueError("engine must be fit() before serving")
+        self.engine = engine
+        self.batch_window_s = batch_window_s
+        self.max_batch = max_batch
+        self.served = 0
+        self.deadline_misses = 0
+
+    def _execute(self, reqs: list[Request]) -> list[Result]:
+        t0 = time.perf_counter()
+        q = np.stack([r.vector for r in reqs])
+        out = self.engine.query(q)  # FD-SQ latency path
+        scores = np.asarray(out.scores)
+        indices = np.asarray(out.indices)
+        dt_ms = (time.perf_counter() - t0) * 1e3
+        results = []
+        for i, r in enumerate(reqs):
+            if r.deadline_ms is not None and dt_ms > r.deadline_ms:
+                self.deadline_misses += 1
+            results.append(Result(r.rid, indices[i], scores[i], dt_ms, len(reqs)))
+        self.served += len(reqs)
+        return results
+
+    def serve(self, requests: Iterable[Request]) -> Iterator[Result]:
+        """Consume an arrival stream; flush on window expiry or max_batch."""
+        pending: list[Request] = []
+        window_open = None
+        for r in requests:
+            pending.append(r)
+            window_open = window_open or time.perf_counter()
+            window_expired = (
+                self.batch_window_s == 0.0
+                or (time.perf_counter() - window_open) >= self.batch_window_s
+            )
+            if len(pending) >= self.max_batch or window_expired:
+                yield from self._execute(pending)
+                pending, window_open = [], None
+        if pending:
+            yield from self._execute(pending)
+
+    def stats(self) -> dict:
+        return {"served": self.served, "deadline_misses": self.deadline_misses}

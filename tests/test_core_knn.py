@@ -1,0 +1,139 @@
+"""Core engine exactness: FQ-SD / FD-SQ vs brute-force oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    ExactKNN,
+    fdsq_search,
+    fqsd_scan,
+    knn_oracle,
+    make_padded,
+    pairwise_scores,
+)
+
+
+def brute(q, x, k, metric="l2"):
+    s = pairwise_scores(jnp.asarray(q), jnp.asarray(x), metric)
+    return knn_oracle(s, k)
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("metric", ["l2", "ip", "cos"])
+@pytest.mark.parametrize("m,n,d,k", [(7, 500, 33, 5), (32, 2048, 96, 17), (1, 999, 769, 10)])
+def test_fqsd_scan_matches_oracle(rng, metric, m, n, d, k):
+    q = rng.standard_normal((m, d)).astype(np.float32)
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    ref_s, ref_i = brute(q, x, k, metric)
+
+    ds = make_padded(x, row_mult=256)
+    got = fqsd_scan(
+        jnp.pad(jnp.asarray(q), ((0, 0), (0, ds.vectors.shape[1] - d))),
+        ds.vectors, ds.norms, k, metric, chunk_rows=256,
+    )
+    np.testing.assert_allclose(got.scores, ref_s, rtol=1e-5, atol=1e-4)
+    assert (got.indices >= 0).all()
+    _assert_same_sets(got.scores, got.indices, ref_s, ref_i)
+
+
+@pytest.mark.parametrize("metric", ["l2", "ip"])
+@pytest.mark.parametrize("n_partitions", [1, 4, 8])
+def test_fdsq_matches_oracle(rng, metric, n_partitions):
+    m, n, d, k = 3, 4096, 64, 25
+    q = rng.standard_normal((m, d)).astype(np.float32)
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    ref_s, ref_i = brute(q, x, k, metric)
+    ds = make_padded(x)
+    got = fdsq_search(
+        jnp.pad(jnp.asarray(q), ((0, 0), (0, ds.vectors.shape[1] - d))),
+        ds.vectors, ds.norms, k, metric, n_partitions,
+    )
+    np.testing.assert_allclose(got.scores, ref_s, rtol=1e-5, atol=1e-4)
+    _assert_same_sets(got.scores, got.indices, ref_s, ref_i)
+
+
+def _assert_same_sets(got_s, got_i, ref_s, ref_i):
+    """Indices must agree except within exact-score ties."""
+    got_i, ref_i = np.asarray(got_i), np.asarray(ref_i)
+    got_s, ref_s = np.asarray(got_s), np.asarray(ref_s)
+    for r in range(got_i.shape[0]):
+        g, rr = set(got_i[r].tolist()), set(ref_i[r].tolist())
+        if g != rr:
+            # any disagreement must be a tie at the k-th score
+            np.testing.assert_allclose(got_s[r], ref_s[r], rtol=1e-6, atol=1e-6)
+
+
+class TestEngine:
+    def test_fit_query_roundtrip(self, rng):
+        x = rng.standard_normal((1000, 40)).astype(np.float32)
+        eng = ExactKNN(k=8).fit(x)
+        # query = an exact dataset row -> its own index first with distance 0
+        res = eng.query(x[123])
+        assert int(res.indices[0, 0]) == 123
+        assert float(res.scores[0, 0]) < 1e-3
+
+    def test_query_batch_matches_query(self, rng):
+        x = rng.standard_normal((777, 64)).astype(np.float32)
+        q = rng.standard_normal((9, 64)).astype(np.float32)
+        eng = ExactKNN(k=5, chunk_rows=256).fit(x)
+        b = eng.query_batch(q)
+        for i in range(9):
+            s = eng.query(q[i])
+            np.testing.assert_allclose(b.scores[i], s.scores[0], rtol=1e-6)
+            np.testing.assert_array_equal(b.indices[i], s.indices[0])
+
+    def test_streamed_equals_resident(self, rng):
+        x = rng.standard_normal((3000, 100)).astype(np.float32)
+        q = rng.standard_normal((16, 100)).astype(np.float32)
+        eng = ExactKNN(k=11).fit(x)
+        resident = eng.query_batch(q)
+        streamed = eng.search_streamed(q, x, rows_per_partition=512)
+        np.testing.assert_allclose(streamed.scores, resident.scores, rtol=1e-5, atol=1e-4)
+        _assert_same_sets(streamed.scores, streamed.indices, resident.scores, resident.indices)
+
+    def test_k_larger_than_n(self, rng):
+        x = rng.standard_normal((50, 16)).astype(np.float32)
+        eng = ExactKNN(k=64, n_partitions=1).fit(x)
+        res = eng.query(x[0])
+        valid = np.asarray(res.indices[0]) >= 0
+        assert valid.sum() == 50  # only real rows returned
+        assert np.isinf(np.asarray(res.scores[0])[~valid]).all()
+
+    def test_metric_ip_prefers_largest_dot(self, rng):
+        x = rng.standard_normal((500, 32)).astype(np.float32)
+        q = rng.standard_normal((1, 32)).astype(np.float32)
+        eng = ExactKNN(k=3, metric="ip").fit(x)
+        res = eng.query(q)
+        dots = x @ q[0]
+        np.testing.assert_array_equal(
+            np.sort(np.asarray(res.indices[0])), np.sort(np.argsort(-dots)[:3])
+        )
+
+    def test_plan_log(self, rng):
+        x = rng.standard_normal((256, 8)).astype(np.float32)
+        eng = ExactKNN(k=2, n_partitions=2).fit(x)
+        eng.query(x[0]); eng.query_batch(x[:4])
+        modes = [p.mode for p in eng.plans]
+        assert modes == ["fdsq", "fqsd"]
+
+    def test_errors(self, rng):
+        eng = ExactKNN(k=4)
+        with pytest.raises(RuntimeError):
+            eng.query(np.zeros(8, np.float32))
+        with pytest.raises(ValueError):
+            ExactKNN(k=0)
+        with pytest.raises(ValueError):
+            ExactKNN(k=1, metric="hamming")
+
+
+def test_query_stream_order(rng):
+    x = rng.standard_normal((512, 24)).astype(np.float32)
+    qs = [x[i] for i in (5, 100, 200)]
+    eng = ExactKNN(k=1, n_partitions=4).fit(x)
+    out = list(eng.query_stream(qs))
+    assert [int(o.indices[0]) for o in out] == [5, 100, 200]

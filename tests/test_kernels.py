@@ -1,0 +1,164 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode).
+
+Per-kernel: sweep shapes (incl. non-aligned), dtypes (f32, bf16), and ks;
+assert allclose against the ref.py oracle. Bitonic primitives get their own
+hypothesis sweep since both the topk and knn kernels build on them.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.bitonic import bitonic_sort, topk_update
+from repro.kernels.knn.ops import knn
+from repro.kernels.knn.ref import knn_ref
+from repro.kernels.l2dist.ops import l2dist
+from repro.kernels.l2dist.ref import l2dist_ref
+from repro.kernels.topk.ops import topk
+from repro.kernels.topk.ref import topk_ref
+
+RNG = np.random.default_rng(1234)
+
+
+# --------------------------------------------------------------- bitonic
+@given(
+    rows=st.integers(1, 4),
+    log_n=st.integers(0, 9),
+    ties=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=40, deadline=None)
+def test_bitonic_sort_property(rows, log_n, ties, seed):
+    n = 1 << log_n
+    rng = np.random.default_rng(seed)
+    v = rng.standard_normal((rows, n)).astype(np.float32)
+    if ties:
+        v = np.round(v)
+    i = np.broadcast_to(np.arange(n, dtype=np.int32), (rows, n)).copy()
+    sv, si = bitonic_sort(jnp.asarray(v), jnp.asarray(i))
+    sv, si = np.asarray(sv), np.asarray(si)
+    np.testing.assert_array_equal(sv, np.sort(v, axis=1))
+    # the permutation is genuine and tie-stable (indices ascend within ties)
+    np.testing.assert_array_equal(np.take_along_axis(v, si, 1), sv)
+    for r in range(rows):
+        same = sv[r][:-1] == sv[r][1:]
+        assert (si[r][:-1][same] < si[r][1:][same]).all()
+
+
+@given(log_k=st.integers(0, 8), seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_topk_update_property(log_k, seed):
+    k = 1 << log_k
+    rng = np.random.default_rng(seed)
+    b = np.sort(rng.standard_normal((3, k)).astype(np.float32), axis=1)
+    c = np.sort(rng.standard_normal((3, k)).astype(np.float32), axis=1)
+    bi = np.arange(k, dtype=np.int32)[None].repeat(3, 0)
+    ci = (np.arange(k, dtype=np.int32) + k)[None].repeat(3, 0)
+    nv, _ = topk_update(jnp.asarray(b), jnp.asarray(bi), jnp.asarray(c), jnp.asarray(ci))
+    ref = np.sort(np.concatenate([b, c], axis=1), axis=1)[:, :k]
+    np.testing.assert_array_equal(np.asarray(nv), ref)
+
+
+# --------------------------------------------------------------- l2dist
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "m,n,d", [(1, 1, 1), (3, 7, 5), (8, 128, 64), (130, 1000, 769),
+              (256, 512, 960), (16, 300, 4096)]
+)
+def test_l2dist_sweep(m, n, d, dtype):
+    q = jnp.asarray(RNG.standard_normal((m, d)), dtype=dtype)
+    x = jnp.asarray(RNG.standard_normal((n, d)), dtype=dtype)
+    got = l2dist(q, x)
+    ref = l2dist_ref(q, x)
+    tol = 1e-4 if dtype == jnp.float32 else 0.15
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=tol, atol=tol * d)
+
+
+def test_l2dist_block_shapes():
+    q = jnp.asarray(RNG.standard_normal((64, 256)), dtype=jnp.float32)
+    x = jnp.asarray(RNG.standard_normal((512, 256)), dtype=jnp.float32)
+    ref = l2dist_ref(q, x)
+    for bm, bn, bd in [(32, 128, 128), (64, 256, 256), (8, 512, 128)]:
+        got = l2dist(q, x, block_m=bm, block_n=bn, block_d=bd)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=1e-5, atol=1e-3)
+
+
+# ----------------------------------------------------------------- topk
+@pytest.mark.parametrize(
+    "m,n,k", [(1, 1, 1), (4, 2048, 10), (1, 5000, 64), (7, 300, 128),
+              (2, 100, 7), (3, 50, 100)]  # k > n padding case
+)
+def test_topk_sweep(m, n, k):
+    s = jnp.asarray(RNG.standard_normal((m, n)), dtype=jnp.float32)
+    gv, gi = topk(s, k)
+    rv, ri = topk_ref(s, k)
+    np.testing.assert_array_equal(np.asarray(gv), np.asarray(rv))
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(ri))
+
+
+def test_topk_with_ties():
+    s = jnp.asarray(np.round(RNG.standard_normal((5, 777)) * 2), dtype=jnp.float32)
+    gv, gi = topk(s, 33)
+    rv, ri = topk_ref(s, 33)
+    np.testing.assert_array_equal(np.asarray(gv), np.asarray(rv))
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(ri))  # tie order identical
+
+
+# ------------------------------------------------------------ fused knn
+@pytest.mark.parametrize("metric", ["l2", "ip"])
+@pytest.mark.parametrize(
+    "m,n,d,k", [(1, 128, 8, 1), (4, 2048, 64, 10), (1, 1500, 769, 64),
+                (9, 700, 100, 17), (2, 4096, 960, 128), (3, 33, 5, 50)]
+)
+def test_knn_fused_sweep(m, n, d, k, metric):
+    q = jnp.asarray(RNG.standard_normal((m, d)), dtype=jnp.float32)
+    x = jnp.asarray(RNG.standard_normal((n, d)), dtype=jnp.float32)
+    got = knn(q, x, k, metric)
+    rv, ri = knn_ref(q, x, k, metric)
+    np.testing.assert_allclose(np.asarray(got.scores), np.asarray(rv), rtol=1e-5, atol=1e-4)
+    kk = min(k, n)
+    agree = (np.asarray(got.indices)[:, :kk] == np.asarray(ri)[:, :kk]).mean()
+    assert agree > 0.99, agree
+    if k > n:  # padded tail must be inf/-1
+        assert np.isinf(np.asarray(got.scores)[:, n:]).all()
+        assert (np.asarray(got.indices)[:, n:] == -1).all()
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_knn_fused_dtypes(dtype):
+    q = jnp.asarray(RNG.standard_normal((4, 256)), dtype=dtype)
+    x = jnp.asarray(RNG.standard_normal((1024, 256)), dtype=dtype)
+    got = knn(q, x, 8, "l2")
+    rv, _ = knn_ref(q, x, 8, "l2")
+    tol = 1e-4 if dtype == jnp.float32 else 0.3
+    np.testing.assert_allclose(np.asarray(got.scores), np.asarray(rv), rtol=tol, atol=tol * 32)
+
+
+def test_knn_fused_matches_engine_oracle():
+    """Kernel path must agree with the XLA engine path on identical input."""
+    from repro.core import ExactKNN
+
+    x = RNG.standard_normal((3000, 96)).astype(np.float32)
+    q = RNG.standard_normal((5, 96)).astype(np.float32)
+    xla = ExactKNN(k=20, backend="xla").fit(x).query_batch(q)
+    pal = ExactKNN(k=20, backend="pallas").fit(x).query_batch(q)
+    np.testing.assert_allclose(
+        np.asarray(pal.scores), np.asarray(xla.scores), rtol=1e-5, atol=1e-4
+    )
+    agree = (np.asarray(pal.indices) == np.asarray(xla.indices)).mean()
+    assert agree > 0.99
+
+
+def test_knn_precomputed_norms_with_padding():
+    """Engine passes +inf-norm padded datasets straight into the kernel."""
+    from repro.core import make_padded
+
+    x = RNG.standard_normal((1000, 64)).astype(np.float32)
+    ds = make_padded(x)  # pads rows to 1024 with inf norms, dims to 128
+    q0 = RNG.standard_normal((2, 64)).astype(np.float32)
+    q = jnp.pad(jnp.asarray(q0), ((0, 0), (0, ds.vectors.shape[1] - 64)))
+    got = knn(q, ds.vectors, 5, "l2", x_norms=ds.norms)
+    rv, ri = knn_ref(jnp.asarray(q0), jnp.asarray(x), 5, "l2")
+    np.testing.assert_allclose(np.asarray(got.scores), np.asarray(rv), rtol=1e-5, atol=1e-4)
+    assert (np.asarray(got.indices) < 1000).all()  # no padded row leaked

@@ -1,0 +1,55 @@
+"""Int8 quantized scan + exact rescore (paper Future Work, made exact)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import knn_oracle, knn_quantized, pairwise_scores, quantize_dataset
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(42)
+    x = rng.standard_normal((4096, 128)).astype(np.float32)
+    q = rng.standard_normal((16, 128)).astype(np.float32)
+    return q, x
+
+
+def test_quantization_roundtrip_error_bound(data):
+    _, x = data
+    ds = quantize_dataset(jnp.asarray(x))
+    xhat = np.asarray(ds.q, np.float32) * np.asarray(ds.scales)[:, None]
+    err = np.linalg.norm(x - xhat, axis=1)
+    # certified bound must dominate the true error
+    assert (err <= np.asarray(ds.err) + 1e-5).all()
+    # and int8 should be reasonably tight for gaussian data
+    assert err.mean() < 0.05 * np.linalg.norm(x, axis=1).mean()
+
+
+@pytest.mark.parametrize("k,factor", [(10, 4), (32, 4), (4, 8)])
+def test_quantized_knn_exact_with_certificate(data, k, factor):
+    q, x = data
+    ds = quantize_dataset(jnp.asarray(x))
+    res, cert = knn_quantized(jnp.asarray(q), ds, jnp.asarray(x), k, factor)
+    ref_s, ref_i = knn_oracle(pairwise_scores(jnp.asarray(q), jnp.asarray(x)), k)
+    cert = np.asarray(cert)
+    # for gaussian data a 4x budget certifies everything
+    assert cert.mean() > 0.9, f"certificate rate {cert.mean()}"
+    got_s, got_i = np.asarray(res.scores), np.asarray(res.indices)
+    for i in range(q.shape[0]):
+        if cert[i]:
+            np.testing.assert_allclose(got_s[i], np.asarray(ref_s)[i], rtol=1e-4, atol=1e-4)
+            assert set(got_i[i].tolist()) == set(np.asarray(ref_i)[i].tolist())
+
+
+def test_quantized_recall_without_certificate(data):
+    """Even uncertified rows should have near-perfect recall on real data."""
+    q, x = data
+    k = 16
+    ds = quantize_dataset(jnp.asarray(x))
+    res, _ = knn_quantized(jnp.asarray(q), ds, jnp.asarray(x), k, 4)
+    _, ref_i = knn_oracle(pairwise_scores(jnp.asarray(q), jnp.asarray(x)), k)
+    recall = np.mean([
+        len(set(np.asarray(res.indices)[i]) & set(np.asarray(ref_i)[i])) / k
+        for i in range(q.shape[0])
+    ])
+    assert recall == 1.0

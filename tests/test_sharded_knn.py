@@ -1,0 +1,22 @@
+"""Multi-device kNN exactness — runs tests/sharded_check.py in a subprocess
+with 8 fake CPU devices (XLA device count is locked at first jax init, so the
+main pytest process must stay single-device)."""
+import os
+import pathlib
+import subprocess
+import sys
+
+HERE = pathlib.Path(__file__).parent
+ROOT = HERE.parent
+
+
+def test_sharded_knn_subprocess():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = str(ROOT / "src") + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, str(HERE / "sharded_check.py")],
+        capture_output=True, text=True, timeout=600, env=env,
+    )
+    assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+    assert "ALL_OK" in proc.stdout

@@ -1,0 +1,242 @@
+"""Substrate tests: optimizer, checkpoint, fault tolerance, data, serving."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, load_checkpoint, save_checkpoint
+from repro.data import DataPipeline, click_log_stream, token_stream, vector_dataset
+from repro.optim import adamw_init, adamw_update, apply_updates
+from repro.optim.adamw import AdamWConfig
+from repro.optim.compression import (
+    ErrorFeedback, compress_int8, compress_with_feedback, decompress_int8,
+    decompress_tree,
+)
+from repro.runtime.fault import (
+    FailureInjector, StragglerDetector, supervised_train,
+)
+
+
+# ------------------------------------------------------------- optimizer
+class TestAdamW:
+    @pytest.mark.parametrize("md", ["f32", "bf16", "int8"])
+    def test_converges_quadratic(self, md):
+        cfg = AdamWConfig(lr=0.05, weight_decay=0.0, moment_dtype=md)
+        p = {"w": jnp.asarray(np.random.default_rng(0).standard_normal((8, 16)), jnp.float32)}
+        st = adamw_init(p, cfg)
+        for _ in range(200):
+            g = jax.tree.map(lambda x: x, p)  # grad of ||p||^2/2
+            u, st = adamw_update(g, st, p, cfg)
+            p = apply_updates(p, u)
+        assert float(jnp.abs(p["w"]).mean()) < 0.05
+
+    def test_int8_moments_track_f32(self):
+        rng = np.random.default_rng(1)
+        p = {"w": jnp.asarray(rng.standard_normal((32, 64)), jnp.float32)}
+        cfg8 = AdamWConfig(lr=0.01, moment_dtype="int8", grad_clip=None)
+        cfg32 = AdamWConfig(lr=0.01, moment_dtype="f32", grad_clip=None)
+        s8, s32 = adamw_init(p, cfg8), adamw_init(p, cfg32)
+        p8 = p32 = p
+        for i in range(20):
+            g = {"w": jnp.asarray(rng.standard_normal((32, 64)), jnp.float32)}
+            u8, s8 = adamw_update(g, s8, p8, cfg8)
+            u32, s32 = adamw_update(g, s32, p32, cfg32)
+            p8, p32 = apply_updates(p8, u8), apply_updates(p32, u32)
+        rel = float(jnp.abs(p8["w"] - p32["w"]).mean() / jnp.abs(p32["w"]).mean())
+        assert rel < 0.05, rel
+
+    def test_grad_clip(self):
+        cfg = AdamWConfig(lr=1.0, grad_clip=1.0)
+        p = {"w": jnp.zeros((4,))}
+        st = adamw_init(p, cfg)
+        huge = {"w": jnp.full((4,), 1e6)}
+        u, _ = adamw_update(huge, st, p, cfg)
+        assert float(jnp.abs(u["w"]).max()) < 10.0  # clipped, not 1e6-scaled
+
+
+# ------------------------------------------------------------ compression
+class TestCompression:
+    def test_roundtrip_error_bounded(self):
+        x = jnp.asarray(np.random.default_rng(0).standard_normal((16, 256)), jnp.float32)
+        c = compress_int8(x)
+        err = jnp.abs(decompress_int8(c) - x)
+        assert float(err.max()) <= float(jnp.max(jnp.abs(x), 1).max()) / 127 + 1e-6
+
+    def test_error_feedback_removes_bias(self):
+        """Sum of decompressed grads with EF converges to the true sum."""
+        rng = np.random.default_rng(2)
+        g_true = jnp.asarray(rng.standard_normal((8, 128)) * 0.01, jnp.float32)
+        grads = {"w": g_true}
+        ef = ErrorFeedback.init(grads)
+        acc = jnp.zeros_like(g_true)
+        n = 50
+        for _ in range(n):
+            comp, ef = compress_with_feedback(grads, ef)
+            acc = acc + decompress_tree(comp, grads)["w"]
+        rel = float(jnp.abs(acc - n * g_true).mean() / jnp.abs(n * g_true).mean())
+        assert rel < 0.02, rel
+
+
+# ------------------------------------------------------------- checkpoint
+class TestCheckpoint:
+    def _tree(self, seed=0):
+        r = np.random.default_rng(seed)
+        return {
+            "w": jnp.asarray(r.standard_normal((16, 8)), jnp.float32),
+            "nested": {"b": jnp.asarray(r.standard_normal(4), jnp.bfloat16)},
+            "step": jnp.int32(7),
+        }
+
+    def test_roundtrip_bitwise(self, tmp_path):
+        t = self._tree()
+        save_checkpoint(tmp_path, 10, t)
+        got, mani = load_checkpoint(tmp_path, t)
+        assert mani["step"] == 10
+        for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(got)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_async_and_rotation(self, tmp_path):
+        mgr = CheckpointManager(tmp_path, interval=2, keep=2, async_save=True)
+        t = self._tree()
+        for step in range(1, 9):
+            mgr.save(step, t)
+        mgr.finalize()
+        steps = sorted(p.name for p in tmp_path.glob("step_*"))
+        assert len(steps) == 2 and steps[-1] == "step_00000008"
+
+    def test_atomicity_garbage_ignored(self, tmp_path):
+        t = self._tree()
+        save_checkpoint(tmp_path, 5, t)
+        # a crashed partial write leaves a temp dir — must be invisible
+        (tmp_path / ".tmp_ckpt_dead").mkdir()
+        (tmp_path / "step_00000009").mkdir()  # no manifest -> incomplete
+        got, mani = load_checkpoint(tmp_path, t)
+        assert mani["step"] == 5
+
+    def test_template_mismatch_rejected(self, tmp_path):
+        save_checkpoint(tmp_path, 1, self._tree())
+        bad = {"w": jnp.zeros((3, 3))}
+        with pytest.raises(ValueError):
+            load_checkpoint(tmp_path, bad)
+
+
+# --------------------------------------------------------- fault tolerance
+class TestFaultTolerance:
+    def _setup(self, tmp_path):
+        cfg = AdamWConfig(lr=0.1)
+
+        @jax.jit
+        def step_fn(state, batch):
+            p, opt = state
+            grads = jax.tree.map(lambda w: w - batch, p)  # pull towards batch
+            u, opt = adamw_update(grads, opt, p, cfg)
+            p = apply_updates(p, u)
+            loss = float_loss = jnp.mean((p["w"] - batch) ** 2)
+            return (p, opt), {"loss": loss}
+
+        p0 = {"w": jnp.zeros((4,))}
+        state0 = (p0, adamw_init(p0, cfg))
+        batches = lambda step: jnp.float32(1.0)
+        return step_fn, state0, batches
+
+    def test_recovery_is_deterministic(self, tmp_path):
+        step_fn, state0, batches = self._setup(tmp_path)
+        clean, rep1 = supervised_train(
+            step_fn, state0, batches, 12,
+            CheckpointManager(tmp_path / "a", interval=3, async_save=False),
+        )
+        assert rep1.restarts == 0
+        crashy, rep2 = supervised_train(
+            step_fn, state0, batches, 12,
+            CheckpointManager(tmp_path / "b", interval=3, async_save=False),
+            injector=FailureInjector(fail_at=(5, 10)),
+        )
+        assert rep2.restarts == 2
+        np.testing.assert_array_equal(
+            np.asarray(clean[0]["w"]), np.asarray(crashy[0]["w"]))
+
+    def test_restart_budget_exhausted(self, tmp_path):
+        step_fn, state0, batches = self._setup(tmp_path)
+
+        def always_fail(state, batch):
+            raise RuntimeError("dead host")
+
+        with pytest.raises(RuntimeError):
+            supervised_train(
+                always_fail, state0, batches, 4,
+                CheckpointManager(tmp_path / "c", interval=1, async_save=False),
+                max_restarts=2,
+            )
+
+    def test_straggler_detection(self):
+        det = StragglerDetector(warmup=2, straggler_factor=2.0)
+        for step, t in enumerate([1.0, 1.0, 1.0, 1.05, 5.0, 1.0]):
+            det.observe(step, t)
+        assert len(det.flagged) == 1 and det.flagged[0]["step"] == 4
+        # EWMA not polluted by the outlier
+        assert det.mean < 1.2
+
+
+# ------------------------------------------------------------------- data
+class TestData:
+    def test_token_stream_deterministic(self):
+        a = next(token_stream(100, 4, 8, seed=3))
+        b = next(token_stream(100, 4, 8, seed=3))
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+        assert a["tokens"].max() < 100
+
+    def test_click_log_ranges(self):
+        batch = next(click_log_stream((10, 20, 30), 5, 64, seed=0))
+        assert batch["sparse"].shape == (64, 3)
+        for i, size in enumerate((10, 20, 30)):
+            assert batch["sparse"][:, i].max() < size
+        assert set(np.unique(batch["label"])) <= {0.0, 1.0}
+
+    def test_pipeline_prefetch_order(self):
+        src = ({"x": np.full((2,), i, np.float32)} for i in range(5))
+        out = [int(b["x"][0]) for b in DataPipeline(src, depth=3)]
+        assert out == [0, 1, 2, 3, 4]
+
+    def test_vector_dataset_cluster_structure(self):
+        x = vector_dataset(1000, 16, n_clusters=4, seed=0)
+        # nearest neighbor of a point should usually share its cluster:
+        # verified implicitly by benchmarks; here check determinism + shape
+        y = vector_dataset(1000, 16, n_clusters=4, seed=0)
+        np.testing.assert_array_equal(x, y)
+
+
+# ---------------------------------------------------------------- serving
+class TestServing:
+    def test_retrieval_server_exactness_and_batching(self):
+        from repro.core import ExactKNN
+        from repro.serving import Request, RetrievalServer
+
+        rng = np.random.default_rng(0)
+        x = rng.standard_normal((2000, 32)).astype(np.float32)
+        eng = ExactKNN(k=5, n_partitions=4).fit(x)
+        srv = RetrievalServer(eng, batch_window_s=1.0, max_batch=4)
+        reqs = [Request(i, x[i * 10]) for i in range(8)]
+        results = list(srv.serve(iter(reqs)))
+        assert len(results) == 8
+        for r in results:
+            assert r.indices[0] == r.rid * 10  # self is the 1-NN
+            assert r.batched == 4
+        assert srv.stats()["served"] == 8
+
+    def test_decode_server_continuous_batching(self):
+        from repro.models import transformer as T
+        from repro.serving import DecodeServer
+
+        cfg = T.LMConfig(name="s", n_layers=2, d_model=32, n_heads=2,
+                         n_kv_heads=2, d_head=16, d_ff=64, vocab=64,
+                         dtype=jnp.float32, remat=False)
+        params = T.init(jax.random.key(0), cfg)
+        srv = DecodeServer(params, cfg, n_slots=2, max_len=64)
+        for rid in range(5):
+            srv.submit(rid, prompt_token=rid + 1, n_tokens=3)
+        done = srv.run_until_drained()
+        assert len(done) == 5
+        assert sorted(s.rid for s in done) == list(range(5))
+        for s in done:
+            assert len(s.tokens) == 4  # prompt + 3 generated
+            assert all(0 <= t < 64 for t in s.tokens)
