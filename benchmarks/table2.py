@@ -15,6 +15,11 @@ Methods mirror the paper's rows:
 
 Every number reports the scale-up factor vs SequentialQ, as in the paper.
 Exactness of every method against the oracle is asserted before timing.
+
+Paths are selected through the engine's planner: each method row is an
+ExecutionPlan (mode + executor + chunking) obtained from `plan_for`, and the
+emitted metrics carry the plan so a regression in routing (e.g. FQ-SD
+silently falling back to the fan-out executor) shows up in the tables.
 """
 from __future__ import annotations
 
@@ -50,32 +55,43 @@ def run(quick: bool = False):
                                    rtol=1e-4, atol=1e-3)
 
         rows = {}
-        # SequentialQ: query-at-a-time, no partition parallelism
+        # SequentialQ: query-at-a-time, no partition parallelism — the
+        # planner resolves n_partitions=1 to the FD-SQ executor with a
+        # single fan-out branch.
         seq_eng = ExactKNN(k=k, n_partitions=1).fit(x)
         t_seq = timeit(lambda: [seq_eng.query(q[i]) for i in range(4)], repeats=2)
-        rows["SequentialQ"] = dict(lat_ms=t_seq / 4 * 1e3, qps=4 / t_seq)
+        rows["SequentialQ"] = dict(
+            lat_ms=t_seq / 4 * 1e3, qps=4 / t_seq, plan=seq_eng.plan_for("fdsq", 1))
 
         # BatchQ / FQ-SD: the whole batch through the streaming queue scan
+        plan_b = eng.plan_for("fqsd", m)
+        assert plan_b.executor == "fqsd-xla", plan_b
         t_b = timeit(lambda: eng.query_batch(q))
-        rows["FQ-SD(batch)"] = dict(lat_ms=t_b * 1e3, qps=m / t_b)
+        rows["FQ-SD(batch)"] = dict(lat_ms=t_b * 1e3, qps=m / t_b, plan=plan_b)
 
         if cfgd.get("streamed"):
             t_s = timeit(lambda: eng.search_streamed(q, x, rows_per_partition=8192),
                          repeats=2)
-            rows["FQ-SD(streamed)"] = dict(lat_ms=t_s * 1e3, qps=m / t_s)
+            rows["FQ-SD(streamed)"] = dict(
+                lat_ms=t_s * 1e3, qps=m / t_s, plan=eng.plans[-1])
 
         # SingleQ / FD-SQ: one query over 8 parallel partitions
+        plan_f = eng.plan_for("fdsq", 1)
+        assert plan_f.executor == "fdsq-xla", plan_f
         t_f = timeit(lambda: eng.query(q[0]))
-        rows["FD-SQ(1q)"] = dict(lat_ms=t_f * 1e3, qps=1 / t_f)
+        rows["FD-SQ(1q)"] = dict(lat_ms=t_f * 1e3, qps=1 / t_f, plan=plan_f)
 
         base_lat = rows["SequentialQ"]["lat_ms"]
         base_qps = rows["SequentialQ"]["qps"]
         for meth, r in rows.items():
             qpj = queries_per_joule(1, r["lat_ms"] / 1e3)
+            p = r["plan"]
             derived = (f"dataset={name};latency_ms={r['lat_ms']:.1f};"
                        f"qps={r['qps']:.1f};q_per_J={qpj:.3f};"
                        f"lat_x={base_lat / r['lat_ms']:.1f};"
-                       f"thr_x={r['qps'] / base_qps:.1f}")
+                       f"thr_x={r['qps'] / base_qps:.1f};"
+                       f"executor={p.executor};chunk={p.chunk_rows};"
+                       f"parts={p.n_partitions}")
             emit(f"table2/{name}/{meth}", r["lat_ms"] * 1e3, derived)
         results[name] = rows
     return results

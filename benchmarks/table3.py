@@ -28,24 +28,28 @@ def run(quick: bool = False):
     base = None
     for k, workers in LADDER:
         eng = ExactKNN(k=k, n_partitions=8).fit(x)
+        p = eng.plan_for("fdsq", 1)  # planner routes + labels the path
         t = timeit(lambda: eng.query(q[0]))
         qps = 1 / t
         base = base or t
-        derived = (f"mode=fdsq;k={k};workers={workers};latency_ms={t*1e3:.2f};"
+        derived = (f"mode={p.mode};k={k};workers={workers};latency_ms={t*1e3:.2f};"
                    f"qps={qps:.1f};q_per_J={queries_per_joule(1, t):.3f};"
-                   f"speedup_vs_k1024={base/t:.2f}")
+                   f"speedup_vs_k1024={base/t:.2f};"
+                   f"executor={p.executor};parts={p.n_partitions}")
         emit(f"table3/fdsq/k{k}", t * 1e6, derived)
 
     base = None
     for k, workers in FQSD_LADDER:
         eng = ExactKNN(k=k, n_partitions=8, chunk_rows=16384).fit(x)
+        p = eng.plan_for("fqsd", m)
         t = timeit(lambda: eng.query_batch(q))
         qps = m / t
         base = base or t
-        derived = (f"mode=fqsd;k={k};workers={workers};"
+        derived = (f"mode={p.mode};k={k};workers={workers};"
                    f"latency_ms={t/m*1e3:.2f};qps={qps:.1f};"
                    f"q_per_J={queries_per_joule(m, t):.3f};"
-                   f"speedup_vs_k1024={base/t:.2f}")
+                   f"speedup_vs_k1024={base/t:.2f};"
+                   f"executor={p.executor};chunk={p.chunk_rows}")
         emit(f"table3/fqsd/k{k}", t / m * 1e6, derived)
 
 

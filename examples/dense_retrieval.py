@@ -6,9 +6,10 @@ The paper's STAR/MS-MARCO pipeline: a dense encoder embeds passages and
 queries into one space; retrieval is exact kNN by maximum inner product.
 Offline we stand in for STAR with the two-tower item tower (the encoder
 family the paper's dense-retrieval baselines use), encode a synthetic
-passage corpus, then serve a query stream through the FD-SQ engine +
-RetrievalServer and report latency percentiles — the paper's Table 2
-deployment shape, end to end.
+passage corpus, then serve a *bursty* query stream through the
+AdaptiveScheduler: dense bursts route to an FQ-SD (throughput) plan, the
+sparse trickle to FD-SQ (latency) — the paper's RQ3 trade-off as a runtime
+policy instead of a deployment choice.
 """
 import time
 
@@ -18,7 +19,7 @@ import numpy as np
 
 from repro.core import ExactKNN
 from repro.models import recsys as R
-from repro.serving import Request, RetrievalServer
+from repro.serving import AdaptiveScheduler, bursty_requests
 
 
 def main():
@@ -40,22 +41,23 @@ def main():
     src = rng.integers(0, n_passages, n_queries)
     qvecs = corpus[src] + 0.05 * rng.standard_normal((n_queries, corpus.shape[1])).astype(np.float32)
 
-    # ----- exact MIPS retrieval through the FD-SQ engine ------------------
+    # ----- exact MIPS retrieval through the adaptive scheduler ------------
     engine = ExactKNN(k=10, metric="ip", n_partitions=8).fit(corpus)
-    server = RetrievalServer(engine, batch_window_s=0.0, max_batch=1)
+    server = AdaptiveScheduler(engine, policy="adaptive", fqsd_min_depth=32)
 
     t0 = time.perf_counter()
-    lat, hits = [], 0
-    for res in server.serve(Request(i, qvecs[i]) for i in range(n_queries)):
-        lat.append(res.latency_ms)
+    hits = 0
+    for res in server.serve(bursty_requests(qvecs)):
         hits += int(src[res.rid] in set(res.indices.tolist()))
     wall = time.perf_counter() - t0
 
-    lat = np.asarray(lat)
-    print(f"served {n_queries} queries in {wall:.2f}s "
-          f"({n_queries / wall:.1f} q/s)")
-    print(f"latency p50={np.percentile(lat, 50):.2f}ms "
-          f"p99={np.percentile(lat, 99):.2f}ms")
+    st = server.stats()
+    print(f"served {st['served']} queries in {wall:.2f}s "
+          f"({n_queries / wall:.1f} q/s), mode_switches={st['mode_switches']}")
+    for mode, r in st["per_plan"].items():
+        print(f"  plan={mode:<5} n={r['count']:<5} p50={r['p50_ms']:.2f}ms "
+              f"p99={r['p99_ms']:.2f}ms q/s={r['qps']:.1f} "
+              f"executors={','.join(r['executors'])}")
     print(f"recall@10 of source passage: {hits / n_queries:.3f}")
 
 

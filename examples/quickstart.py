@@ -48,6 +48,12 @@ def main():
                                np.asarray(batch.scores), rtol=1e-4, atol=2e-3)
     print("FQ-SD host-streamed (double-buffered) == resident result")
 
+    # --- the plans behind the calls above (planner -> executor registry) -
+    print("execution plans (one physical config, three logical ones):")
+    for p in engine.plans:
+        print(f"  mode={p.mode:<14} executor={p.executor:<14} m={p.m:<3} "
+              f"chunk={p.chunk_rows} partitions={p.n_partitions}")
+
     # --- int8 quantized scan + exact rescore (paper future work) --------
     ds8 = quantize_dataset(jnp.asarray(x))
     q8, cert = knn_quantized(jnp.asarray(queries), ds8, jnp.asarray(x), k)

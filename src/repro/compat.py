@@ -1,0 +1,150 @@
+"""Versioned JAX API shims — one place for every cross-version fallback.
+
+The repo targets the newest public mesh/shard_map API surface but must run
+on whatever JAX the container bakes in (currently 0.4.37, where
+``jax.shard_map``, ``jax.set_mesh`` and ``jax.sharding.get_abstract_mesh``
+do not exist yet). Every call site imports from here instead of probing
+``jax`` directly, so a JAX upgrade changes exactly one module.
+
+Provided shims:
+    get_abstract_mesh()   newest API, else the thread-local physical mesh
+    use_mesh(mesh)        jax.set_mesh / jax.sharding.use_mesh / `with mesh:`
+    shard_map(...)        jax.shard_map(check_vma=) / experimental(check_rep=)
+    tpu_compiler_params() pltpu.CompilerParams / pltpu.TPUCompilerParams
+    make_mesh(...)        jax.make_mesh with/without the axis_types kwarg
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Callable
+
+import jax
+
+
+def get_abstract_mesh():
+    """Return the mesh active in the current context, or None.
+
+    Tries the public ``jax.sharding.get_abstract_mesh`` first (newer JAX);
+    falls back to the thread-local physical mesh that ``with mesh:`` /
+    ``use_mesh`` install on older versions. Returns None when no non-empty
+    mesh is active, so callers can uniformly write
+    ``m is None or m.empty``.
+    """
+    try:
+        m = jax.sharding.get_abstract_mesh()
+        if m is not None and not m.empty:
+            return m
+    except AttributeError:
+        pass
+    try:
+        from jax._src import mesh as _mesh_lib
+
+        m = _mesh_lib.thread_resources.env.physical_mesh
+        if m is not None and not m.empty:
+            return m
+    except Exception:
+        pass
+    return None
+
+
+def use_mesh(mesh) -> contextlib.AbstractContextManager:
+    """Context manager activating `mesh` for the enclosed computation.
+
+    Newest JAX spells this ``jax.set_mesh`` (older: ``jax.sharding.use_mesh``);
+    before that a ``Mesh`` was its own context manager installing the
+    thread-local resource env — all three make ``get_abstract_mesh`` above
+    observe the mesh.
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    if hasattr(jax.sharding, "use_mesh"):
+        return jax.sharding.use_mesh(mesh)
+    return mesh  # Mesh is a context manager on older JAX
+
+
+def shard_map(
+    f: Callable,
+    *,
+    mesh: Any,
+    in_specs: Any,
+    out_specs: Any,
+    check_vma: bool = False,
+) -> Callable:
+    """`jax.shard_map` where available, else the experimental spelling.
+
+    The replication-check kwarg was renamed check_rep -> check_vma; both
+    gate the same static verification, so forwarding one to the other is
+    semantics-preserving.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma,
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=check_vma,
+    )
+
+
+def cost_analysis(compiled) -> dict:
+    """`compiled.cost_analysis()` as a flat dict on every JAX version
+    (0.4.x returned a one-element list of per-device dicts)."""
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
+def jit_shardings(mesh, specs):
+    """Adapt a pytree of PartitionSpecs for jit in_/out_shardings.
+
+    Newer JAX accepts bare PartitionSpecs (resolved against the ambient
+    mesh); 0.4.x requires concrete `Sharding` objects. NamedSharding is
+    valid on every supported version, so specs are always wrapped against
+    `mesh` (None => fully replicated).
+    """
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    def wrap(s):
+        if s is None:
+            return NamedSharding(mesh, PartitionSpec())
+        if isinstance(s, PartitionSpec):
+            return NamedSharding(mesh, s)
+        return s
+
+    return jax.tree.map(wrap, specs, is_leaf=lambda s: s is None or isinstance(s, PartitionSpec))
+
+
+def make_mesh(axis_shapes, axis_names, devices=None):
+    """`jax.make_mesh` pinning every axis to Auto sharding mode.
+
+    Newer JAX takes ``axis_types`` (pinned explicitly so a future default
+    change cannot flip the repo to Explicit mode); 0.4.x predates axis
+    types entirely, where Auto is the only behavior.
+    """
+    kw = {} if devices is None else {"devices": devices}
+    if hasattr(jax.sharding, "AxisType"):
+        kw["axis_types"] = (jax.sharding.AxisType.Auto,) * len(axis_names)
+    return jax.make_mesh(axis_shapes, axis_names, **kw)
+
+
+def tpu_compiler_params(dimension_semantics: tuple[str, ...], **kw):
+    """Pallas-TPU compiler params across the CompilerParams rename.
+
+    `dimension_semantics` is given as lowercase strings ("parallel" /
+    "arbitrary"); newer JAX spells them as the ``GridDimensionSemantics``
+    enum on ``pltpu.CompilerParams``, older as string literals on
+    ``pltpu.TPUCompilerParams``.
+    """
+    import jax.experimental.pallas.tpu as pltpu
+
+    if hasattr(pltpu, "CompilerParams"):
+        sem = dimension_semantics
+        if hasattr(pltpu, "GridDimensionSemantics"):
+            enum = pltpu.GridDimensionSemantics
+            sem = tuple(getattr(enum, s.upper()) for s in dimension_semantics)
+        return pltpu.CompilerParams(dimension_semantics=sem, **kw)
+    return pltpu.TPUCompilerParams(dimension_semantics=dimension_semantics, **kw)

@@ -1,7 +1,10 @@
 """repro.core — exact kNN search engine (the paper's primary contribution).
 
-Public API:
+Public API (planner -> executors -> facade):
     ExactKNN            engine facade (FD-SQ / FQ-SD, single-chip or mesh)
+    plan/ExecutionPlan  pure planning layer (repro.core.planner)
+    execute/register_executor/list_executors/cache_info
+                        executor registry + executable cache (no reflashing)
     TopK                result container (sorted scores + global indices)
     fqsd_scan           chunked streamed-dataset search (throughput)
     fdsq_search         partition-parallel resident-dataset search (latency)
@@ -15,8 +18,25 @@ from repro.core.distance import (
     pairwise_scores,
     row_norms_sq,
 )
-from repro.core.engine import EnginePlan, ExactKNN
+from repro.core.engine import ExactKNN
+from repro.core.executors import (
+    ExecContext,
+    cache_info,
+    clear_executable_cache,
+    execute,
+    get_executor,
+    list_executors,
+    register_executor,
+)
 from repro.core.fdsq import fdsq_query_stream, fdsq_search
+from repro.core.planner import (
+    DatasetMeta,
+    EngineConfig,
+    EnginePlan,
+    ExecutionPlan,
+    largest_divisor_at_most,
+    plan,
+)
 from repro.core.fqsd import fqsd_scan, fqsd_streamed
 from repro.core.partition import PaddedDataset, iter_partitions, make_padded
 from repro.core.quantized import QuantizedDataset, knn_quantized, quantize_dataset
@@ -33,7 +53,10 @@ from repro.core.topk import (
 )
 
 __all__ = [
-    "ExactKNN", "EnginePlan", "TopK",
+    "ExactKNN", "EnginePlan", "ExecutionPlan", "TopK",
+    "plan", "DatasetMeta", "EngineConfig", "largest_divisor_at_most",
+    "execute", "register_executor", "get_executor", "list_executors",
+    "cache_info", "clear_executable_cache", "ExecContext",
     "fqsd_scan", "fqsd_streamed", "fdsq_search", "fdsq_query_stream",
     "fdsq_sharded", "fqsd_sharded", "fqsd_ring", "shard_dataset",
     "pairwise_scores", "l2_sq", "inner_product", "cosine_distance",

@@ -1,25 +1,38 @@
-"""ExactKNN — the public facade over FQ-SD / FD-SQ (the paper's contribution).
+"""ExactKNN — thin facade over the planner/executor core.
 
-One engine object plays the role of the single FPGA hardware configuration:
-both logical configurations run on the same compiled building blocks, and
-switching between them at run time never recompiles for shapes already seen
-(the executable cache is the analogue of "no reflashing", section 3.2).
+Architecture (one PR of the paper's fig. 1 / fig. 2 made explicit):
+
+    ExactKNN (this module)          facade: owns the padded dataset + config
+        -> planner.plan(...)        PURE: shapes + config -> ExecutionPlan
+        -> executors.execute(...)   registry: plan -> compiled executable
+             fdsq-xla / fqsd-xla / fdsq-pallas / fqsd-streamed /
+             fdsq-sharded / fqsd-sharded
+        -> serving.AdaptiveScheduler   picks FD-SQ vs FQ-SD plans per batch
+
+One engine object plays the role of the single physical FPGA configuration:
+FD-SQ and FQ-SD are *logical* configurations over the same compiled building
+blocks, and the executor layer caches every compiled executable keyed by
+plan, so switching modes at run time never recompiles for shapes already
+seen — the paper's "no reflashing" invariant (section 3.2), testable via
+``repro.core.executors.cache_info()``.
 
 Usage:
     eng = ExactKNN(k=10, metric="l2")
     eng.fit(dataset)                       # FD-SQ: resident dataset
-    res = eng.query(q)                     # latency path
-    res = eng.query_batch(Q)               # FQ-SD over the resident data
-    res = eng.search_streamed(Q, host_it)  # FQ-SD: dataset > device memory
+    res = eng.query(q)                     # latency path  (fdsq plan)
+    res = eng.query_batch(Q)               # throughput    (fqsd plan)
+    res = eng.search_streamed(Q, host_it)  # dataset > device memory
+    eng.plans                              # every ExecutionPlan executed
 
-Distributed (mesh) usage routes to repro.core.sharded; Pallas-fused kernels
-are selected with backend="pallas" (validated in interpret mode on CPU,
-compiled for TPU MXU/VMEM on hardware).
+Distributed (mesh) usage routes to the sharded executors; Pallas-fused
+kernels are selected with backend="pallas" (validated in interpret mode on
+CPU, compiled for TPU MXU/VMEM on hardware). Mode selection itself lives in
+``repro.core.planner`` — this class contains no ``if mesh`` / ``if backend``
+dispatch of its own.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Iterable, Literal, Sequence
+from typing import Iterable, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -28,24 +41,16 @@ import numpy as np
 from repro.core import partition as part
 from repro.core import sharded as sh
 from repro.core.distance import Metric, validate_metric
-from repro.core.fdsq import fdsq_search
-from repro.core.fqsd import fqsd_scan, fqsd_streamed
+from repro.core.executors import ExecContext, execute
+from repro.core.planner import (
+    Backend,
+    DatasetMeta,
+    EngineConfig,
+    EnginePlan,
+    ExecutionPlan,
+    plan as plan_fn,
+)
 from repro.core.topk import TopK
-
-Backend = Literal["xla", "pallas"]
-
-
-@dataclasses.dataclass
-class EnginePlan:
-    """Resolved execution plan — logged for observability / tests."""
-
-    mode: str  # "fdsq" | "fqsd" | "fqsd-streamed" | "fdsq-sharded" | ...
-    backend: Backend
-    m: int
-    k: int
-    metric: str
-    chunk_rows: int
-    n_partitions: int
 
 
 class ExactKNN:
@@ -72,9 +77,7 @@ class ExactKNN:
         self.mesh_axes = tuple(mesh_axes)
         self.dtype = dtype
         self._ds: part.PaddedDataset | None = None
-        self._sharded_fdsq = None
-        self._sharded_fqsd = None
-        self._plans: list[EnginePlan] = []
+        self._plans: list[ExecutionPlan] = []
 
     # ------------------------------------------------------------------ fit
     def fit(self, vectors: np.ndarray | jax.Array) -> "ExactKNN":
@@ -89,9 +92,6 @@ class ExactKNN:
                 self.mesh, padded.vectors, padded.norms, self.mesh_axes
             )
             padded = part.PaddedDataset(vec, nrm, padded.n_valid, 0)
-            self._sharded_fdsq = sh.fdsq_sharded(
-                self.mesh, self.k, self.metric, self.mesh_axes
-            )
         self._ds = padded
         return self
 
@@ -120,16 +120,51 @@ class ExactKNN:
             q = q[None, :]
         return part.pad_dim(q, self._ds.vectors.shape[1])
 
-    def _log(self, mode: str, m: int):
-        self._plans.append(
-            EnginePlan(
-                mode, self.backend, m, self.k, self.metric,
-                self.chunk_rows, self.n_partitions,
-            )
+    # ------------------------------------------------------------ planning
+    def config(self) -> EngineConfig:
+        """The engine's knobs as pure planner input."""
+        return EngineConfig(
+            k=self.k,
+            metric=self.metric,
+            backend=self.backend,
+            chunk_rows=self.chunk_rows,
+            n_partitions=self.n_partitions,
+            sharded=self.mesh is not None,
+            mesh_axes=self.mesh_axes,
         )
 
+    def dataset_meta(self) -> DatasetMeta:
+        self._require_fit()
+        return DatasetMeta(
+            padded_rows=int(self._ds.vectors.shape[0]),
+            padded_dim=int(self._ds.vectors.shape[1]),
+            n_valid=int(self._ds.n_valid),
+            sharded=self.mesh is not None,
+        )
+
+    def plan_for(self, mode: str, m: int = 1, **kw) -> ExecutionPlan:
+        """Plan without executing — what `mode` with an m-row batch would run.
+
+        Pure: calling this any number of times compiles nothing and returns
+        equal plans for equal inputs (the scheduler and the benchmarks use
+        it to label / choose paths).
+        """
+        self._require_fit()
+        d = int(self._ds.vectors.shape[1])
+        return plan_fn((m, d), self.dataset_meta(), self.config(), mode, **kw)
+
+    def _ctx(self, prefetch_depth: int = 2) -> ExecContext:
+        return ExecContext(
+            mesh=self.mesh, mesh_axes=self.mesh_axes, prefetch_depth=prefetch_depth
+        )
+
+    def _run(self, p: ExecutionPlan, queries: jax.Array, dataset, **ctx_kw) -> TopK:
+        self._plans.append(p)
+        return execute(p, queries, dataset, self._ctx(**ctx_kw))
+
     @property
-    def plans(self) -> list[EnginePlan]:
+    def plans(self) -> list[ExecutionPlan]:
+        """Every plan executed, in order (observability / tests)."""
         return list(self._plans)
 
     # ---------------------------------------------------------------- FD-SQ
@@ -137,20 +172,7 @@ class ExactKNN:
         """Low-latency path: one query (or micro-batch) vs resident dataset."""
         self._require_fit()
         qv = self._pad_queries(q)
-        self._log("fdsq" + ("-sharded" if self.mesh else ""), qv.shape[0])
-        if self.mesh is not None:
-            return self._sharded_fdsq(qv, self._ds.vectors, self._ds.norms)
-        if self.backend == "pallas":
-            from repro.kernels.knn import ops as knn_ops
-
-            return knn_ops.knn(
-                qv, self._ds.vectors, self.k, metric=self.metric,
-                x_norms=self._ds.norms,
-            )
-        return fdsq_search(
-            qv, self._ds.vectors, self._ds.norms, self.k, self.metric,
-            self.n_partitions,
-        )
+        return self._run(self.plan_for("fdsq", qv.shape[0]), qv, self._ds)
 
     def query_stream(self, queries_iter: Iterable) -> Iterable[TopK]:
         """Streamed queries, one at a time (fig. 2 arrows 3-5)."""
@@ -163,24 +185,7 @@ class ExactKNN:
         """Throughput path: a batch of M queries over the resident dataset."""
         self._require_fit()
         qv = self._pad_queries(queries)
-        self._log("fqsd" + ("-sharded" if self.mesh else ""), qv.shape[0])
-        if self.mesh is not None:
-            if self._sharded_fqsd is None:
-                self._sharded_fqsd = sh.fqsd_ring(self.mesh, self.k, self.metric)
-            return self._sharded_fqsd(qv, self._ds.vectors, self._ds.norms)
-        if self.backend == "pallas":
-            from repro.kernels.knn import ops as knn_ops
-
-            return knn_ops.knn(
-                qv, self._ds.vectors, self.k, metric=self.metric,
-                x_norms=self._ds.norms,
-            )
-        chunk = min(self.chunk_rows, self._ds.vectors.shape[0])
-        while self._ds.vectors.shape[0] % chunk:
-            chunk //= 2
-        return fqsd_scan(
-            qv, self._ds.vectors, self._ds.norms, self.k, self.metric, chunk
-        )
+        return self._run(self.plan_for("fqsd", qv.shape[0]), qv, self._ds)
 
     def search_streamed(
         self,
@@ -199,8 +204,18 @@ class ExactKNN:
             q = q[None, :]
         d_pad = part.round_up(host_vectors.shape[1], part.LANE)
         q = part.pad_dim(q, d_pad)
-        self._log("fqsd-streamed", q.shape[0])
-        parts = part.iter_partitions(host_vectors, rows_per_partition)
-        return fqsd_streamed(
-            q, parts, self.k, self.metric, prefetch_depth=prefetch_depth
+        rows = part.round_up(rows_per_partition, part.LANE)
+        meta = DatasetMeta(
+            padded_rows=int(host_vectors.shape[0]),
+            padded_dim=d_pad,
+            n_valid=int(host_vectors.shape[0]),
+            resident=False,
         )
+        p = plan_fn(
+            q.shape, meta, self.config(), "fqsd-streamed", stream_rows=rows
+        )
+        parts = part.iter_partitions(host_vectors, rows)
+        return self._run(p, q, parts, prefetch_depth=prefetch_depth)
+
+
+__all__ = ["ExactKNN", "EnginePlan", "ExecutionPlan"]

@@ -1,0 +1,194 @@
+"""Executor registry — uniform "run the plan" layer of the engine.
+
+Each executor is a callable ``execute(plan, queries, dataset, ctx) -> TopK``
+registered under the name the planner selects (``repro.core.planner``).
+Executors wrap the existing entry points (``fdsq.py`` / ``fqsd.py`` /
+``sharded.py`` / ``kernels.knn``) — they add no numerics of their own.
+
+The module also owns the **executable cache**, the TPU analogue of the
+paper's fixed FPGA bitstream: every executor resolves its compiled
+executable through :func:`_cached`, keyed by ``plan.cache_key()`` plus the
+concrete array shapes. Switching FD-SQ <-> FQ-SD therefore never recompiles
+for shapes already seen ("no reflashing", section 3.2) — and because the
+cache is explicit, that invariant is directly testable via
+:func:`cache_info` (see tests/test_planner.py) instead of being an
+accident of jit internals.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Iterable, Sequence
+
+import jax
+
+from repro.core import partition as part
+from repro.core import sharded as sh
+from repro.core.fdsq import fdsq_search
+from repro.core.fqsd import fqsd_scan, fqsd_streamed, make_partition_step
+from repro.core.planner import ExecutionPlan
+from repro.core.topk import TopK
+
+
+@dataclasses.dataclass
+class ExecContext:
+    """Runtime state a plan cannot carry (plans are pure data): the mesh
+    handle, axis names, and host-streaming knobs."""
+
+    mesh: jax.sharding.Mesh | None = None
+    mesh_axes: Sequence[str] = ("data", "model")
+    prefetch_depth: int = 2
+
+
+Executor = Callable[[ExecutionPlan, jax.Array, object, ExecContext], TopK]
+
+_REGISTRY: dict[str, Executor] = {}
+_EXECUTABLE_CACHE: dict[tuple, Callable] = {}
+_CACHE_STATS = {"hits": 0, "misses": 0}
+
+
+# ----------------------------------------------------------------- registry
+def register_executor(name: str):
+    """Class-of-2 decorator: ``@register_executor("fdsq-xla")``."""
+
+    def deco(fn: Executor) -> Executor:
+        if name in _REGISTRY:
+            raise ValueError(f"executor {name!r} already registered")
+        fn.executor_name = name
+        _REGISTRY[name] = fn
+        return fn
+
+    return deco
+
+
+def get_executor(name: str) -> Executor:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown executor {name!r}; registered: {list_executors()}"
+        ) from None
+
+
+def list_executors() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def execute(
+    plan: ExecutionPlan,
+    queries: jax.Array,
+    dataset,
+    ctx: ExecContext | None = None,
+) -> TopK:
+    """Dispatch `plan` to its registered executor."""
+    return get_executor(plan.executor)(plan, queries, dataset, ctx or ExecContext())
+
+
+# ------------------------------------------------------- executable cache
+def _cached(key: tuple, build: Callable[[], Callable]) -> Callable:
+    try:
+        fn = _EXECUTABLE_CACHE[key]
+        _CACHE_STATS["hits"] += 1
+        return fn
+    except KeyError:
+        fn = _EXECUTABLE_CACHE[key] = build()
+        _CACHE_STATS["misses"] += 1
+        return fn
+
+
+def cache_info() -> dict:
+    """{"hits", "misses", "size"} — misses == number of compiles triggered."""
+    return {**_CACHE_STATS, "size": len(_EXECUTABLE_CACHE)}
+
+
+def clear_executable_cache() -> None:
+    _EXECUTABLE_CACHE.clear()
+    _CACHE_STATS["hits"] = _CACHE_STATS["misses"] = 0
+
+
+def _arr_key(a: jax.Array) -> tuple:
+    return (tuple(a.shape), str(a.dtype))
+
+
+# ------------------------------------------------------------- executors
+@register_executor("fdsq-xla")
+def _fdsq_xla(plan, queries, dataset: part.PaddedDataset, ctx) -> TopK:
+    """Partition-parallel fan-out + tree merge (latency path, fig. 2)."""
+    key = (plan.cache_key(), _arr_key(queries), _arr_key(dataset.vectors))
+
+    def build():
+        return fdsq_search.lower(
+            queries, dataset.vectors, dataset.norms,
+            plan.k, plan.metric, plan.n_partitions,
+        ).compile()
+
+    return _cached(key, build)(queries, dataset.vectors, dataset.norms)
+
+
+@register_executor("fqsd-xla")
+def _fqsd_xla(plan, queries, dataset: part.PaddedDataset, ctx) -> TopK:
+    """Chunked streaming queue scan over resident data (throughput, fig. 1)."""
+    key = (plan.cache_key(), _arr_key(queries), _arr_key(dataset.vectors))
+
+    def build():
+        return fqsd_scan.lower(
+            queries, dataset.vectors, dataset.norms,
+            plan.k, plan.metric, plan.chunk_rows,
+        ).compile()
+
+    return _cached(key, build)(queries, dataset.vectors, dataset.norms)
+
+
+@register_executor("fdsq-pallas")
+def _fdsq_pallas(plan, queries, dataset: part.PaddedDataset, ctx) -> TopK:
+    """Fused distance+queue kernel; one executable serves both logical modes
+    (interpret mode off-TPU, MXU/VMEM pipeline on hardware)."""
+    from repro.kernels.knn import ops as knn_ops
+
+    key = (plan.cache_key(), _arr_key(queries), _arr_key(dataset.vectors))
+
+    def build():
+        return knn_ops.knn.lower(
+            queries, dataset.vectors, plan.k, plan.metric, dataset.norms,
+        ).compile()
+
+    return _cached(key, build)(queries, dataset.vectors, dataset.norms)
+
+
+@register_executor("fqsd-streamed")
+def _fqsd_streamed(plan, queries, dataset: Iterable[part.PaddedDataset], ctx) -> TopK:
+    """Host-streamed FQ-SD through the double buffer. The per-partition step
+    is the cached executable (all partitions share one padded shape).
+
+    Keyed by (k, metric) only — the step's jit resolves shapes itself, so
+    datasets of different total size reuse one wrapper (compiles once)."""
+    key = ("fqsd-streamed", plan.k, plan.metric)
+    step = _cached(key, lambda: make_partition_step(plan.k, plan.metric))
+    return fqsd_streamed(
+        queries, dataset, plan.k, plan.metric,
+        prefetch_depth=ctx.prefetch_depth, step_fn=step,
+    )
+
+
+@register_executor("fdsq-sharded")
+def _fdsq_sharded(plan, queries, dataset: part.PaddedDataset, ctx) -> TopK:
+    """Mesh-distributed FD-SQ: replicated query, row-sharded dataset,
+    hierarchical O(k) merge."""
+    if ctx.mesh is None:
+        raise ValueError("plan requires a mesh but ExecContext.mesh is None")
+    key = (plan.cache_key(), ctx.mesh, tuple(ctx.mesh_axes))
+    fn = _cached(
+        key,
+        lambda: sh.fdsq_sharded(ctx.mesh, plan.k, plan.metric, tuple(ctx.mesh_axes)),
+    )
+    return fn(queries, dataset.vectors, dataset.norms)
+
+
+@register_executor("fqsd-sharded")
+def _fqsd_sharded(plan, queries, dataset: part.PaddedDataset, ctx) -> TopK:
+    """Mesh-distributed FQ-SD via the compute/comm-overlapped ring (the
+    fully-partitioned layout — see repro.core.sharded.fqsd_ring)."""
+    if ctx.mesh is None:
+        raise ValueError("plan requires a mesh but ExecContext.mesh is None")
+    key = (plan.cache_key(), ctx.mesh)
+    fn = _cached(key, lambda: sh.fqsd_ring(ctx.mesh, plan.k, plan.metric))
+    return fn(queries, dataset.vectors, dataset.norms)

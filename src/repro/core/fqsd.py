@@ -123,16 +123,19 @@ def fqsd_streamed(
     metric: Metric = "l2",
     prefetch_depth: int = 2,
     put_fn=None,
+    step_fn=None,
 ) -> TopK:
     """Exact kNN over a host-resident dataset streamed with double buffering.
 
     `partitions` is typically `partition.iter_partitions(...)`; every yielded
     partition has the same padded shape. The streamer keeps one partition in
     flight (two banks); the step executable is reused across partitions.
+    `step_fn` lets callers inject an already-built step (the executor layer
+    caches it per plan so repeated streamed searches share one executable).
     """
     from repro.core.streaming import DoubleBufferedStream
 
-    step = make_partition_step(k, metric)
+    step = step_fn if step_fn is not None else make_partition_step(k, metric)
     state = empty_topk((queries.shape[0],), k)
 
     def put(p: part.PaddedDataset):

@@ -26,6 +26,15 @@ def round_up(x: int, mult: int) -> int:
     return ((x + mult - 1) // mult) * mult
 
 
+def next_pow2(v: int) -> int:
+    """Smallest power of two >= v (>= 1). Batch/queue sizes round up to this
+    so ragged sizes resolve to O(log n) distinct compiled shapes."""
+    p = 1
+    while p < v:
+        p <<= 1
+    return p
+
+
 class PaddedDataset(NamedTuple):
     """A device-ready, alignment-padded dataset partition."""
 

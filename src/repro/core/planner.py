@@ -1,0 +1,191 @@
+"""Query planning — pure "decide the plan" layer of the engine.
+
+The paper's central observation is that FD-SQ (latency) and FQ-SD
+(throughput) are two *logical* configurations of one physical FPGA
+configuration: choosing between them is a scheduling decision, not a
+hardware change. This module is that decision, isolated as a pure
+function:
+
+    plan(query_shape, dataset_meta, engine_cfg, mode) -> ExecutionPlan
+
+An :class:`ExecutionPlan` is frozen, hashable, deterministic data — it
+names the executor (see ``repro.core.executors``), the resolved dataset
+chunking, and the padding geometry. Executors key their compiled
+executables on plans, which makes the paper's "no reflashing" invariant
+testable: planning the same shapes twice yields equal plans, and equal
+plans hit the same cached executable no matter how many mode switches
+happened in between (section 3.2).
+
+Nothing here touches device state; everything here is unit-testable
+without JAX tracing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal, Sequence
+
+Backend = Literal["xla", "pallas"]
+ModeHint = Literal["fdsq", "fqsd", "fqsd-streamed"]
+
+#: Executors the planner may select (must match the registry in
+#: repro.core.executors — asserted by tests/test_planner.py).
+PLANNABLE_EXECUTORS = (
+    "fdsq-xla",
+    "fqsd-xla",
+    "fdsq-pallas",
+    "fqsd-streamed",
+    "fdsq-sharded",
+    "fqsd-sharded",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class EnginePlan:
+    """Resolved logical configuration — logged for observability / tests."""
+
+    mode: str  # "fdsq" | "fqsd" | "fqsd-streamed" | "fdsq-sharded" | ...
+    backend: str
+    m: int
+    k: int
+    metric: str
+    chunk_rows: int
+    n_partitions: int
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan(EnginePlan):
+    """EnginePlan + the physical decisions: executor, chunking, padding."""
+
+    executor: str = "fdsq-xla"
+    padded_rows: int = 0
+    padded_dim: int = 0
+    n_valid: int = 0
+    sharded: bool = False
+
+    def cache_key(self) -> tuple:
+        """Everything that determines the compiled executable for this plan
+        (query batch m and padding geometry included; log-only fields not)."""
+        return (
+            self.executor, self.m, self.k, self.metric, self.chunk_rows,
+            self.n_partitions, self.padded_rows, self.padded_dim,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class DatasetMeta:
+    """Shape facts about the (padded) dataset a plan will run against."""
+
+    padded_rows: int
+    padded_dim: int
+    n_valid: int
+    sharded: bool = False
+    resident: bool = True  # False => host-streamed partitions
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """The engine's constructor knobs as pure data (planner input)."""
+
+    k: int
+    metric: str = "l2"
+    backend: str = "xla"
+    chunk_rows: int = 8192
+    n_partitions: int = 8
+    sharded: bool = False
+    mesh_axes: Sequence[str] = ("data", "model")
+
+
+def largest_divisor_at_most(n: int, cap: int) -> int:
+    """Largest divisor of `n` that is <= `cap` (>= 1 for any n >= 1).
+
+    Replaces the former ``while n % chunk: chunk //= 2`` loop, which only
+    visited halvings of the requested chunk and could degrade to chunk=1
+    (a per-row scan) — or never terminate for cap <= 0 — whenever the
+    padded row count shared no power-of-two suffix with the request.
+    O(sqrt n) divisor walk; n is a row count, so this is microseconds.
+    """
+    if n < 1:
+        raise ValueError(f"n must be >= 1, got {n}")
+    cap = min(cap, n)
+    if cap < 1:
+        return 1
+    best = 1
+    d = 1
+    while d * d <= n:
+        if n % d == 0:
+            if d <= cap:
+                best = max(best, d)
+            co = n // d
+            if co <= cap:
+                best = max(best, co)
+        d += 1
+    return best
+
+
+def plan(
+    query_shape: Sequence[int],
+    dataset_meta: DatasetMeta,
+    engine_cfg: EngineConfig,
+    mode: ModeHint = "fdsq",
+    stream_rows: int | None = None,
+) -> ExecutionPlan:
+    """Pure planning function: shapes + config in, ExecutionPlan out.
+
+    Replaces the inline ``if mesh / if backend == "pallas"`` branches that
+    used to live in ``ExactKNN.query`` / ``query_batch``:
+
+    * sharded dataset  -> the mesh executors (mode picks fan-out vs ring);
+    * backend="pallas" -> the fused kernel, which serves BOTH logical modes
+      with one executable ("fdsq-pallas"); metrics it cannot fuse (cos)
+      fall back to the XLA executors instead of raising;
+    * mode="fqsd"      -> chunked scan with a chunk size that is a real
+      divisor of the padded row count (see `largest_divisor_at_most`);
+    * mode="fdsq"      -> partition-parallel fan-out with a partition count
+      that divides the padded rows.
+    """
+    if mode not in ("fdsq", "fqsd", "fqsd-streamed"):
+        raise ValueError(f"unknown mode hint {mode!r}")
+    if len(query_shape) == 2:
+        m = int(query_shape[0])
+    elif len(query_shape) == 1:
+        m = 1
+    else:
+        raise ValueError(f"query_shape must be (m, d) or (d,), got {query_shape}")
+
+    cfg = engine_cfg
+    sharded = bool(cfg.sharded or dataset_meta.sharded)
+    rows = int(dataset_meta.padded_rows)
+    chunk = int(cfg.chunk_rows)
+    n_parts = int(cfg.n_partitions)
+    mode_label = mode
+
+    if mode == "fqsd-streamed":
+        executor = "fqsd-streamed"
+        if stream_rows is not None:
+            chunk = int(stream_rows)
+    elif sharded:
+        executor = "fdsq-sharded" if mode == "fdsq" else "fqsd-sharded"
+        mode_label = f"{mode}-sharded"
+    elif cfg.backend == "pallas" and cfg.metric in ("l2", "ip"):
+        executor = "fdsq-pallas"
+    elif mode == "fdsq":
+        executor = "fdsq-xla"
+        n_parts = largest_divisor_at_most(rows, max(1, n_parts))
+    else:
+        executor = "fqsd-xla"
+        chunk = largest_divisor_at_most(rows, max(1, chunk))
+
+    return ExecutionPlan(
+        mode=mode_label,
+        backend=cfg.backend,
+        m=m,
+        k=int(cfg.k),
+        metric=cfg.metric,
+        chunk_rows=chunk,
+        n_partitions=n_parts,
+        executor=executor,
+        padded_rows=rows,
+        padded_dim=int(dataset_meta.padded_dim),
+        n_valid=int(dataset_meta.n_valid),
+        sharded=sharded,
+    )

@@ -36,6 +36,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core.distance import Metric, validate_metric
 from repro.core.fqsd import chunk_step
 from repro.core.topk import TopK, empty_topk, tree_merge_sorted
+from repro import compat
 
 
 def _local_scan(queries, vectors, norms, k, metric, base, chunk_rows=None):
@@ -89,7 +90,7 @@ def fdsq_sharded(
         stride = vectors.shape[0]
         for ax in reversed(axes):
             base = base + lax.axis_index(ax) * stride
-            stride = stride * lax.axis_size(ax)
+            stride = stride * mesh.shape[ax]  # static size, version-safe
         state = _local_scan(query, vectors, norms, k, metric, base, chunk_rows)
         # hierarchical exact merge: innermost axis first (cheapest links),
         # then outer — two stages of O(k) traffic instead of one 256-way.
@@ -97,7 +98,7 @@ def fdsq_sharded(
             state = _gather_merge(state, ax)
         return state
 
-    return jax.shard_map(
+    return compat.shard_map(
         local,
         mesh=mesh,
         in_specs=(P(), P(axes), P(axes)),
@@ -126,7 +127,7 @@ def fqsd_sharded(
         state = _local_scan(queries, vectors, norms, k, metric, base, chunk_rows)
         return _gather_merge(state, dataset_axis)
 
-    return jax.shard_map(
+    return compat.shard_map(
         local,
         mesh=mesh,
         in_specs=(P(query_axis), P(dataset_axis), P(dataset_axis)),
@@ -159,8 +160,8 @@ def fqsd_ring(
     validate_metric(metric)
 
     def local(queries, vectors, norms):
-        d_sz = lax.axis_size(query_axis)
-        t_sz = lax.axis_size(model_axis)
+        d_sz = mesh.shape[query_axis]  # static size, version-safe
+        t_sz = mesh.shape[model_axis]
         my_d = lax.axis_index(query_axis)
         my_t = lax.axis_index(model_axis)
         rows = vectors.shape[0]
@@ -188,7 +189,7 @@ def fqsd_ring(
         )
         return _gather_merge(state, model_axis)
 
-    return jax.shard_map(
+    return compat.shard_map(
         local,
         mesh=mesh,
         in_specs=(P(query_axis), P((query_axis, model_axis)), P((query_axis, model_axis))),
@@ -218,8 +219,8 @@ def fqsd_ring_queries(
     validate_metric(metric)
 
     def local(queries, vectors, norms):
-        d_sz = lax.axis_size(query_axis)
-        t_sz = lax.axis_size(model_axis)
+        d_sz = mesh.shape[query_axis]  # static size, version-safe
+        t_sz = mesh.shape[model_axis]
         my_d = lax.axis_index(query_axis)
         my_t = lax.axis_index(model_axis)
         rows = vectors.shape[0]
@@ -244,7 +245,7 @@ def fqsd_ring_queries(
         # after d_sz rotations the state is back at its owner row
         return _gather_merge(state, model_axis)
 
-    return jax.shard_map(
+    return compat.shard_map(
         local,
         mesh=mesh,
         in_specs=(P(query_axis), P((query_axis, model_axis)), P((query_axis, model_axis))),

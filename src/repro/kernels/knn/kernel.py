@@ -29,6 +29,8 @@ from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
 from repro.kernels.bitonic import bitonic_sort, topk_update
 
 
@@ -129,12 +131,8 @@ def knn_pallas(
             pltpu.VMEM((bm, k_eff), jnp.float32),  # queue values
             pltpu.VMEM((bm, k_eff), jnp.int32),  # queue indices
         ],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=(
-                pltpu.GridDimensionSemantics.PARALLEL,
-                pltpu.GridDimensionSemantics.ARBITRARY,
-                pltpu.GridDimensionSemantics.ARBITRARY,
-            )
+        compiler_params=compat.tpu_compiler_params(
+            ('parallel', 'arbitrary', 'arbitrary')
         ),
         interpret=interpret,
     )(q, x, qn, xn)

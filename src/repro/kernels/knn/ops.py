@@ -6,19 +6,13 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core.partition import next_pow2
 from repro.core.topk import TopK
 from repro.kernels.knn.kernel import knn_pallas
 
 
 def _round_up(v: int, m: int) -> int:
     return ((v + m - 1) // m) * m
-
-
-def _next_pow2(v: int) -> int:
-    p = 1
-    while p < v:
-        p <<= 1
-    return p
 
 
 @functools.partial(
@@ -50,7 +44,7 @@ def knn(
         raise ValueError(f"fused kernel supports l2|ip, got {metric}")
     m, d = q.shape
     n, _ = x.shape
-    k_eff = _next_pow2(k)
+    k_eff = next_pow2(k)
     bn = max(block_n, k_eff)
     bm, bd = block_m, min(block_d, _round_up(d, 128))
     mp, np_, dp = _round_up(m, bm), _round_up(n, bn), _round_up(d, bd)

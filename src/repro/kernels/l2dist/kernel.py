@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
 
 def _l2dist_kernel(q_ref, x_ref, qn_ref, xn_ref, o_ref, *, n_d_steps: int):
     kd = pl.program_id(2)
@@ -86,12 +88,8 @@ def l2dist_pallas(
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kd: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=(
-                pltpu.GridDimensionSemantics.PARALLEL,
-                pltpu.GridDimensionSemantics.PARALLEL,
-                pltpu.GridDimensionSemantics.ARBITRARY,
-            )
+        compiler_params=compat.tpu_compiler_params(
+            ('parallel', 'parallel', 'arbitrary')
         ),
         interpret=interpret,
     )(q, x, qn, xn)

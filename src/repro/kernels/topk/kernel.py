@@ -24,6 +24,8 @@ from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
 from repro.kernels.bitonic import bitonic_sort, topk_update
 
 
@@ -87,11 +89,8 @@ def topk_pallas(
             pltpu.VMEM((bm, k_eff), jnp.float32),
             pltpu.VMEM((bm, k_eff), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=(
-                pltpu.GridDimensionSemantics.PARALLEL,
-                pltpu.GridDimensionSemantics.ARBITRARY,
-            )
+        compiler_params=compat.tpu_compiler_params(
+            ('parallel', 'arbitrary')
         ),
         interpret=interpret,
     )(scores)

@@ -13,13 +13,6 @@ def _round_up(v: int, m: int) -> int:
     return ((v + m - 1) // m) * m
 
 
-def _next_pow2(v: int) -> int:
-    p = 1
-    while p < v:
-        p <<= 1
-    return p
-
-
 @functools.partial(jax.jit, static_argnames=("k", "block_m", "block_n", "interpret"))
 def topk(
     scores: jax.Array,
@@ -37,7 +30,7 @@ def topk(
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     m, n = scores.shape
-    k_eff = _next_pow2(k)
+    k_eff = next_pow2(k)
     bn = max(block_n, k_eff)
     bm = block_m
     mp, np_ = _round_up(m, bm), _round_up(n, bn)

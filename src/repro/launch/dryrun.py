@@ -35,6 +35,8 @@ import sys  # noqa: E402
 import time  # noqa: E402
 import traceback  # noqa: E402
 
+from repro import compat
+
 ARTIFACTS = pathlib.Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
 
 
@@ -43,15 +45,17 @@ def _compile_cell(arch, shape, mesh):
 
     from repro.launch.steps import build_cell
 
-    with jax.set_mesh(mesh):
+    with compat.use_mesh(mesh):
         cell = build_cell(arch, shape, smoke=False)
         donate = ()
         if shape.kind in ("train", "train_sampled", "train_batched"):
             donate = (0, 1)
         elif shape.kind == "decode":
             donate = (1,)
-        jf = jax.jit(cell.fn, in_shardings=cell.in_specs,
-                     out_shardings=cell.out_specs, donate_argnums=donate)
+        jf = jax.jit(cell.fn,
+                     in_shardings=compat.jit_shardings(mesh, cell.in_specs),
+                     out_shardings=compat.jit_shardings(mesh, cell.out_specs),
+                     donate_argnums=donate)
         lowered = jf.lower(*cell.inputs)
         compiled = lowered.compile()
     return cell, compiled
@@ -60,7 +64,7 @@ def _compile_cell(arch, shape, mesh):
 def _cost_triple(compiled, chips):
     from repro.roofline.analysis import collective_bytes_from_hlo
 
-    cost = compiled.cost_analysis() or {}
+    cost = compat.cost_analysis(compiled)
     coll = collective_bytes_from_hlo(compiled.as_text(), default_group=chips)
     return (float(cost.get("flops", 0.0)),
             float(cost.get("bytes accessed", 0.0)),

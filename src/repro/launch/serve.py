@@ -1,8 +1,13 @@
 """Serving driver: kNN retrieval (the paper's workloads) or LM decode.
 
     PYTHONPATH=src python -m repro.launch.serve --mode knn --n 20000 --d 128 \
-        --k 10 --queries 200 [--fqsd]
+        --k 10 --queries 200 --policy {latency,throughput,adaptive}
     PYTHONPATH=src python -m repro.launch.serve --mode lm --arch minicpm-2b
+
+The knn mode replays a bursty arrival stream (dense bursts alternating with
+a sparse trickle) through the AdaptiveScheduler and reports, per logical
+plan (fdsq / fqsd), the batch count, p50/p99 latency and queries/s — the
+paper's RQ3 trade-off surfaced as a runtime policy.
 """
 from __future__ import annotations
 
@@ -15,26 +20,29 @@ import numpy as np
 def serve_knn(args):
     from repro.core import ExactKNN
     from repro.data import query_stream, vector_dataset
-    from repro.serving import Request, RetrievalServer
+    from repro.serving import AdaptiveScheduler, bursty_requests
 
+    policy = "throughput" if args.fqsd else args.policy
     x = vector_dataset(args.n, args.d, seed=0)
     q = query_stream(x, args.queries, seed=1)
     eng = ExactKNN(k=args.k, n_partitions=args.partitions).fit(x)
-    if args.fqsd:  # throughput mode: one big batch (paper FQ-SD)
-        t0 = time.perf_counter()
-        out = eng.query_batch(q)
-        dt = time.perf_counter() - t0
-        print(f"FQ-SD: {args.queries} queries in {dt*1e3:.1f} ms "
-              f"({args.queries/dt:.1f} q/s); top1[0]={int(out.indices[0,0])}")
-        return
-    srv = RetrievalServer(eng, batch_window_s=0.0, max_batch=1)
-    lat = []
-    for res in srv.serve(Request(i, q[i]) for i in range(args.queries)):
-        lat.append(res.latency_ms)
-    lat = np.asarray(lat)
-    print(f"FD-SQ: served {srv.stats()['served']} queries  "
-          f"p50={np.percentile(lat,50):.2f}ms p99={np.percentile(lat,99):.2f}ms "
-          f"mean={lat.mean():.2f}ms")
+    sched = AdaptiveScheduler(
+        eng, policy=policy,
+        fdsq_max_batch=args.fdsq_max_batch, fqsd_min_depth=args.fqsd_min_depth,
+    )
+    reqs = bursty_requests(q, args.burst_size, args.trickle)
+    t0 = time.perf_counter()
+    n_served = sum(1 for _ in sched.serve(reqs))
+    wall = time.perf_counter() - t0
+    st = sched.stats()
+    print(f"policy={st['policy']}  served={st['served']} "
+          f"(wall {wall:.2f}s)  mode_switches={st['mode_switches']}  "
+          f"deadline_misses={st['deadline_misses']}")
+    for mode, r in st["per_plan"].items():
+        print(f"  plan={mode:<5} n={r['count']:<5} p50={r['p50_ms']:.2f}ms "
+              f"p99={r['p99_ms']:.2f}ms q/s={r['qps']:.1f} "
+              f"executors={','.join(r['executors'])}")
+    assert n_served == args.queries
 
 
 def serve_lm(args):
@@ -66,7 +74,14 @@ def main(argv=None):
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--queries", type=int, default=100)
     ap.add_argument("--partitions", type=int, default=8)
-    ap.add_argument("--fqsd", action="store_true")
+    ap.add_argument("--policy", choices=["latency", "throughput", "adaptive"],
+                    default="latency")
+    ap.add_argument("--fqsd", action="store_true",
+                    help="deprecated alias for --policy throughput")
+    ap.add_argument("--burst-size", type=int, default=64)
+    ap.add_argument("--trickle", type=int, default=8)
+    ap.add_argument("--fdsq-max-batch", type=int, default=4)
+    ap.add_argument("--fqsd-min-depth", type=int, default=32)
     ap.add_argument("--arch", default="minicpm-2b")
     args = ap.parse_args(argv)
     if args.mode == "knn":

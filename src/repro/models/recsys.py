@@ -24,6 +24,7 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.runtime.sharding import resolve, shard
+from repro import compat
 
 
 @dataclasses.dataclass(frozen=True)
@@ -90,7 +91,7 @@ class RecsysConfig:
 def embedding_lookup(table: jax.Array, ids: jax.Array) -> jax.Array:
     """ids (...,) -> (..., dim). Row-sharded tables resolve via shard-local
     masked take + psum when a `model` mesh axis is active."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     if mesh is None or mesh.empty or "model" not in mesh.axis_names:
         return jnp.take(table, ids, axis=0)
 
@@ -112,7 +113,7 @@ def embedding_lookup(table: jax.Array, ids: jax.Array) -> jax.Array:
         vals = jnp.where(ok[..., None], vals, 0)
         return lax.psum(vals, "model")
 
-    return jax.shard_map(
+    return compat.shard_map(
         local, mesh=mesh,
         in_specs=(P("model"), batch_spec), out_specs=out_spec,
         check_vma=False,

@@ -160,7 +160,9 @@ def analyze_compiled(compiled, chips: int, model_flops: float, hw: HwSpec = TPU_
     4 ways reports 2mnk/4 flops). Global = per-device x chips, matching the
     brief's `HLO_FLOPs / (chips * peak)` convention.
     """
-    cost: Mapping = compiled.cost_analysis() or {}
+    from repro import compat
+
+    cost: Mapping = compat.cost_analysis(compiled)
     flops = float(cost.get("flops", 0.0)) * chips
     byts = float(cost.get("bytes accessed", 0.0)) * chips
     hlo = compiled.as_text()

@@ -1,5 +1,14 @@
-"""Online serving: kNN retrieval service (FD-SQ) and LM decode server."""
-from repro.serving.retrieval import RetrievalServer, Request, Result
+"""Online serving: adaptive FD-SQ/FQ-SD retrieval scheduler and LM decode."""
+from repro.serving.retrieval import (
+    AdaptiveScheduler,
+    Request,
+    Result,
+    RetrievalServer,
+    bursty_requests,
+)
 from repro.serving.lm import DecodeServer
 
-__all__ = ["RetrievalServer", "Request", "Result", "DecodeServer"]
+__all__ = [
+    "AdaptiveScheduler", "RetrievalServer", "Request", "Result",
+    "DecodeServer", "bursty_requests",
+]

@@ -1,23 +1,42 @@
-"""Online kNN retrieval service — the paper's FD-SQ deployment shape.
+"""Online kNN retrieval service — one adaptive FD-SQ / FQ-SD scheduler.
 
-Requests arrive as a stream (paper fig. 2 arrow 3); the server answers them
-through the engine's latency path, optionally micro-batching requests that
-arrive within `batch_window_s` (the paper's RQ3 trade-off: larger windows
-raise throughput, the FD-SQ fan-out keeps per-query latency flat).
+The paper's RQ3 trade-off (FD-SQ keeps per-query latency flat, FQ-SD
+maximizes queries/s) used to be a constructor argument of the engine; here
+it is a *runtime policy*. :class:`AdaptiveScheduler` watches queue depth
+and per-request deadline budget and routes every batch through a plan from
+the engine's planner:
 
-In-process simulation of the deployment: a real cluster fronts this with an
-RPC layer, but admission, micro-batching, deadline accounting, and the
-engine calls are exactly these.
+    small / urgent batches  -> FD-SQ plan (partition fan-out, low latency)
+    deep backlogs           -> FQ-SD plan (streaming queue scan, throughput)
+
+Because the executor layer caches compiled executables per plan (see
+``repro.core.executors``), flipping between the two logical configurations
+per batch costs nothing after the first compile of each — the paper's "two
+logical configurations, one physical configuration, no reflashing".
+
+Requests arrive as a stream (paper fig. 2 arrow 3) carrying simulated
+``arrival_s`` stamps; ``serve`` runs a discrete-event loop: admission by
+arrival time, one scheduling decision per dispatch, real measured service
+times. A real cluster fronts this with an RPC layer, but admission,
+scheduling, deadline accounting, and the engine calls are exactly these.
+
+:class:`RetrievalServer` (the previous FD-SQ-only micro-batching server)
+remains as the latency-policy specialization with its historical
+window/max-batch semantics.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Iterable, Iterator
+from collections import deque
+from typing import Iterable, Iterator, Literal
 
 import numpy as np
 
 from repro.core.engine import ExactKNN
+from repro.core.partition import next_pow2
+
+Policy = Literal["latency", "throughput", "adaptive"]
 
 
 @dataclasses.dataclass
@@ -35,37 +54,228 @@ class Result:
     scores: np.ndarray
     latency_ms: float
     batched: int  # how many requests shared the execution
+    mode: str = "fdsq"  # logical configuration that served it
+    executor: str = ""  # physical executor the plan selected
 
 
-class RetrievalServer:
+def bursty_requests(
+    vectors,
+    burst_size: int = 64,
+    trickle: int = 8,
+    burst_gap_s: float = 0.25,
+    trickle_gap_s: float = 0.02,
+):
+    """Deterministic bursty arrival trace over `vectors` (one Request per
+    row): a dense burst (all requests stamped with one arrival time), then
+    `trickle` sparse arrivals, repeated — the workload shape the adaptive
+    policy exists for."""
+    if burst_size < 1 and trickle < 1:
+        raise ValueError("burst_size and trickle cannot both be < 1")
+    m = len(vectors)
+    t, i = 0.0, 0
+    while i < m:
+        for _ in range(min(burst_size, m - i)):
+            yield Request(i, vectors[i], arrival_s=t)
+            i += 1
+        t += burst_gap_s
+        for _ in range(min(trickle, m - i)):
+            yield Request(i, vectors[i], arrival_s=t)
+            i += 1
+            t += trickle_gap_s
+        t += trickle_gap_s
+
+
+
+
+class AdaptiveScheduler:
+    """Route batches through FD-SQ or FQ-SD plans by queue state.
+
+    policy:
+        "latency"     every dispatch is an FD-SQ plan (micro-batches of at
+                      most `fdsq_max_batch`);
+        "throughput"  every dispatch is an FQ-SD plan (batches up to
+                      `max_batch`);
+        "adaptive"    FQ-SD when the backlog is at least `fqsd_min_depth`
+                      deep AND no pending request's remaining deadline
+                      budget is tighter than the expected FQ-SD service
+                      time x `deadline_slack`; FD-SQ otherwise.
+    """
+
+    def __init__(
+        self,
+        engine: ExactKNN,
+        policy: Policy = "adaptive",
+        fdsq_max_batch: int = 4,
+        fqsd_min_depth: int = 32,
+        max_batch: int = 256,
+        deadline_slack: float = 2.0,
+    ):
+        if engine._ds is None:
+            raise ValueError("engine must be fit() before serving")
+        if policy not in ("latency", "throughput", "adaptive"):
+            raise ValueError(f"unknown policy {policy!r}")
+        self.engine = engine
+        self.policy: Policy = policy
+        self.fdsq_max_batch = int(fdsq_max_batch)
+        self.fqsd_min_depth = int(fqsd_min_depth)
+        self.max_batch = int(max_batch)
+        self.deadline_slack = float(deadline_slack)
+        self.served = 0
+        self.deadline_misses = 0
+        self._lat_ms: dict[str, list[float]] = {"fdsq": [], "fqsd": []}
+        self._svc_s: dict[str, float] = {"fdsq": 0.0, "fqsd": 0.0}
+        self._count: dict[str, int] = {"fdsq": 0, "fqsd": 0}
+        self._ema_s: dict[str, float | None] = {"fdsq": None, "fqsd": None}
+        self._switches = 0
+        self._last_mode: str | None = None
+        self._executors: dict[str, set] = {"fdsq": set(), "fqsd": set()}
+
+    # ------------------------------------------------------------ decisions
+    def _expected_service_s(self, mode: str) -> float:
+        est = self._ema_s[mode]
+        return est if est is not None else 1e-3
+
+    def choose_mode(self, pending: "deque[Request]", clock_s: float) -> str:
+        """One scheduling decision — pure function of queue state + policy."""
+        if self.policy == "latency":
+            return "fdsq"
+        if self.policy == "throughput":
+            return "fqsd"
+        budget_s = self._expected_service_s("fqsd") * self.deadline_slack
+        for r in pending:
+            if r.deadline_ms is None:
+                continue
+            remaining_s = r.deadline_ms / 1e3 - (clock_s - r.arrival_s)
+            if remaining_s < budget_s:
+                return "fdsq"  # urgent: the deep scan would blow the deadline
+        if len(pending) >= self.fqsd_min_depth:
+            return "fqsd"  # deep backlog: amortize over the streaming scan
+        return "fdsq"
+
+    # ------------------------------------------------------------ execution
+    def _execute(
+        self, reqs: list[Request], mode: str, clock_s: float | None
+    ) -> tuple[list[Result], float]:
+        """Run one batch through the chosen plan; returns results + svc time.
+
+        `clock_s=None` means wall-clock mode (no simulated arrival times):
+        per-request latency is the service time alone, matching the
+        historical RetrievalServer accounting.
+
+        The stacked batch is padded up to the next power of two before it
+        reaches the engine, so arbitrary queue depths resolve to at most
+        log2(max_batch) distinct plans — without it every new depth would
+        compile a fresh executable in the serving hot path, violating the
+        no-reflashing property the scheduler exists to exploit.
+        """
+        t0 = time.perf_counter()
+        q = np.stack([r.vector for r in reqs])
+        b = len(reqs)
+        b_pad = next_pow2(b)
+        if b_pad > b:  # zero rows: row-independent scoring, results sliced off
+            q = np.concatenate([q, np.zeros((b_pad - b, q.shape[1]), q.dtype)])
+        out = self.engine.query(q) if mode == "fdsq" else self.engine.query_batch(q)
+        scores = np.asarray(out.scores)[:b]  # forces execution (device sync)
+        indices = np.asarray(out.indices)[:b]
+        dt_s = time.perf_counter() - t0
+
+        plan = self.engine.plans[-1]
+        self._executors[mode].add(plan.executor)
+        if self._last_mode is not None and mode != self._last_mode:
+            self._switches += 1
+        self._last_mode = mode
+        ema = self._ema_s[mode]
+        self._ema_s[mode] = dt_s if ema is None else 0.7 * ema + 0.3 * dt_s
+        self._svc_s[mode] += dt_s
+        self._count[mode] += len(reqs)
+
+        results = []
+        for i, r in enumerate(reqs):
+            if clock_s is None:  # wall-clock mode: service time only
+                lat_ms = dt_s * 1e3
+            else:
+                lat_ms = (clock_s + dt_s - r.arrival_s) * 1e3  # queueing + service
+            if r.deadline_ms is not None and lat_ms > r.deadline_ms:
+                self.deadline_misses += 1
+            self._lat_ms[mode].append(lat_ms)
+            results.append(
+                Result(r.rid, indices[i], scores[i], lat_ms, len(reqs),
+                       mode=mode, executor=plan.executor)
+            )
+        self.served += len(reqs)
+        return results, dt_s
+
+    # -------------------------------------------------------------- serving
+    def serve(self, requests: Iterable[Request]) -> Iterator[Result]:
+        """Discrete-event loop over an arrival stream (sorted by arrival_s).
+
+        The clock starts at the first arrival, advances by measured service
+        time per dispatch, and jumps forward over idle gaps. Each iteration
+        admits everything that has arrived, makes ONE mode decision, and
+        dispatches one batch.
+        """
+        stream = iter(requests)
+        pending: deque[Request] = deque()
+        nxt = next(stream, None)
+        clock = nxt.arrival_s if nxt is not None else 0.0
+        while nxt is not None or pending:
+            while nxt is not None and nxt.arrival_s <= clock + 1e-12:
+                pending.append(nxt)
+                nxt = next(stream, None)
+            if not pending:
+                clock = nxt.arrival_s  # idle until the next arrival
+                continue
+            mode = self.choose_mode(pending, clock)
+            take = self.fdsq_max_batch if mode == "fdsq" else self.max_batch
+            reqs = [pending.popleft() for _ in range(min(take, len(pending)))]
+            results, dt_s = self._execute(reqs, mode, clock)
+            clock += dt_s
+            yield from results
+
+    # ---------------------------------------------------------------- stats
+    def stats(self) -> dict:
+        per_plan = {}
+        for mode in ("fdsq", "fqsd"):
+            lat = np.asarray(self._lat_ms[mode])
+            if len(lat) == 0:
+                continue
+            svc = self._svc_s[mode]
+            per_plan[mode] = {
+                "count": int(self._count[mode]),
+                "p50_ms": float(np.percentile(lat, 50)),
+                "p99_ms": float(np.percentile(lat, 99)),
+                "qps": float(self._count[mode] / svc) if svc > 0 else float("inf"),
+                "executors": sorted(self._executors[mode]),
+            }
+        return {
+            "served": self.served,
+            "deadline_misses": self.deadline_misses,
+            "policy": self.policy,
+            "mode_switches": self._switches,
+            "per_plan": per_plan,
+        }
+
+
+class RetrievalServer(AdaptiveScheduler):
+    """Historical FD-SQ-only micro-batching server (latency policy).
+
+    Preserves the original semantics: requests are taken in arrival order,
+    flushed when `max_batch` pile up or the batching window expires, and
+    every flush runs the engine's FD-SQ latency path. New deployments
+    should construct :class:`AdaptiveScheduler` directly.
+    """
+
     def __init__(
         self,
         engine: ExactKNN,
         batch_window_s: float = 0.0,
         max_batch: int = 16,
     ):
-        if engine._ds is None:
-            raise ValueError("engine must be fit() before serving")
-        self.engine = engine
+        super().__init__(
+            engine, policy="latency", fdsq_max_batch=max_batch,
+            max_batch=max_batch,
+        )
         self.batch_window_s = batch_window_s
-        self.max_batch = max_batch
-        self.served = 0
-        self.deadline_misses = 0
-
-    def _execute(self, reqs: list[Request]) -> list[Result]:
-        t0 = time.perf_counter()
-        q = np.stack([r.vector for r in reqs])
-        out = self.engine.query(q)  # FD-SQ latency path
-        scores = np.asarray(out.scores)
-        indices = np.asarray(out.indices)
-        dt_ms = (time.perf_counter() - t0) * 1e3
-        results = []
-        for i, r in enumerate(reqs):
-            if r.deadline_ms is not None and dt_ms > r.deadline_ms:
-                self.deadline_misses += 1
-            results.append(Result(r.rid, indices[i], scores[i], dt_ms, len(reqs)))
-        self.served += len(reqs)
-        return results
 
     def serve(self, requests: Iterable[Request]) -> Iterator[Result]:
         """Consume an arrival stream; flush on window expiry or max_batch."""
@@ -79,10 +289,9 @@ class RetrievalServer:
                 or (time.perf_counter() - window_open) >= self.batch_window_s
             )
             if len(pending) >= self.max_batch or window_expired:
-                yield from self._execute(pending)
+                results, _ = self._execute(pending, "fdsq", clock_s=None)
+                yield from results
                 pending, window_open = [], None
         if pending:
-            yield from self._execute(pending)
-
-    def stats(self) -> dict:
-        return {"served": self.served, "deadline_misses": self.deadline_misses}
+            results, _ = self._execute(pending, "fdsq", clock_s=None)
+            yield from results

@@ -11,7 +11,10 @@ Invariants of the kNN queue semantics (paper section 3.3):
 """
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis", reason="pip install -r requirements-dev.txt")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (
     empty_topk,

@@ -1,0 +1,154 @@
+"""AdaptiveScheduler: policy routing, deadline urgency, and executable reuse
+across runtime mode switches (the serving half of the planner/executor PR)."""
+from collections import deque
+
+import numpy as np
+import pytest
+
+from repro.core import ExactKNN, cache_info, clear_executable_cache
+from repro.serving import AdaptiveScheduler, Request, RetrievalServer, bursty_requests
+
+
+@pytest.fixture
+def engine():
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((2000, 32)).astype(np.float32)
+    return ExactKNN(k=5, n_partitions=4).fit(x)
+
+
+def _vec(rng):
+    return rng.standard_normal(32).astype(np.float32)
+
+
+def bursty_trace(rng, burst=40, trickle=6, gap_s=10.0):
+    """One dense burst at t=0, then sparse arrivals far apart."""
+    reqs = [Request(i, _vec(rng), arrival_s=0.0) for i in range(burst)]
+    for j in range(trickle):
+        reqs.append(Request(burst + j, _vec(rng), arrival_s=gap_s * (j + 1)))
+    return reqs
+
+
+class TestPolicies:
+    def test_latency_policy_only_fdsq(self, engine):
+        rng = np.random.default_rng(1)
+        s = AdaptiveScheduler(engine, policy="latency", fdsq_max_batch=4)
+        results = list(s.serve(bursty_trace(rng)))
+        assert {r.mode for r in results} == {"fdsq"}
+        assert all(r.batched <= 4 for r in results)
+
+    def test_throughput_policy_only_fqsd(self, engine):
+        rng = np.random.default_rng(2)
+        s = AdaptiveScheduler(engine, policy="throughput")
+        results = list(s.serve(bursty_trace(rng)))
+        assert {r.mode for r in results} == {"fqsd"}
+
+    def test_adaptive_switches_modes(self, engine):
+        """Burst of 40 >= fqsd_min_depth -> FQ-SD plan; the 10s-spaced
+        trickle arrives into an empty queue -> FD-SQ plan."""
+        rng = np.random.default_rng(3)
+        s = AdaptiveScheduler(engine, policy="adaptive", fqsd_min_depth=32)
+        results = list(s.serve(bursty_trace(rng)))
+        modes = {r.mode for r in results}
+        assert modes == {"fdsq", "fqsd"}
+        # the burst went through the throughput plan, the trickle did not
+        assert all(r.mode == "fqsd" for r in results if r.rid < 40)
+        assert all(r.mode == "fdsq" for r in results if r.rid >= 40)
+        st = s.stats()
+        assert st["mode_switches"] >= 1
+        assert set(st["per_plan"]) == {"fdsq", "fqsd"}
+        assert st["per_plan"]["fqsd"]["executors"] == ["fqsd-xla"]
+        assert st["served"] == 46 and len(results) == 46
+
+    def test_results_are_exact(self, engine):
+        """Scheduling must not change answers: dataset rows find themselves."""
+        rng = np.random.default_rng(4)
+        x = np.asarray(engine._ds.vectors)[:40, :32]
+        reqs = [Request(i, x[i], arrival_s=0.0) for i in range(40)]
+        s = AdaptiveScheduler(engine, policy="adaptive", fqsd_min_depth=32)
+        for r in s.serve(iter(reqs)):
+            assert int(r.indices[0]) == r.rid
+
+    def test_unknown_policy_rejected(self, engine):
+        with pytest.raises(ValueError):
+            AdaptiveScheduler(engine, policy="bursty")
+
+
+class TestDeadlines:
+    def test_tight_deadline_forces_fdsq(self, engine):
+        s = AdaptiveScheduler(engine, policy="adaptive", fqsd_min_depth=2)
+        s._ema_s["fqsd"] = 0.5  # pretend the deep scan takes 500ms
+        rng = np.random.default_rng(5)
+        pending = deque(
+            Request(i, _vec(rng), arrival_s=0.0, deadline_ms=100.0)
+            for i in range(64)
+        )
+        assert s.choose_mode(pending, clock_s=0.0) == "fdsq"
+
+    def test_loose_deadline_allows_fqsd(self, engine):
+        s = AdaptiveScheduler(engine, policy="adaptive", fqsd_min_depth=2)
+        s._ema_s["fqsd"] = 0.001
+        rng = np.random.default_rng(6)
+        pending = deque(
+            Request(i, _vec(rng), arrival_s=0.0, deadline_ms=60_000.0)
+            for i in range(64)
+        )
+        assert s.choose_mode(pending, clock_s=0.0) == "fqsd"
+
+
+class TestBatchBucketing:
+    def test_arbitrary_depths_bound_executables(self, engine):
+        """Queue depth at dispatch time is arbitrary; batches are padded to
+        power-of-two buckets so compiles stay O(log max_batch), not O(depth)."""
+        rng = np.random.default_rng(8)
+        s = AdaptiveScheduler(engine, policy="throughput")
+        clear_executable_cache()
+        for depth in (3, 5, 6, 7):  # four odd depths, all bucket to 4 or 8
+            reqs = [Request(i, _vec(rng), arrival_s=0.0) for i in range(depth)]
+            results = list(s.serve(iter(reqs)))
+            assert len(results) == depth  # padding rows never leak out
+        assert cache_info()["misses"] == 2  # buckets {4, 8}, nothing per-depth
+        assert {p.m for p in engine.plans[-4:]} == {4, 8}
+
+    def test_padded_rows_do_not_change_answers(self, engine):
+        rng = np.random.default_rng(9)
+        x = np.asarray(engine._ds.vectors)[:5, :32]
+        reqs = [Request(i, x[i], arrival_s=0.0) for i in range(5)]  # pads to 8
+        s = AdaptiveScheduler(engine, policy="throughput")
+        for r in s.serve(iter(reqs)):
+            assert int(r.indices[0]) == r.rid
+
+
+class TestRetrievalServerCompat:
+    def test_wall_clock_latency_ignores_arrival_stamps(self, engine):
+        """Legacy server accounts service time only; arrival_s stamps (used
+        by the simulated-clock scheduler) must not produce negative
+        latencies or suppress deadline misses."""
+        rng = np.random.default_rng(10)
+        srv = RetrievalServer(engine, batch_window_s=0.0, max_batch=1)
+        reqs = [Request(i, _vec(rng), arrival_s=5.0, deadline_ms=1e-6)
+                for i in range(3)]
+        results = list(srv.serve(iter(reqs)))
+        assert all(r.latency_ms > 0 for r in results)
+        assert srv.stats()["deadline_misses"] == 3
+
+
+def test_bursty_requests_rejects_degenerate_params():
+    with pytest.raises(ValueError):
+        next(bursty_requests(np.zeros((4, 8), np.float32), 0, 0))
+
+
+class TestNoReflashingUnderScheduling:
+    def test_mode_switches_hit_executable_cache(self, engine):
+        """Serving the same bursty trace twice: the second pass switches
+        modes just as often but compiles nothing new."""
+        rng = np.random.default_rng(7)
+        trace = bursty_trace(rng)
+        s = AdaptiveScheduler(engine, policy="adaptive", fqsd_min_depth=32)
+        clear_executable_cache()
+        list(s.serve(iter(trace)))
+        first = cache_info()
+        assert first["misses"] >= 2  # at least one per logical config
+        list(s.serve(iter(trace)))
+        second = cache_info()
+        assert second["misses"] == first["misses"]  # no recompile on switches
+        assert second["hits"] > first["hits"]
