@@ -8,6 +8,8 @@ labeled as such. TDP constants: repro.roofline.hw.
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 from typing import Callable
 
@@ -16,16 +18,56 @@ import jax
 from repro.roofline.hw import XEON_E5_2683V4_WATTS
 
 ROWS: list[str] = []
+#: structured mirror of ROWS, keyed by section ("table2", "store", ...) —
+#: what run.py serializes to BENCH_<section>.json so the perf trajectory
+#: is machine-readable across PRs.
+RESULTS: dict[str, list[dict]] = {}
+
+BENCH_SCHEMA_VERSION = 1
 
 
-def emit(name: str, us_per_call: float, derived: str = ""):
+def emit(name: str, us_per_call: float, derived: str = "", **extra):
+    """CSV row to stdout + structured row into RESULTS.
+
+    `name` is "<section>/<case>"; extra kwargs (qps, p50_ms, p99_ms,
+    bytes_scanned, tier, ...) only land in the JSON side so the CSV stays
+    backwards-compatible.
+    """
     row = f"{name},{us_per_call:.1f},{derived}"
     ROWS.append(row)
+    section = name.split("/", 1)[0]
+    RESULTS.setdefault(section, []).append(
+        {"name": name, "us_per_call": us_per_call, "derived": derived, **extra}
+    )
     print(row, flush=True)
+
+
+def write_json(out_dir: str, quick: bool = False) -> list[str]:
+    """Write one BENCH_<section>.json per emitted section; returns paths."""
+    os.makedirs(out_dir, exist_ok=True)
+    paths = []
+    for section, rows in RESULTS.items():
+        payload = {
+            "schema_version": BENCH_SCHEMA_VERSION,
+            "section": section,
+            "quick": bool(quick),
+            "rows": rows,
+        }
+        path = os.path.join(out_dir, f"BENCH_{section}.json")
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=2)
+        paths.append(path)
+    return paths
 
 
 def timeit(fn: Callable, *args, repeats: int = 3, warmup: int = 1) -> float:
     """Median wall seconds per call (blocks on async dispatch)."""
+    times = time_samples(fn, *args, repeats=repeats, warmup=warmup)
+    return times[len(times) // 2]
+
+
+def time_samples(fn: Callable, *args, repeats: int = 3, warmup: int = 1) -> list[float]:
+    """Sorted wall seconds per call (for p50/p99 percentile reporting)."""
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
     times = []
@@ -34,7 +76,7 @@ def timeit(fn: Callable, *args, repeats: int = 3, warmup: int = 1) -> float:
         jax.block_until_ready(fn(*args))
         times.append(time.perf_counter() - t0)
     times.sort()
-    return times[len(times) // 2]
+    return times
 
 
 def energy_j(seconds: float, watts: float = XEON_E5_2683V4_WATTS) -> float:

@@ -1,12 +1,17 @@
 """Benchmark harness entry point — one section per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--quick]
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--json-dir DIR]
 
 Emits ``name,us_per_call,derived`` CSV rows (stdout), matching:
     table2/*     paper Table 2  (latency / throughput / energy, 3 datasets)
     table3/*     paper Table 3  (cutoff k vs parallelism trade-off)
     chipknn/*    section 4.6    (GB/s vs dimension, CHIP-KNN comparison)
     roofline/*   EXPERIMENTS.md Roofline (from dry-run artifacts)
+    store/*      DatasetStore tiers (f32 / int8 / mmap-streamed)
+
+Every section additionally lands as machine-readable
+``<json-dir>/BENCH_<section>.json`` (qps, p50/p99, bytes scanned per tier,
+certification rate) so the perf trajectory is trackable across PRs.
 """
 from __future__ import annotations
 
@@ -19,16 +24,20 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="reduced sizes")
     ap.add_argument("--only", default=None,
-                    help="comma-separated subset: table2,table3,chipknn,roofline")
+                    help="comma-separated subset: table2,table3,chipknn,"
+                         "roofline,store")
+    ap.add_argument("--json-dir", default="artifacts/bench",
+                    help="directory for BENCH_<section>.json outputs")
     args = ap.parse_args(argv)
 
-    from benchmarks import chipknn, roofline_table, table2, table3
+    from benchmarks import chipknn, common, roofline_table, store_bench, table2, table3
 
     sections = {
         "table2": table2.run,
         "table3": table3.run,
         "chipknn": chipknn.run,
         "roofline": roofline_table.run,
+        "store": store_bench.run,
     }
     chosen = (args.only.split(",") if args.only else list(sections))
     print("name,us_per_call,derived")
@@ -40,6 +49,8 @@ def main(argv=None) -> int:
             failures += 1
             traceback.print_exc()
             print(f"{name},0,ERROR", flush=True)
+    for path in common.write_json(args.json_dir, quick=args.quick):
+        print(f"# wrote {path}", file=sys.stderr)
     return failures
 
 

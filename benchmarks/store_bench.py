@@ -1,0 +1,65 @@
+"""Storage-tier benchmark: f32 resident vs int8 resident vs mmap-streamed.
+
+The paper's section 5 names quantization as the FQ-SD throughput lever and
+section 3.3 streams partitions when the dataset outgrows device memory;
+this section measures both levers of the DatasetStore against the exact
+f32 baseline on one batch shape, reporting the serving-relevant numbers
+(qps, p50/p99 per call, dataset bytes moved per scan) into BENCH_store.json.
+"""
+from __future__ import annotations
+
+import tempfile
+
+import numpy as np
+
+from benchmarks.common import emit, time_samples
+from repro.core import ExactKNN
+from repro.store import DatasetStore
+
+K = 10
+M = 64  # query batch (amortizes each dataset pass, the FQ-SD regime)
+REPEATS = 7
+
+
+def _pcts(times: list[float]) -> tuple[float, float, float]:
+    arr = np.asarray(times)
+    return (float(np.percentile(arr, 50) * 1e6),
+            float(np.percentile(arr, 99) * 1e6),
+            float(M / np.median(arr)))
+
+
+def run(quick: bool = False) -> None:
+    n, d = (8192, 128) if quick else (65536, 128)
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    q = rng.standard_normal((M, d)).astype(np.float32)
+
+    # --- exact f32 resident baseline ------------------------------------
+    eng = ExactKNN(k=K).fit(x)
+    t = time_samples(eng.query_batch, q, repeats=REPEATS)
+    p50, p99, qps = _pcts(t)
+    f32_bytes = eng.store.nbytes("f32")
+    emit("store/f32_resident", p50, f"qps={qps:.0f}",
+         tier="f32", qps=qps, p50_us=p50, p99_us=p99,
+         bytes_scanned=f32_bytes, n=n, d=d, m=M, k=K)
+
+    # --- int8 resident tier (certified exact rescore) -------------------
+    eng.enable_int8()
+    t = time_samples(eng.query_batch_int8, q, repeats=REPEATS)
+    p50, p99, qps = _pcts(t)
+    cert = float(np.asarray(eng.last_certificate).mean())
+    emit("store/int8_resident", p50, f"qps={qps:.0f};certified={cert:.3f}",
+         tier="int8", qps=qps, p50_us=p50, p99_us=p99,
+         bytes_scanned=eng.store.nbytes("int8"), certified_exact=cert,
+         n=n, d=d, m=M, k=K)
+
+    # --- out-of-core mmap-streamed scan ---------------------------------
+    with tempfile.TemporaryDirectory() as tmp:
+        store = DatasetStore.from_array(x, rows_per_shard=n // 8, directory=tmp)
+        oeng = ExactKNN(k=K, device_budget_bytes=1).fit_store(store)
+        t = time_samples(oeng.query_batch, q, repeats=max(2, REPEATS // 2))
+        p50, p99, qps = _pcts(t)
+        emit("store/mmap_streamed", p50, f"qps={qps:.0f};shards={store.n_shards}",
+             tier="f32", qps=qps, p50_us=p50, p99_us=p99,
+             bytes_scanned=store.nbytes("f32"), n_shards=store.n_shards,
+             n=n, d=d, m=M, k=K)

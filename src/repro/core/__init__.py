@@ -21,7 +21,9 @@ from repro.core.distance import (
 from repro.core.engine import ExactKNN
 from repro.core.executors import (
     ExecContext,
+    TieredResident,
     cache_info,
+    cached_partition_step,
     clear_executable_cache,
     execute,
     get_executor,
@@ -31,6 +33,7 @@ from repro.core.executors import (
 from repro.core.fdsq import fdsq_query_stream, fdsq_search
 from repro.core.planner import (
     DatasetMeta,
+    DatasetStoreMeta,
     EngineConfig,
     EnginePlan,
     ExecutionPlan,
@@ -54,9 +57,11 @@ from repro.core.topk import (
 
 __all__ = [
     "ExactKNN", "EnginePlan", "ExecutionPlan", "TopK",
-    "plan", "DatasetMeta", "EngineConfig", "largest_divisor_at_most",
+    "plan", "DatasetMeta", "DatasetStoreMeta", "EngineConfig",
+    "largest_divisor_at_most",
     "execute", "register_executor", "get_executor", "list_executors",
     "cache_info", "clear_executable_cache", "ExecContext",
+    "TieredResident", "cached_partition_step",
     "fqsd_scan", "fqsd_streamed", "fdsq_search", "fdsq_query_stream",
     "fdsq_sharded", "fqsd_sharded", "fqsd_ring", "shard_dataset",
     "pairwise_scores", "l2_sq", "inner_product", "cosine_distance",

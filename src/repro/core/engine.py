@@ -1,34 +1,44 @@
-"""ExactKNN — thin facade over the planner/executor core.
+"""ExactKNN — thin facade over the store + planner/executor core.
 
 Architecture (one PR of the paper's fig. 1 / fig. 2 made explicit):
 
-    ExactKNN (this module)          facade: owns the padded dataset + config
-        -> planner.plan(...)        PURE: shapes + config -> ExecutionPlan
+    ExactKNN (this module)          facade: owns config + device views only
+        -> repro.store.DatasetStore dataset layer: manifest of tiered shards
+                                    (f32 / int8, in-memory or mmap files),
+                                    online upsert/delete (delta + tombstones)
+        -> planner.plan(...)        PURE: shapes + store meta -> ExecutionPlan
         -> executors.execute(...)   registry: plan -> compiled executable
              fdsq-xla / fqsd-xla / fdsq-pallas / fqsd-streamed /
-             fdsq-sharded / fqsd-sharded
-        -> serving.AdaptiveScheduler   picks FD-SQ vs FQ-SD plans per batch
+             fqsd-mmap-streamed / fqsd-int8 / fdsq-sharded / fqsd-sharded
+        -> serving.AdaptiveScheduler   picks FD-SQ vs FQ-SD plans per batch,
+                                       routes deep backlogs to the int8 tier
 
 One engine object plays the role of the single physical FPGA configuration:
 FD-SQ and FQ-SD are *logical* configurations over the same compiled building
 blocks, and the executor layer caches every compiled executable keyed by
 plan, so switching modes at run time never recompiles for shapes already
 seen — the paper's "no reflashing" invariant (section 3.2), testable via
-``repro.core.executors.cache_info()``.
+``repro.core.executors.cache_info()``. Dataset mutations preserve it too:
+tombstones ride the norms channel (runtime data, not shapes) and upserts
+land in fixed-geometry delta shards.
 
 Usage:
     eng = ExactKNN(k=10, metric="l2")
     eng.fit(dataset)                       # FD-SQ: resident dataset
     res = eng.query(q)                     # latency path  (fdsq plan)
     res = eng.query_batch(Q)               # throughput    (fqsd plan)
-    res = eng.search_streamed(Q, host_it)  # dataset > device memory
+    eng.enable_int8()
+    res = eng.query_batch_int8(Q)          # 1 B/elem scan, exact rescore
+    ids = eng.upsert(new_rows)             # visible to the next query
+    eng.delete(ids[:1])                    # ditto; still exact
     eng.plans                              # every ExecutionPlan executed
 
-Distributed (mesh) usage routes to the sharded executors; Pallas-fused
-kernels are selected with backend="pallas" (validated in interpret mode on
-CPU, compiled for TPU MXU/VMEM on hardware). Mode selection itself lives in
-``repro.core.planner`` — this class contains no ``if mesh`` / ``if backend``
-dispatch of its own.
+Out-of-core: ``ExactKNN(..., device_budget_bytes=B).fit_store(store)`` with
+an mmap-backed store bigger than B routes every query through the
+manifest-driven streamed executor. Distributed (mesh) usage routes to the
+sharded executors; Pallas-fused kernels are selected with backend="pallas".
+Mode selection itself lives in ``repro.core.planner`` — this class contains
+no ``if mesh`` / ``if backend`` dispatch of its own.
 """
 from __future__ import annotations
 
@@ -41,7 +51,12 @@ import numpy as np
 from repro.core import partition as part
 from repro.core import sharded as sh
 from repro.core.distance import Metric, validate_metric
-from repro.core.executors import ExecContext, execute
+from repro.core.executors import (
+    ExecContext,
+    TieredResident,
+    cached_partition_step,
+    execute,
+)
 from repro.core.planner import (
     Backend,
     DatasetMeta,
@@ -50,6 +65,7 @@ from repro.core.planner import (
     ExecutionPlan,
     plan as plan_fn,
 )
+from repro.core.quantized import QuantizedDataset
 from repro.core.topk import TopK
 
 
@@ -64,6 +80,8 @@ class ExactKNN:
         mesh: jax.sharding.Mesh | None = None,
         mesh_axes: Sequence[str] = ("data", "model"),
         dtype=jnp.float32,
+        rescore_factor: int = 4,
+        device_budget_bytes: int | None = None,
     ):
         validate_metric(metric)
         if k < 1:
@@ -76,23 +94,65 @@ class ExactKNN:
         self.mesh = mesh
         self.mesh_axes = tuple(mesh_axes)
         self.dtype = dtype
-        self._ds: part.PaddedDataset | None = None
+        self.rescore_factor = int(rescore_factor)
+        self.device_budget_bytes = device_budget_bytes
+        self._store = None  # repro.store.DatasetStore
+        self._resident = True
+        self._ds: part.PaddedDataset | None = None  # device f32 view
+        self._int8: QuantizedDataset | None = None  # device int8 view
+        self._delta_dev: list[part.PaddedDataset] = []  # device delta shards
+        self._seen_mutations = 0
         self._plans: list[ExecutionPlan] = []
+        self._last_ctx: ExecContext | None = None
 
     # ------------------------------------------------------------------ fit
     def fit(self, vectors: np.ndarray | jax.Array) -> "ExactKNN":
-        """Load the dataset device-resident (FD-SQ, fig. 2 arrow 1)."""
-        v = jnp.asarray(vectors, dtype=self.dtype)
+        """Load the dataset device-resident (FD-SQ, fig. 2 arrow 1).
+
+        Thin wrapper: builds a single-shard in-memory DatasetStore and
+        attaches it. Use :meth:`fit_store` to attach a prebuilt (possibly
+        mmap-backed, multi-shard, multi-tier) store directly.
+        """
+        from repro.store import DatasetStore
+
+        v = np.asarray(vectors, dtype=np.float32)
         if v.ndim != 2:
             raise ValueError(f"expected (N, d) dataset, got {v.shape}")
-        row_mult = self._row_mult(v.shape[0])
-        padded = part.make_padded(v, row_mult=row_mult, dim_mult=part.LANE)
-        if self.mesh is not None:
-            vec, nrm = sh.shard_dataset(
-                self.mesh, padded.vectors, padded.norms, self.mesh_axes
+        store = DatasetStore.from_array(v, row_mult=self._row_mult(v.shape[0]))
+        return self.fit_store(store)
+
+    def fit_store(self, store, resident: bool | None = None) -> "ExactKNN":
+        """Attach a DatasetStore. Residency: explicit `resident` flag, else
+        the store's f32 bytes vs `device_budget_bytes` (None = unlimited).
+        Non-resident stores serve every query through the manifest-driven
+        streamed executor (fqsd-mmap-streamed)."""
+        if resident is None:
+            budget = self.device_budget_bytes
+            resident = budget is None or store.nbytes("f32") <= budget
+        if self.mesh is not None and not resident:
+            raise ValueError("mesh-sharded serving requires a resident store")
+        if self.mesh is not None and store.n_delta > 0:
+            raise NotImplementedError(
+                "store holds delta rows but mesh serving cannot merge them "
+                "yet; compact the store before mesh fit_store()"
             )
-            padded = part.PaddedDataset(vec, nrm, padded.n_valid, 0)
-        self._ds = padded
+        self._store = store
+        self._resident = bool(resident)
+        self._ds = None
+        self._int8 = None
+        self._delta_dev = []
+        self._seen_mutations = store.mutation_count
+        if self._resident:
+            host = store.resident()  # tombstones already folded into norms
+            vec = jnp.asarray(host.vectors, dtype=self.dtype)
+            nrm = jnp.asarray(host.norms)
+            if self.mesh is not None:
+                vec, nrm = sh.shard_dataset(self.mesh, vec, nrm, self.mesh_axes)
+            self._ds = part.PaddedDataset(vec, nrm, host.n_valid, 0)
+            if store.has_tier("int8") and self.metric == "l2" and self.mesh is None:
+                self._refresh_int8_view()
+        if self.mesh is None:
+            self._put_delta_shards()
         return self
 
     def _row_mult(self, n: int) -> int:
@@ -106,19 +166,165 @@ class ExactKNN:
         return mult
 
     @property
+    def store(self):
+        """The attached DatasetStore (None before fit)."""
+        return self._store
+
+    @property
+    def is_fitted(self) -> bool:
+        return self._store is not None or self._ds is not None
+
+    @property
     def n(self) -> int:
         self._require_fit()
+        if self._store is not None:
+            return self._store.n_live
         return self._ds.n_valid
 
     def _require_fit(self):
-        if self._ds is None:
+        if not self.is_fitted:
             raise RuntimeError("call .fit(dataset) first")
+
+    def _padded_dim(self) -> int:
+        return (int(self._ds.vectors.shape[1]) if self._ds is not None
+                else self._store.padded_dim)
 
     def _pad_queries(self, q) -> jax.Array:
         q = jnp.asarray(q, dtype=self.dtype)
         if q.ndim == 1:
             q = q[None, :]
-        return part.pad_dim(q, self._ds.vectors.shape[1])
+        return part.pad_dim(q, self._padded_dim())
+
+    # ----------------------------------------------------------- mutation
+    def upsert(self, vectors) -> np.ndarray:
+        """Append rows under live traffic; returns their global ids.
+
+        Rows land in the store's fixed-geometry delta shards, so the next
+        query sees them exactly without any recompilation for seen shapes.
+        """
+        self._require_store_mutable()
+        ids = self._store.upsert(vectors)
+        self._sync_mutations()
+        return ids
+
+    def delete(self, ids) -> None:
+        """Tombstone rows by global id; queries exclude them immediately.
+
+        A tombstone is a +inf norm — runtime data, not a shape — so
+        compiled executables are untouched ("no reflashing" under churn).
+        """
+        self._require_store_mutable()
+        self._store.delete(ids)
+        self._sync_mutations()
+
+    def _require_store_mutable(self):
+        self._require_fit()
+        if self._store is None:
+            raise RuntimeError("engine was fitted without a DatasetStore")
+        if self.mesh is not None:
+            raise NotImplementedError(
+                "online upsert/delete on a mesh-sharded store is not "
+                "supported yet (replicated delta shards are future work)"
+            )
+
+    def _sync_mutations(self) -> None:
+        """Re-derive device views after store mutations: norms refresh in
+        place (same shapes) and delta shards are re-put; vectors and every
+        compiled executable are untouched."""
+        if self._store is None or self._store.mutation_count == self._seen_mutations:
+            return
+        if self.mesh is not None:
+            raise NotImplementedError(
+                "the attached store mutated but mesh-sharded views cannot "
+                "resync online yet; re-fit_store() the engine"
+            )
+        self._seen_mutations = self._store.mutation_count
+        if self._resident and self._ds is not None:
+            self._ds = part.PaddedDataset(
+                self._ds.vectors, jnp.asarray(self._store.resident_norms()),
+                self._ds.n_valid, 0,
+            )
+            if self._int8 is not None:
+                # only the norms channel moves on mutation; codes/scales/err
+                # were uploaded once at enable_int8()
+                self._int8 = self._int8._replace(
+                    norms_sq=jnp.asarray(self._store.int8_resident_norms())
+                )
+        self._put_delta_shards()
+
+    def _put_delta_shards(self) -> None:
+        if not self._resident:
+            # out-of-core queries re-read delta rows from store.iter_shards();
+            # a device copy would be pinned memory nothing ever consumes
+            self._delta_dev = []
+            return
+        prev = self._delta_dev
+        fresh: list[part.PaddedDataset] = []
+        for i, p in enumerate(self._store.delta_shards()):
+            if (i < len(prev)
+                    and prev[i].n_valid == prev[i].vectors.shape[0] == p.n_valid):
+                # a full shard's rows are immutable: reuse its device
+                # vectors and re-put only the (tombstone-bearing) norms
+                fresh.append(part.PaddedDataset(
+                    prev[i].vectors, jnp.asarray(p.norms), p.n_valid, p.base_index
+                ))
+            else:
+                fresh.append(part.PaddedDataset(
+                    jnp.asarray(p.vectors, dtype=self.dtype),
+                    jnp.asarray(p.norms), p.n_valid, p.base_index,
+                ))
+        self._delta_dev = fresh
+
+    def _merge_delta(self, out: TopK, queries: jax.Array) -> TopK:
+        """Fold live delta shards into a main-scan result (exact merge via
+        the shared cached partition step — compiled once per delta shape)."""
+        if not self._delta_dev:
+            return out
+        step = cached_partition_step(self.k, self.metric)
+        for p in self._delta_dev:
+            out = step(out, queries, p.vectors, p.norms,
+                       jnp.int32(p.base_index), jnp.int32(p.n_valid))
+        return out
+
+    # ---------------------------------------------------------- int8 tier
+    def enable_int8(self) -> "ExactKNN":
+        """Materialize the store's int8 tier and its device view (the
+        1 B/element scan tier the bandwidth-aware scheduler routes to)."""
+        self._require_fit()
+        if self._store is None:
+            raise RuntimeError("int8 tier requires a DatasetStore-backed fit")
+        if self.metric != "l2":
+            raise ValueError("int8 tier supports the l2 metric only")
+        if self.mesh is not None:
+            raise NotImplementedError(
+                "int8 tier on a mesh-sharded engine is not supported yet "
+                "(the planner's sharded executors read the f32 view)"
+            )
+        if not self._resident:
+            raise NotImplementedError(
+                "int8 is a resident-scan tier; streamed int8 shards are "
+                "future work"
+            )
+        self._store.ensure_tier("int8")
+        self._refresh_int8_view()
+        return self
+
+    def _refresh_int8_view(self) -> None:
+        i8 = self._store.int8_resident()
+        self._int8 = QuantizedDataset(
+            jnp.asarray(i8.q), jnp.asarray(i8.scales),
+            jnp.asarray(i8.err), jnp.asarray(i8.norms_sq),
+        )
+
+    @property
+    def has_int8(self) -> bool:
+        return self._int8 is not None
+
+    @property
+    def last_certificate(self):
+        """Per-query exactness certificate of the most recent int8 plan
+        (None when the last plan ran a non-quantized executor)."""
+        return self._last_ctx.certificate if self._last_ctx else None
 
     # ------------------------------------------------------------ planning
     def config(self) -> EngineConfig:
@@ -131,10 +337,18 @@ class ExactKNN:
             n_partitions=self.n_partitions,
             sharded=self.mesh is not None,
             mesh_axes=self.mesh_axes,
+            rescore_factor=self.rescore_factor,
         )
 
-    def dataset_meta(self) -> DatasetMeta:
+    def dataset_meta(self, tier: str = "f32") -> DatasetMeta:
+        """Planner-visible storage facts (a DatasetStoreMeta when a store
+        is attached: tier, residency, shard count — ISSUE 2 tentpole)."""
         self._require_fit()
+        if self._store is not None:
+            return self._store.meta(
+                device_resident=self._resident, tier=tier,
+                sharded=self.mesh is not None,
+            )
         return DatasetMeta(
             padded_rows=int(self._ds.vectors.shape[0]),
             padded_dim=int(self._ds.vectors.shape[1]),
@@ -142,7 +356,7 @@ class ExactKNN:
             sharded=self.mesh is not None,
         )
 
-    def plan_for(self, mode: str, m: int = 1, **kw) -> ExecutionPlan:
+    def plan_for(self, mode: str, m: int = 1, tier: str = "f32", **kw) -> ExecutionPlan:
         """Plan without executing — what `mode` with an m-row batch would run.
 
         Pure: calling this any number of times compiles nothing and returns
@@ -150,8 +364,8 @@ class ExactKNN:
         it to label / choose paths).
         """
         self._require_fit()
-        d = int(self._ds.vectors.shape[1])
-        return plan_fn((m, d), self.dataset_meta(), self.config(), mode, **kw)
+        d = self._padded_dim()
+        return plan_fn((m, d), self.dataset_meta(tier=tier), self.config(), mode, **kw)
 
     def _ctx(self, prefetch_depth: int = 2) -> ExecContext:
         return ExecContext(
@@ -160,7 +374,9 @@ class ExactKNN:
 
     def _run(self, p: ExecutionPlan, queries: jax.Array, dataset, **ctx_kw) -> TopK:
         self._plans.append(p)
-        return execute(p, queries, dataset, self._ctx(**ctx_kw))
+        ctx = self._ctx(**ctx_kw)
+        self._last_ctx = ctx
+        return execute(p, queries, dataset, ctx)
 
     @property
     def plans(self) -> list[ExecutionPlan]:
@@ -171,8 +387,12 @@ class ExactKNN:
     def query(self, q) -> TopK:
         """Low-latency path: one query (or micro-batch) vs resident dataset."""
         self._require_fit()
+        if not self._resident:
+            return self._query_store_streamed(q)
+        self._sync_mutations()
         qv = self._pad_queries(q)
-        return self._run(self.plan_for("fdsq", qv.shape[0]), qv, self._ds)
+        out = self._run(self.plan_for("fdsq", qv.shape[0]), qv, self._ds)
+        return self._merge_delta(out, qv)
 
     def query_stream(self, queries_iter: Iterable) -> Iterable[TopK]:
         """Streamed queries, one at a time (fig. 2 arrows 3-5)."""
@@ -184,8 +404,38 @@ class ExactKNN:
     def query_batch(self, queries) -> TopK:
         """Throughput path: a batch of M queries over the resident dataset."""
         self._require_fit()
+        if not self._resident:
+            return self._query_store_streamed(queries)
+        self._sync_mutations()
         qv = self._pad_queries(queries)
-        return self._run(self.plan_for("fqsd", qv.shape[0]), qv, self._ds)
+        out = self._run(self.plan_for("fqsd", qv.shape[0]), qv, self._ds)
+        return self._merge_delta(out, qv)
+
+    def query_batch_int8(self, queries) -> TopK:
+        """Throughput path through the int8 tier: 1 B/element scan with a
+        certified exact rescore (`last_certificate` holds the per-query
+        proof; uncertified rows are recomputed exactly by the executor).
+        Delta rows are merged through the exact f32 step, so mutation
+        exactness is independent of quantization."""
+        self._require_fit()
+        if self._int8 is None:
+            raise RuntimeError("int8 tier not enabled; call enable_int8() first")
+        self._sync_mutations()
+        qv = self._pad_queries(queries)
+        p = self.plan_for("fqsd", qv.shape[0], tier="int8")
+        out = self._run(p, qv, TieredResident(self._ds, self._int8))
+        return self._merge_delta(out, qv)
+
+    def _query_store_streamed(self, queries) -> TopK:
+        """Out-of-core path (both entry points collapse to one streamed
+        plan): the planner sees a non-resident store and selects the
+        manifest-driven streamed executor; the store hands the executor a
+        fresh shard scan (main + delta, tombstones applied)."""
+        self._sync_mutations()
+        qv = self._pad_queries(queries)
+        p = plan_fn(qv.shape, self.dataset_meta(), self.config(), "fqsd-streamed",
+                    stream_rows=self._store.rows_per_shard)
+        return self._run(p, qv, self._store)
 
     def search_streamed(
         self,
@@ -198,6 +448,8 @@ class ExactKNN:
 
         Queries are loaded once (arrow 1); partitions stream through the
         double buffer (arrows 3-4); results come back at the end (arrow 5).
+        Legacy iterator path — prefer `fit_store(DatasetStore.open(...))`
+        for manifest-backed datasets.
         """
         q = jnp.asarray(queries, dtype=self.dtype)
         if q.ndim == 1:

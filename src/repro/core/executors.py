@@ -17,26 +17,38 @@ accident of jit internals.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Iterable, Sequence
+from typing import Callable, Iterable, NamedTuple, Sequence
 
 import jax
+import jax.numpy as jnp
 
 from repro.core import partition as part
 from repro.core import sharded as sh
 from repro.core.fdsq import fdsq_search
 from repro.core.fqsd import fqsd_scan, fqsd_streamed, make_partition_step
 from repro.core.planner import ExecutionPlan
+from repro.core.quantized import QuantizedDataset, knn_quantized
 from repro.core.topk import TopK
 
 
 @dataclasses.dataclass
 class ExecContext:
     """Runtime state a plan cannot carry (plans are pure data): the mesh
-    handle, axis names, and host-streaming knobs."""
+    handle, axis names, and host-streaming knobs. Executors may also write
+    run observability back here (the int8 exactness certificate)."""
 
     mesh: jax.sharding.Mesh | None = None
     mesh_axes: Sequence[str] = ("data", "model")
     prefetch_depth: int = 2
+    certificate: jax.Array | None = None  # set by fqsd-int8: (m,) bool
+
+
+class TieredResident(NamedTuple):
+    """Resident dataset carrying both tiers: the exact f32 base and the
+    1 B/element int8 scan tier (what the fqsd-int8 executor consumes)."""
+
+    f32: part.PaddedDataset
+    quant: QuantizedDataset
 
 
 Executor = Callable[[ExecutionPlan, jax.Array, object, ExecContext], TopK]
@@ -109,6 +121,17 @@ def _arr_key(a: jax.Array) -> tuple:
     return (tuple(a.shape), str(a.dtype))
 
 
+def cached_partition_step(k: int, metric: str) -> Callable:
+    """The shared streamed-scan step (one partition into the queues).
+
+    One cache entry serves the host-streamed executors AND the engine's
+    delta-shard merge: every consumer of (k, metric) reuses the same step
+    wrapper, whose jit resolves each padded shard shape to one executable.
+    """
+    return _cached(("partition-step", k, metric),
+                   lambda: make_partition_step(k, metric))
+
+
 # ------------------------------------------------------------- executors
 @register_executor("fdsq-xla")
 def _fdsq_xla(plan, queries, dataset: part.PaddedDataset, ctx) -> TopK:
@@ -161,12 +184,71 @@ def _fqsd_streamed(plan, queries, dataset: Iterable[part.PaddedDataset], ctx) ->
 
     Keyed by (k, metric) only — the step's jit resolves shapes itself, so
     datasets of different total size reuse one wrapper (compiles once)."""
-    key = ("fqsd-streamed", plan.k, plan.metric)
-    step = _cached(key, lambda: make_partition_step(plan.k, plan.metric))
+    step = cached_partition_step(plan.k, plan.metric)
     return fqsd_streamed(
         queries, dataset, plan.k, plan.metric,
         prefetch_depth=ctx.prefetch_depth, step_fn=step,
     )
+
+
+@register_executor("fqsd-mmap-streamed")
+def _fqsd_mmap_streamed(plan, queries, dataset, ctx) -> TopK:
+    """Manifest-driven FQ-SD over a DatasetStore too large for the device
+    budget (out-of-core). `dataset` is the store itself (duck-typed:
+    `.iter_shards()` yields equal-geometry PaddedDataset host shards,
+    memmap-backed when the store lives on disk).
+
+    Each shard's bytes leave the disk inside the double buffer's
+    device_put, overlapped with compute on the previous shard (paper
+    section 3.3); delta shards and tombstones ride along, so results stay
+    exact under live mutation. Shares the cached partition step with
+    fqsd-streamed — same (k, metric) never compiles twice across paths.
+    """
+    step = cached_partition_step(plan.k, plan.metric)
+    return fqsd_streamed(
+        queries, dataset.iter_shards(), plan.k, plan.metric,
+        prefetch_depth=ctx.prefetch_depth, step_fn=step,
+    )
+
+
+@register_executor("fqsd-int8")
+def _fqsd_int8(plan, queries, dataset: TieredResident, ctx) -> TopK:
+    """Quantized FQ-SD: int8 first pass (4x less memory traffic than f32 —
+    the FQ-SD bottleneck, paper section 5) + exact f32 rescore.
+
+    The per-query certificate proves the rescore budget covered every
+    possible true neighbor (repro.core.quantized); it is published on
+    `ctx.certificate`. Rows the certificate cannot cover are recomputed
+    through a cached exact f32 scan of the SAME shapes, so the returned
+    top-k is exact for every row regardless of certification.
+    """
+    q8 = dataset.quant
+    key = (plan.cache_key(), _arr_key(queries), _arr_key(q8.q))
+
+    def build():
+        return knn_quantized.lower(
+            queries, q8, dataset.f32.vectors, plan.k, plan.rescore_factor,
+        ).compile()
+
+    out, cert = _cached(key, build)(queries, q8, dataset.f32.vectors)
+    ctx.certificate = cert
+    if not bool(jax.device_get(cert).all()):
+        fkey = ("int8-fallback", plan.cache_key(),
+                _arr_key(queries), _arr_key(dataset.f32.vectors))
+
+        def build_fallback():
+            return fqsd_scan.lower(
+                queries, dataset.f32.vectors, dataset.f32.norms,
+                plan.k, plan.metric, plan.chunk_rows,
+            ).compile()
+
+        exact = _cached(fkey, build_fallback)(
+            queries, dataset.f32.vectors, dataset.f32.norms
+        )
+        keep = cert[:, None]
+        out = TopK(jnp.where(keep, out.scores, exact.scores),
+                   jnp.where(keep, out.indices, exact.indices))
+    return out
 
 
 @register_executor("fdsq-sharded")

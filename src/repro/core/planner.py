@@ -34,6 +34,8 @@ PLANNABLE_EXECUTORS = (
     "fqsd-xla",
     "fdsq-pallas",
     "fqsd-streamed",
+    "fqsd-mmap-streamed",
+    "fqsd-int8",
     "fdsq-sharded",
     "fqsd-sharded",
 )
@@ -54,13 +56,17 @@ class EnginePlan:
 
 @dataclasses.dataclass(frozen=True)
 class ExecutionPlan(EnginePlan):
-    """EnginePlan + the physical decisions: executor, chunking, padding."""
+    """EnginePlan + the physical decisions: executor, chunking, padding,
+    and the storage tier the scan reads (f32 = 4 B/elem, int8 = 1 B/elem)."""
 
     executor: str = "fdsq-xla"
     padded_rows: int = 0
     padded_dim: int = 0
     n_valid: int = 0
     sharded: bool = False
+    tier: str = "f32"
+    rescore_factor: int = 4  # int8 tier: exact-rescore budget = factor * k
+    n_shards: int = 1
 
     def cache_key(self) -> tuple:
         """Everything that determines the compiled executable for this plan
@@ -68,6 +74,7 @@ class ExecutionPlan(EnginePlan):
         return (
             self.executor, self.m, self.k, self.metric, self.chunk_rows,
             self.n_partitions, self.padded_rows, self.padded_dim,
+            self.tier, self.rescore_factor,
         )
 
 
@@ -83,6 +90,19 @@ class DatasetMeta:
 
 
 @dataclasses.dataclass(frozen=True)
+class DatasetStoreMeta(DatasetMeta):
+    """DatasetMeta + what a DatasetStore knows: the dtype tier the scan
+    should read, the shard layout, and whether shards are mmap-backed files
+    (out-of-core) — the storage facts the planner turns into executor
+    choices (pure data; the store itself never reaches the planner)."""
+
+    tier: str = "f32"  # "f32" | "int8" (int8 => certified exact rescore)
+    n_shards: int = 1
+    rows_per_shard: int = 0
+    mmap: bool = False  # shards are memmap files, not host RAM
+
+
+@dataclasses.dataclass(frozen=True)
 class EngineConfig:
     """The engine's constructor knobs as pure data (planner input)."""
 
@@ -93,6 +113,7 @@ class EngineConfig:
     n_partitions: int = 8
     sharded: bool = False
     mesh_axes: Sequence[str] = ("data", "model")
+    rescore_factor: int = 4  # int8 tier exact-rescore budget (x k)
 
 
 def largest_divisor_at_most(n: int, cap: int) -> int:
@@ -134,7 +155,14 @@ def plan(
     Replaces the inline ``if mesh / if backend == "pallas"`` branches that
     used to live in ``ExactKNN.query`` / ``query_batch``:
 
+    * non-resident dataset -> the streamed executors: manifest-driven
+      "fqsd-mmap-streamed" when the meta is a DatasetStoreMeta (shards on
+      disk or host, scanned through the double buffer), the legacy
+      host-iterator "fqsd-streamed" otherwise;
     * sharded dataset  -> the mesh executors (mode picks fan-out vs ring);
+    * tier="int8"      -> the 1 B/element quantized scan with certified
+      exact rescore ("fqsd-int8"; l2 only — other metrics fall back to the
+      f32 executors, like the pallas/cos fallback below);
     * backend="pallas" -> the fused kernel, which serves BOTH logical modes
       with one executable ("fdsq-pallas"); metrics it cannot fuse (cos)
       fall back to the XLA executors instead of raising;
@@ -158,21 +186,36 @@ def plan(
     chunk = int(cfg.chunk_rows)
     n_parts = int(cfg.n_partitions)
     mode_label = mode
+    store_backed = isinstance(dataset_meta, DatasetStoreMeta)
+    tier = dataset_meta.tier if store_backed else "f32"
 
-    if mode == "fqsd-streamed":
-        executor = "fqsd-streamed"
+    if mode == "fqsd-streamed" or not dataset_meta.resident:
+        executor = "fqsd-mmap-streamed" if store_backed else "fqsd-streamed"
+        mode_label = "fqsd-streamed"
+        tier = "f32"  # streamed scans read the exact base tier
         if stream_rows is not None:
             chunk = int(stream_rows)
+        elif store_backed and dataset_meta.rows_per_shard:
+            chunk = int(dataset_meta.rows_per_shard)
     elif sharded:
         executor = "fdsq-sharded" if mode == "fdsq" else "fqsd-sharded"
         mode_label = f"{mode}-sharded"
+        tier = "f32"
+    elif tier == "int8" and mode == "fqsd" and cfg.metric == "l2":
+        executor = "fqsd-int8"
+        mode_label = "fqsd-int8"
+        # chunking doubles as the f32 fallback geometry for uncertified rows
+        chunk = largest_divisor_at_most(rows, max(1, chunk))
     elif cfg.backend == "pallas" and cfg.metric in ("l2", "ip"):
         executor = "fdsq-pallas"
+        tier = "f32"
     elif mode == "fdsq":
         executor = "fdsq-xla"
+        tier = "f32"
         n_parts = largest_divisor_at_most(rows, max(1, n_parts))
     else:
         executor = "fqsd-xla"
+        tier = "f32"
         chunk = largest_divisor_at_most(rows, max(1, chunk))
 
     return ExecutionPlan(
@@ -188,4 +231,7 @@ def plan(
         padded_dim=int(dataset_meta.padded_dim),
         n_valid=int(dataset_meta.n_valid),
         sharded=sharded,
+        tier=tier,
+        rescore_factor=int(cfg.rescore_factor),
+        n_shards=int(getattr(dataset_meta, "n_shards", 1)),
     )

@@ -37,7 +37,9 @@ class QuantizedDataset(NamedTuple):
     q: jax.Array  # (N, d) int8
     scales: jax.Array  # (N,) f32
     err: jax.Array  # (N,) f32 — certified ||e_x|| upper bound
-    norms_sq: jax.Array  # (N,) f32 — EXACT f32 row norms (kept for epilogue)
+    norms_sq: jax.Array  # (N,) f32 — EXACT f32 row norms (kept for epilogue);
+    #                      +inf marks an invalid row (padding / tombstone):
+    #                      masked out of bounds, candidates, and rescore.
 
 
 def quantize_dataset(x: jax.Array) -> QuantizedDataset:
@@ -71,7 +73,10 @@ def _approx_l2(qv: jax.Array, ds: QuantizedDataset) -> jax.Array:
     cross = cross * ds.scales[None, :]
     # ||x_hat||^2 = ||x||^2 - ||e||^2 - 2<x_hat,e>; we use the certified form:
     # d_hat = qn - 2<q,x_hat> + ||x_hat||^2 with ||x_hat||^2 bounded by norms.
-    xhat_sq = jnp.maximum(ds.norms_sq - ds.err**2, 0.0)
+    # Invalid rows carry norms_sq=+inf: substitute 0 here (avoids inf-inf
+    # NaNs) — callers force their bounds to +inf via the validity mask.
+    safe_norms = jnp.where(jnp.isfinite(ds.norms_sq), ds.norms_sq, 0.0)
+    xhat_sq = jnp.maximum(safe_norms - ds.err**2, 0.0)
     return jnp.maximum(qn - 2.0 * cross + xhat_sq[None, :], 0.0)
 
 
@@ -93,12 +98,13 @@ def knn_quantized(
     n = ds.q.shape[0]
     r = min(n, rescore_factor * k)
 
+    valid = jnp.isfinite(ds.norms_sq)  # False on padding / tombstones
     d_hat = _approx_l2(queries, ds)  # (M, N)
     q32 = queries.astype(jnp.float32)
     qxhat_ub = jnp.sqrt(d_hat)  # ||q - x_hat||
     eps = 2.0 * qxhat_ub * ds.err[None, :] + (ds.err**2)[None, :]
-    lower = jnp.maximum(d_hat - eps, 0.0)
-    upper = d_hat + eps
+    lower = jnp.where(valid[None, :], jnp.maximum(d_hat - eps, 0.0), jnp.inf)
+    upper = jnp.where(valid[None, :], d_hat + eps, jnp.inf)
 
     idx = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[None, :], (m, n))
     # k-th smallest upper bound = certified pruning threshold
@@ -108,16 +114,21 @@ def knn_quantized(
     cand_lb, cand_idx = topk_smallest(lower, idx, r)
     # certificate: every row OUTSIDE the candidate set has lower > thresh,
     # i.e. the (r+1)-th smallest lower bound exceeds the threshold (or r==n).
+    # An infinite (r+1)-th lower bound means the candidate set already holds
+    # every valid row — trivially certified even when thresh is also inf.
     if r < n:
         lb_r1, _ = topk_smallest(lower, idx, r + 1)
-        certificate = lb_r1[:, -1] > thresh[:, 0]
+        certificate = (lb_r1[:, -1] > thresh[:, 0]) | ~jnp.isfinite(lb_r1[:, -1])
     else:
         certificate = jnp.ones((m,), dtype=bool)
 
-    # exact f32 rescore of the candidates
+    # exact f32 rescore of the candidates (invalid rows can only reach the
+    # candidate set when fewer than r valid rows exist; mask them out here)
     cand_vecs = full_vectors[cand_idx]  # (M, r, d) gather
     diff = q32[:, None, :] - cand_vecs.astype(jnp.float32)
     exact_d = jnp.sum(diff * diff, axis=-1)
-    exact_d = jnp.where(cand_idx >= 0, exact_d, jnp.inf)
+    cand_ok = (cand_idx >= 0) & valid[cand_idx]
+    exact_d = jnp.where(cand_ok, exact_d, jnp.inf)
     s, i = topk_smallest(exact_d, cand_idx, k)
+    i = jnp.where(jnp.isfinite(s), i, -1)  # drain empty queue slots as -1
     return TopK(s, i), certificate

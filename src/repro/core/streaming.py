@@ -28,6 +28,13 @@ class DoubleBufferedStream:
 
     put_fn defaults to jax.device_put; pass a sharded device_put for
     multi-chip streaming (FQ-SD over a mesh).
+
+    Re-iteration: if the source is a restartable iterable (a list, a
+    DatasetStore, anything whose ``iter()`` opens a fresh pass), every
+    ``iter(stream)`` starts a new scan. A one-shot source (a bare
+    generator) supports exactly one pass — a second ``iter()`` raises
+    instead of silently yielding nothing (the pre-fix behavior, which made
+    a second streamed search return an empty top-k).
     """
 
     def __init__(
@@ -38,11 +45,14 @@ class DoubleBufferedStream:
     ):
         if depth < 1:
             raise ValueError("depth must be >= 1")
+        self._source = host_iter
         self._it = iter(host_iter)
         self._depth = depth
         self._put = put_fn or jax.device_put
         self._buf: collections.deque = collections.deque()
+        self._started = False
         self.transfers = 0  # observability: number of partitions shipped
+        self.restarts = 0  # observability: completed re-iterations
 
     def _fill(self) -> None:
         while len(self._buf) < self._depth:
@@ -57,6 +67,19 @@ class DoubleBufferedStream:
             self.transfers += 1
 
     def __iter__(self) -> Iterator[T]:
+        if self._started:
+            fresh = iter(self._source)
+            if fresh is self._source:
+                raise RuntimeError(
+                    "DoubleBufferedStream source is a one-shot iterator that "
+                    "was already consumed; a second pass would silently "
+                    "yield nothing. Pass a restartable iterable (list, "
+                    "DatasetStore, or a callable-backed source) to re-iterate."
+                )
+            self._it = fresh
+            self._buf.clear()
+            self.restarts += 1
+        self._started = True
         self._fill()
         while self._buf:
             item = self._buf.popleft()

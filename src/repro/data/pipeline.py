@@ -17,6 +17,12 @@ from repro.core.streaming import DoubleBufferedStream
 
 
 class DataPipeline:
+    """`host_iter` may be any (re)iterable, including a
+    :class:`repro.store.DatasetStore`: a store is a restartable shard
+    source (main + live delta, tombstones applied), so
+    ``DataPipeline(store)`` supports any number of epochs — each
+    ``iter()`` opens a fresh scan of the manifest."""
+
     def __init__(
         self,
         host_iter: Iterable,

@@ -26,9 +26,12 @@ def serve_knn(args):
     x = vector_dataset(args.n, args.d, seed=0)
     q = query_stream(x, args.queries, seed=1)
     eng = ExactKNN(k=args.k, n_partitions=args.partitions).fit(x)
+    if args.int8_depth is not None:
+        eng.enable_int8()
     sched = AdaptiveScheduler(
         eng, policy=policy,
         fdsq_max_batch=args.fdsq_max_batch, fqsd_min_depth=args.fqsd_min_depth,
+        int8_min_depth=args.int8_depth,
     )
     reqs = bursty_requests(q, args.burst_size, args.trickle)
     t0 = time.perf_counter()
@@ -39,9 +42,15 @@ def serve_knn(args):
           f"(wall {wall:.2f}s)  mode_switches={st['mode_switches']}  "
           f"deadline_misses={st['deadline_misses']}")
     for mode, r in st["per_plan"].items():
+        cert = (f" certified={r['certified_exact']:.2f}"
+                if "certified_exact" in r else "")
         print(f"  plan={mode:<5} n={r['count']:<5} p50={r['p50_ms']:.2f}ms "
               f"p99={r['p99_ms']:.2f}ms q/s={r['qps']:.1f} "
-              f"executors={','.join(r['executors'])}")
+              f"executors={','.join(r['executors'])}{cert}")
+    gib = {t: b / 2**30 for t, b in st["bytes_scanned"].items() if b}
+    if gib:
+        print("  bytes scanned per tier: "
+              + "  ".join(f"{t}={v:.2f}GiB" for t, v in gib.items()))
     assert n_served == args.queries
 
 
@@ -82,6 +91,10 @@ def main(argv=None):
     ap.add_argument("--trickle", type=int, default=8)
     ap.add_argument("--fdsq-max-batch", type=int, default=4)
     ap.add_argument("--fqsd-min-depth", type=int, default=32)
+    ap.add_argument("--int8-depth", type=int, default=None,
+                    help="backlog depth at which the bandwidth-aware hook "
+                         "routes FQ-SD batches to the int8 storage tier "
+                         "(enables the tier; default: disabled)")
     ap.add_argument("--arch", default="minicpm-2b")
     args = ap.parse_args(argv)
     if args.mode == "knn":

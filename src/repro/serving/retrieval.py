@@ -8,6 +8,15 @@ the engine's planner:
 
     small / urgent batches  -> FD-SQ plan (partition fan-out, low latency)
     deep backlogs           -> FQ-SD plan (streaming queue scan, throughput)
+    deepest backlogs        -> FQ-SD over the int8 storage tier (1 B/elem
+                               scan, 4x less memory traffic, certified
+                               exact rescore) when the engine has one
+
+The tier decision is the *bandwidth-aware policy hook* (:meth:`choose_tier`):
+the scan is memory-bandwidth-bound, so at sufficient batch depth the
+dominant cost is bytes moved per dataset pass, and the int8 tier moves a
+quarter of them. Subclasses can override the hook with measured-GB/s
+policies; stats() reports bytes scanned per tier so the trade is visible.
 
 Because the executor layer caches compiled executables per plan (see
 ``repro.core.executors``), flipping between the two logical configurations
@@ -56,6 +65,9 @@ class Result:
     batched: int  # how many requests shared the execution
     mode: str = "fdsq"  # logical configuration that served it
     executor: str = ""  # physical executor the plan selected
+    exact: bool = True  # int8 tier: the per-query exactness certificate
+    #                     (results are exact regardless — uncertified rows
+    #                     are recomputed in f32 by the executor)
 
 
 def bursty_requests(
@@ -101,6 +113,10 @@ class AdaptiveScheduler:
                       time x `deadline_slack`; FD-SQ otherwise.
     """
 
+    #: dispatch labels stats are bucketed by ("fqsd-int8" = the FQ-SD
+    #: logical configuration served from the int8 storage tier)
+    MODES = ("fdsq", "fqsd", "fqsd-int8")
+
     def __init__(
         self,
         engine: ExactKNN,
@@ -109,8 +125,9 @@ class AdaptiveScheduler:
         fqsd_min_depth: int = 32,
         max_batch: int = 256,
         deadline_slack: float = 2.0,
+        int8_min_depth: int | None = None,
     ):
-        if engine._ds is None:
+        if not engine.is_fitted:
             raise ValueError("engine must be fit() before serving")
         if policy not in ("latency", "throughput", "adaptive"):
             raise ValueError(f"unknown policy {policy!r}")
@@ -120,15 +137,18 @@ class AdaptiveScheduler:
         self.fqsd_min_depth = int(fqsd_min_depth)
         self.max_batch = int(max_batch)
         self.deadline_slack = float(deadline_slack)
+        self.int8_min_depth = None if int8_min_depth is None else int(int8_min_depth)
         self.served = 0
         self.deadline_misses = 0
-        self._lat_ms: dict[str, list[float]] = {"fdsq": [], "fqsd": []}
-        self._svc_s: dict[str, float] = {"fdsq": 0.0, "fqsd": 0.0}
-        self._count: dict[str, int] = {"fdsq": 0, "fqsd": 0}
-        self._ema_s: dict[str, float | None] = {"fdsq": None, "fqsd": None}
+        self._lat_ms: dict[str, list[float]] = {m: [] for m in self.MODES}
+        self._svc_s: dict[str, float] = {m: 0.0 for m in self.MODES}
+        self._count: dict[str, int] = {m: 0 for m in self.MODES}
+        self._ema_s: dict[str, float | None] = {m: None for m in self.MODES}
         self._switches = 0
         self._last_mode: str | None = None
-        self._executors: dict[str, set] = {"fdsq": set(), "fqsd": set()}
+        self._executors: dict[str, set] = {m: set() for m in self.MODES}
+        self._bytes_scanned: dict[str, int] = {"f32": 0, "int8": 0}
+        self._certified = {"total": 0, "true": 0}
 
     # ------------------------------------------------------------ decisions
     def _expected_service_s(self, mode: str) -> float:
@@ -152,6 +172,24 @@ class AdaptiveScheduler:
             return "fqsd"  # deep backlog: amortize over the streaming scan
         return "fdsq"
 
+    def choose_tier(self, mode: str, depth: int) -> str:
+        """Bandwidth-aware policy hook: pick the storage tier a dispatch
+        scans. Default: once the backlog is deep enough that a full dataset
+        pass is amortized over >= `int8_min_depth` queries, the scan is
+        memory-bound and the int8 tier (1 B/element, 4x less traffic than
+        f32, certified exact rescore) wins. Override with a measured-GB/s
+        policy for smarter routing; `stats()["bytes_scanned"]` exposes the
+        traffic either way.
+        """
+        if (
+            mode == "fqsd"
+            and self.int8_min_depth is not None
+            and depth >= self.int8_min_depth
+            and self.engine.has_int8
+        ):
+            return "int8"
+        return "f32"
+
     # ------------------------------------------------------------ execution
     def _execute(
         self, reqs: list[Request], mode: str, clock_s: float | None
@@ -174,13 +212,30 @@ class AdaptiveScheduler:
         b_pad = next_pow2(b)
         if b_pad > b:  # zero rows: row-independent scoring, results sliced off
             q = np.concatenate([q, np.zeros((b_pad - b, q.shape[1]), q.dtype)])
-        out = self.engine.query(q) if mode == "fdsq" else self.engine.query_batch(q)
+        if mode == "fdsq":
+            out = self.engine.query(q)
+        elif mode == "fqsd-int8":
+            out = self.engine.query_batch_int8(q)
+        else:
+            out = self.engine.query_batch(q)
         scores = np.asarray(out.scores)[:b]  # forces execution (device sync)
         indices = np.asarray(out.indices)[:b]
         dt_s = time.perf_counter() - t0
 
         plan = self.engine.plans[-1]
         self._executors[mode].add(plan.executor)
+        # dataset bytes one scan of this plan moved (the bandwidth account
+        # choose_tier optimizes): rows x dim x bytes/element for the tier
+        per_elem = 1 if plan.tier == "int8" else 4
+        self._bytes_scanned[plan.tier if plan.tier == "int8" else "f32"] += (
+            plan.padded_rows * plan.padded_dim * per_elem
+        )
+        if mode == "fqsd-int8":
+            cert = np.asarray(self.engine.last_certificate)[:b]
+            self._certified["total"] += b
+            self._certified["true"] += int(cert.sum())
+        else:
+            cert = None
         if self._last_mode is not None and mode != self._last_mode:
             self._switches += 1
         self._last_mode = mode
@@ -200,7 +255,8 @@ class AdaptiveScheduler:
             self._lat_ms[mode].append(lat_ms)
             results.append(
                 Result(r.rid, indices[i], scores[i], lat_ms, len(reqs),
-                       mode=mode, executor=plan.executor)
+                       mode=mode, executor=plan.executor,
+                       exact=bool(cert[i]) if cert is not None else True)
             )
         self.served += len(reqs)
         return results, dt_s
@@ -226,6 +282,8 @@ class AdaptiveScheduler:
                 clock = nxt.arrival_s  # idle until the next arrival
                 continue
             mode = self.choose_mode(pending, clock)
+            if self.choose_tier(mode, len(pending)) == "int8":
+                mode = "fqsd-int8"
             take = self.fdsq_max_batch if mode == "fdsq" else self.max_batch
             reqs = [pending.popleft() for _ in range(min(take, len(pending)))]
             results, dt_s = self._execute(reqs, mode, clock)
@@ -235,7 +293,7 @@ class AdaptiveScheduler:
     # ---------------------------------------------------------------- stats
     def stats(self) -> dict:
         per_plan = {}
-        for mode in ("fdsq", "fqsd"):
+        for mode in self.MODES:
             lat = np.asarray(self._lat_ms[mode])
             if len(lat) == 0:
                 continue
@@ -247,12 +305,17 @@ class AdaptiveScheduler:
                 "qps": float(self._count[mode] / svc) if svc > 0 else float("inf"),
                 "executors": sorted(self._executors[mode]),
             }
+        if self._certified["total"]:
+            per_plan["fqsd-int8"]["certified_exact"] = (
+                self._certified["true"] / self._certified["total"]
+            )
         return {
             "served": self.served,
             "deadline_misses": self.deadline_misses,
             "policy": self.policy,
             "mode_switches": self._switches,
             "per_plan": per_plan,
+            "bytes_scanned": dict(self._bytes_scanned),
         }
 
 

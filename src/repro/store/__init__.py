@@ -1,0 +1,21 @@
+"""repro.store — tiered dataset storage behind one interface.
+
+    DatasetStore    manifest-backed shards (in-memory or np.memmap),
+                    f32 + int8 tiers, online upsert/delete
+    Manifest        durable JSON shard table (geometry, tiers, checksums)
+
+See README.md in this package for the manifest format and tier semantics.
+"""
+from repro.store.manifest import Manifest, ShardMeta, crc32_of
+from repro.store.store import (
+    DELTA_ROWS_DEFAULT,
+    F32_TIER,
+    INT8_TIER,
+    DatasetStore,
+    Int8Shard,
+)
+
+__all__ = [
+    "DatasetStore", "Manifest", "ShardMeta", "Int8Shard", "crc32_of",
+    "F32_TIER", "INT8_TIER", "DELTA_ROWS_DEFAULT",
+]

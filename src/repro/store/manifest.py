@@ -1,0 +1,112 @@
+"""Shard manifest — the durable description of a tiered dataset.
+
+A :class:`Manifest` is what survives on disk next to the shard files: the
+padding geometry every shard shares (one shape => one compiled executable,
+the paper's fixed-bitstream invariant), the global row ranges, the dtype
+tiers materialized per shard, and a CRC32 per file so a reopened store can
+prove it is scanning the bytes it wrote.
+
+The manifest is plain JSON (``manifest.json``) so external tooling — and
+the next PR's compaction / replication layers — can read it without
+importing this package.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import zlib
+
+import numpy as np
+
+MANIFEST_NAME = "manifest.json"
+MANIFEST_VERSION = 1
+
+#: dtype tiers a shard may materialize. "f32" is the exact base tier;
+#: "int8" is the 1 B/element scan tier with certified exact rescore
+#: (repro.core.quantized).
+TIERS = ("f32", "int8")
+
+
+def crc32_of(arr: np.ndarray) -> int:
+    """Checksum of an array's raw bytes (reads the whole buffer)."""
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardMeta:
+    """One shard's row range, geometry, and backing files.
+
+    ``files``/``checksums`` are empty for purely in-memory stores; for
+    mmap-backed stores they map tier names ("f32", "f32_norms", "int8",
+    "int8_meta") to filenames relative to the store directory.
+    """
+
+    shard_id: int
+    row_start: int  # global index of row 0 of this shard
+    n_valid: int  # true rows (the rest of padded_rows is alignment padding)
+    padded_rows: int
+    padded_dim: int
+    files: dict = dataclasses.field(default_factory=dict)
+    checksums: dict = dataclasses.field(default_factory=dict)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ShardMeta":
+        return cls(**d)
+
+
+@dataclasses.dataclass(frozen=True)
+class Manifest:
+    """Everything needed to reopen a store: geometry, tiers, shard table."""
+
+    dim: int  # true feature dim
+    padded_dim: int  # lane-aligned feature dim all shards share
+    rows_per_shard: int  # padded rows per shard (identical for all shards)
+    n_valid: int  # total true rows at build time (upserts live past this)
+    dtype: str = "float32"
+    tiers: tuple = ("f32",)
+    shards: tuple = ()
+    version: int = MANIFEST_VERSION
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.shards)
+
+    @property
+    def padded_rows_total(self) -> int:
+        return self.n_shards * self.rows_per_shard
+
+    def to_json(self) -> str:
+        d = dataclasses.asdict(self)
+        d["tiers"] = list(self.tiers)
+        d["shards"] = [s.to_dict() if isinstance(s, ShardMeta) else s
+                       for s in self.shards]
+        return json.dumps(d, indent=2)
+
+    @classmethod
+    def from_json(cls, text: str) -> "Manifest":
+        d = json.loads(text)
+        if d.get("version", 0) > MANIFEST_VERSION:
+            raise ValueError(
+                f"manifest version {d['version']} is newer than supported "
+                f"({MANIFEST_VERSION})"
+            )
+        d["tiers"] = tuple(d.get("tiers", ("f32",)))
+        d["shards"] = tuple(ShardMeta.from_dict(s) for s in d.get("shards", ()))
+        return cls(**d)
+
+    def save(self, directory: str) -> str:
+        path = os.path.join(directory, MANIFEST_NAME)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            f.write(self.to_json())
+        os.replace(tmp, path)  # atomic: readers never see a torn manifest
+        return path
+
+    @classmethod
+    def load(cls, directory: str) -> "Manifest":
+        with open(os.path.join(directory, MANIFEST_NAME)) as f:
+            return cls.from_json(f.read())

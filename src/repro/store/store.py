@@ -1,0 +1,527 @@
+"""DatasetStore — every dataset representation behind one interface.
+
+The paper's FQ-SD mode exists because the dataset outgrows device memory
+(section 3.3 streams partitions over PCIe), and its section 5 names
+quantization as the throughput lever: both are *storage* decisions
+(bytes/element, placement, prefetch), so this layer owns them and the
+planner reads them (:class:`repro.core.planner.DatasetStoreMeta`).
+
+One store = a **manifest** of equal-geometry shards, each materialized in
+up to two dtype tiers:
+
+* ``f32``  — exact base tier: padded float32 vectors + row norms (+inf on
+             padding/tombstones, the mask channel every executor honors);
+* ``int8`` — 1 B/element scan tier (``repro.core.quantized``): symmetric
+             per-row int8 codes + scales + a certified per-row error bound,
+             enabling the exact-with-rescore fqsd-int8 executor.
+
+Shards live either in host memory or as ``np.memmap``-backed files in a
+directory (written with a JSON manifest; reopen with :meth:`open`).  Every
+shard shares one padded shape, so streamed scans reuse one compiled step —
+the fixed-bitstream invariant.
+
+**Online mutation** is an append-only delta plus a tombstone mask:
+
+* :meth:`upsert` appends rows to delta shards (fixed geometry, compiled
+  once) and returns their global ids;
+* :meth:`delete` flips a tombstone, which surfaces as a +inf norm — pure
+  runtime data, so mutations never change compiled shapes ("no
+  reflashing" holds under live traffic).
+
+Results stay exact throughout: a query sees main shards minus tombstones
+plus live delta rows. Delta persistence/compaction is intentionally out of
+scope here (the manifest format leaves room for it).
+"""
+from __future__ import annotations
+
+import math
+import os
+from typing import Iterator, NamedTuple, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.partition import LANE, PaddedDataset, round_up
+from repro.core.planner import DatasetStoreMeta
+from repro.store.manifest import Manifest, ShardMeta, crc32_of
+
+F32_TIER = "f32"
+INT8_TIER = "int8"
+
+#: Default cap on delta-shard geometry: small enough that the first upsert
+#: on a huge store does not allocate a main-sized buffer, aligned so the
+#: delta step executable is compiled once per store.
+DELTA_ROWS_DEFAULT = 4096
+
+
+class Int8Shard(NamedTuple):
+    """Host-side int8 tier of one shard (see repro.core.quantized)."""
+
+    q: np.ndarray  # (padded_rows, padded_dim) int8
+    scales: np.ndarray  # (padded_rows,) f32
+    err: np.ndarray  # (padded_rows,) f32 — certified ||e_x|| upper bound
+    norms_sq: np.ndarray  # (padded_rows,) f32 — exact norms; +inf on invalid
+
+
+class _Shard(NamedTuple):
+    vectors: np.ndarray  # (padded_rows, padded_dim) f32; ndarray or memmap
+    norms: np.ndarray  # (padded_rows,) f32; +inf beyond n_valid
+    meta: ShardMeta
+
+
+def _pad_block(rows: np.ndarray, padded_rows: int, padded_dim: int) -> np.ndarray:
+    out = np.zeros((padded_rows, padded_dim), dtype=np.float32)
+    out[: rows.shape[0], : rows.shape[1]] = rows
+    return out
+
+
+def _block_norms(block: np.ndarray, n_valid: int) -> np.ndarray:
+    # the same reduction partition.make_padded uses, so resident and
+    # streamed scans see bitwise-identical norms for identical rows
+    norms = np.array(jnp.sum(jnp.asarray(block) ** 2, axis=-1))
+    if not np.isfinite(norms[:n_valid]).all():
+        # +inf is the tombstone sentinel every executor masks on — a row
+        # whose norm overflows f32 would be ingested yet never returnable
+        raise ValueError(
+            "rows with non-finite f32 squared norms cannot be stored "
+            "(values this large would be silently unreturnable)"
+        )
+    norms[n_valid:] = np.inf
+    return norms
+
+
+def _f32_name(i: int) -> str:
+    return f"shard_{i:05d}.f32.bin"
+
+
+def _norms_name(i: int) -> str:
+    return f"shard_{i:05d}.norms.npy"
+
+
+def _int8_name(i: int) -> str:
+    return f"shard_{i:05d}.int8.npz"
+
+
+class DatasetStore:
+    """Tiered, shard-manifested dataset with online upsert/delete.
+
+    Construct with :meth:`from_array` (optionally writing mmap shards to a
+    directory) or :meth:`open` (reopen a written directory out-of-core).
+    """
+
+    def __init__(self, manifest: Manifest, shards: list[_Shard],
+                 directory: str | None = None,
+                 delta_rows: int = DELTA_ROWS_DEFAULT):
+        self.manifest = manifest
+        self._shards = shards
+        self._directory = directory
+        self._int8: list[Int8Shard] | None = None
+        self._delta_rows_cap = round_up(
+            min(delta_rows, manifest.rows_per_shard), LANE
+        )
+        self._delta: list[np.ndarray] = []  # appended rows, padded_dim wide
+        self._delta_tomb: list[bool] = []
+        # materialized FULL delta shards (rows immutable once a shard fills):
+        # (block, base norms) pairs, so u upserts cost O(u), not O(u^2)
+        self._delta_full: list[tuple[np.ndarray, np.ndarray]] = []
+        self._main_tomb = np.zeros(manifest.n_valid, dtype=bool)
+        self._mutations = 0  # version counter; device views sync on change
+
+    # ------------------------------------------------------------- factories
+    @classmethod
+    def from_array(
+        cls,
+        vectors,
+        rows_per_shard: int | None = None,
+        directory: str | None = None,
+        row_mult: int = LANE,
+        dim_mult: int = LANE,
+        tiers: Sequence[str] = (F32_TIER,),
+        delta_rows: int = DELTA_ROWS_DEFAULT,
+    ) -> "DatasetStore":
+        """Build a store from an (N, d) array.
+
+        ``rows_per_shard=None`` builds one shard padded to ``row_mult`` (the
+        resident fast path); otherwise equal shards of the given (aligned)
+        size. With ``directory`` the f32 tier is written as raw memmap files
+        plus ``manifest.json`` and the returned store reads through memmaps.
+        """
+        v = np.asarray(vectors, dtype=np.float32)
+        if v.ndim != 2:
+            raise ValueError(f"expected (N, d) dataset, got {v.shape}")
+        n, d = v.shape
+        padded_dim = round_up(d, dim_mult)
+        if rows_per_shard is None:
+            rows = round_up(max(n, 1), row_mult)
+        else:
+            rows = round_up(max(rows_per_shard, 1), row_mult)
+        n_shards = max(1, math.ceil(n / rows))
+
+        if directory is not None:
+            os.makedirs(directory, exist_ok=True)
+
+        shards: list[_Shard] = []
+        metas: list[ShardMeta] = []
+        for i in range(n_shards):
+            start = i * rows
+            nv = min(rows, n - start)
+            block = _pad_block(v[start : start + nv], rows, padded_dim)
+            norms = _block_norms(block, nv)
+            files, sums = {}, {}
+            if directory is not None:
+                files = {F32_TIER: _f32_name(i), "f32_norms": _norms_name(i)}
+                sums = {F32_TIER: crc32_of(block)}
+                mm = np.memmap(os.path.join(directory, files[F32_TIER]),
+                               dtype=np.float32, mode="w+", shape=block.shape)
+                mm[:] = block
+                mm.flush()
+                np.save(os.path.join(directory, files["f32_norms"]), norms)
+                # reopen read-only: the store never holds shard data in RAM
+                block = np.memmap(os.path.join(directory, files[F32_TIER]),
+                                  dtype=np.float32, mode="r", shape=block.shape)
+            meta = ShardMeta(shard_id=i, row_start=start, n_valid=nv,
+                             padded_rows=rows, padded_dim=padded_dim,
+                             files=files, checksums=sums)
+            metas.append(meta)
+            shards.append(_Shard(block, norms, meta))
+
+        manifest = Manifest(dim=d, padded_dim=padded_dim, rows_per_shard=rows,
+                            n_valid=n, tiers=(F32_TIER,), shards=tuple(metas))
+        store = cls(manifest, shards, directory=directory, delta_rows=delta_rows)
+        if directory is not None:
+            manifest.save(directory)
+        for t in tiers:
+            if t != F32_TIER:
+                store.ensure_tier(t)
+        return store
+
+    @classmethod
+    def open(cls, directory: str, verify: bool = False,
+             delta_rows: int = DELTA_ROWS_DEFAULT) -> "DatasetStore":
+        """Reopen a written store; shard vectors stay on disk (np.memmap).
+
+        ``verify=True`` recomputes every f32 checksum (reads all shards —
+        use in tests and integrity audits, not on the serving path).
+        """
+        manifest = Manifest.load(directory)
+        shards: list[_Shard] = []
+        for m in manifest.shards:
+            vec = np.memmap(os.path.join(directory, m.files[F32_TIER]),
+                            dtype=np.float32, mode="r",
+                            shape=(m.padded_rows, m.padded_dim))
+            norms = np.load(os.path.join(directory, m.files["f32_norms"]))
+            if verify and crc32_of(vec) != m.checksums[F32_TIER]:
+                raise ValueError(
+                    f"checksum mismatch on shard {m.shard_id} "
+                    f"({m.files[F32_TIER]}): file corrupt or truncated"
+                )
+            shards.append(_Shard(vec, norms, m))
+        store = cls(manifest, shards, directory=directory, delta_rows=delta_rows)
+        if INT8_TIER in manifest.tiers:
+            store._int8 = [
+                Int8Shard(**dict(np.load(os.path.join(directory,
+                                                      m.files[INT8_TIER]))))
+                for m in manifest.shards
+            ]
+        return store
+
+    # ------------------------------------------------------------ geometry
+    @property
+    def dim(self) -> int:
+        return self.manifest.dim
+
+    @property
+    def padded_dim(self) -> int:
+        return self.manifest.padded_dim
+
+    @property
+    def rows_per_shard(self) -> int:
+        return self.manifest.rows_per_shard
+
+    @property
+    def n_shards(self) -> int:
+        return self.manifest.n_shards
+
+    @property
+    def n_main(self) -> int:
+        """Rows in the main (manifested) shards, tombstoned or not."""
+        return self.manifest.n_valid
+
+    @property
+    def n_delta(self) -> int:
+        return len(self._delta)
+
+    @property
+    def n_live(self) -> int:
+        """Rows a query must see: main + delta, minus tombstones."""
+        dead = int(self._main_tomb.sum()) + sum(self._delta_tomb)
+        return self.n_main + self.n_delta - dead
+
+    @property
+    def is_mmap(self) -> bool:
+        return self._directory is not None
+
+    @property
+    def directory(self) -> str | None:
+        return self._directory
+
+    @property
+    def tiers(self) -> tuple:
+        return self.manifest.tiers if self._int8 is None else tuple(
+            dict.fromkeys((*self.manifest.tiers, INT8_TIER))
+        )
+
+    @property
+    def mutation_count(self) -> int:
+        """Bumped on every upsert/delete; device views resync when it moves."""
+        return self._mutations
+
+    def nbytes(self, tier: str = F32_TIER) -> int:
+        """Scan bytes of one full pass over the main shards at `tier`."""
+        per_elem = 4 if tier == F32_TIER else 1
+        return self.n_shards * self.rows_per_shard * self.padded_dim * per_elem
+
+    def meta(self, device_resident: bool, tier: str = F32_TIER,
+             sharded: bool = False) -> DatasetStoreMeta:
+        """Planner-visible facts: geometry + tier + residency + shard count."""
+        return DatasetStoreMeta(
+            padded_rows=self.manifest.padded_rows_total,
+            padded_dim=self.padded_dim,
+            n_valid=self.n_main,
+            sharded=sharded,
+            resident=device_resident,
+            tier=tier,
+            n_shards=self.n_shards,
+            rows_per_shard=self.rows_per_shard,
+            mmap=self.is_mmap,
+        )
+
+    # ------------------------------------------------------------- mutation
+    def upsert(self, vectors) -> np.ndarray:
+        """Append rows; returns their global ids (ids are never reused).
+
+        Appended rows live in fixed-geometry delta shards until a future
+        compaction folds them into the manifest; queries see them
+        immediately and exactly.
+        """
+        v = np.asarray(vectors, dtype=np.float32)
+        if v.ndim == 1:
+            v = v[None, :]
+        if v.ndim != 2 or v.shape[1] != self.dim:
+            raise ValueError(
+                f"upsert expects (m, {self.dim}) vectors, got {v.shape}"
+            )
+        ids = self.n_main + self.n_delta + np.arange(v.shape[0])
+        padded = np.zeros((v.shape[0], self.padded_dim), dtype=np.float32)
+        padded[:, : self.dim] = v
+        _block_norms(padded, v.shape[0])  # reject unreturnable rows up front
+        self._delta.extend(padded)
+        self._delta_tomb.extend([False] * v.shape[0])
+        self._mutations += 1
+        return ids
+
+    def delete(self, ids) -> None:
+        """Tombstone rows by global id. Exact immediately: a tombstone is a
+        +inf norm, so the row can never enter a kNN queue — no shape
+        changes, no recompilation, no rewrite of shard files.
+
+        Atomic: every id is validated before any tombstone flips, so a bad
+        id leaves the store (and attached engine views) untouched.
+        """
+        gids = [int(g) for g in np.atleast_1d(np.asarray(ids, dtype=np.int64))]
+        seen = set()
+        for gid in gids:
+            if not 0 <= gid < self.n_main + self.n_delta:
+                raise KeyError(
+                    f"row {gid} does not exist (n={self.n_main + self.n_delta})"
+                )
+            already = (self._main_tomb[gid] if gid < self.n_main
+                       else self._delta_tomb[gid - self.n_main])
+            if already or gid in seen:
+                raise KeyError(f"row {gid} already deleted")
+            seen.add(gid)
+        for gid in gids:
+            if gid < self.n_main:
+                self._main_tomb[gid] = True
+            else:
+                self._delta_tomb[gid - self.n_main] = True
+        self._mutations += 1
+
+    # ------------------------------------------------------------- int8 tier
+    def ensure_tier(self, tier: str) -> None:
+        """Materialize `tier` for every main shard (idempotent).
+
+        The int8 tier is quantized from the padded f32 blocks with the
+        certified per-row error bound of ``repro.core.quantized``; invalid
+        rows (padding) carry +inf norms so the masked quantized scan can
+        never admit them.
+        """
+        if tier == F32_TIER:
+            return
+        if tier != INT8_TIER:
+            raise ValueError(f"unknown tier {tier!r}; known: {F32_TIER}, {INT8_TIER}")
+        if self._int8 is not None:
+            return
+        from repro.core.quantized import quantize_dataset
+
+        shards: list[Int8Shard] = []
+        metas: list[ShardMeta] = []
+        for s in self._shards:
+            qd = quantize_dataset(np.asarray(s.vectors))
+            norms = np.asarray(qd.norms_sq).copy()
+            norms[s.meta.n_valid:] = np.inf
+            i8 = Int8Shard(np.asarray(qd.q), np.asarray(qd.scales),
+                           np.asarray(qd.err), norms)
+            shards.append(i8)
+            m = s.meta
+            if self._directory is not None:
+                fname = _int8_name(m.shard_id)
+                np.savez(os.path.join(self._directory, fname),
+                         q=i8.q, scales=i8.scales, err=i8.err,
+                         norms_sq=i8.norms_sq)
+                m = ShardMeta(
+                    shard_id=m.shard_id, row_start=m.row_start,
+                    n_valid=m.n_valid, padded_rows=m.padded_rows,
+                    padded_dim=m.padded_dim,
+                    files={**m.files, INT8_TIER: fname},
+                    checksums={**m.checksums, INT8_TIER: crc32_of(i8.q)},
+                )
+            metas.append(m)
+        self._int8 = shards
+        tiers = tuple(dict.fromkeys((*self.manifest.tiers, INT8_TIER)))
+        self.manifest = Manifest(
+            dim=self.manifest.dim, padded_dim=self.manifest.padded_dim,
+            rows_per_shard=self.manifest.rows_per_shard,
+            n_valid=self.manifest.n_valid, dtype=self.manifest.dtype,
+            tiers=tiers, shards=tuple(metas), version=self.manifest.version,
+        )
+        if self._directory is not None:
+            self.manifest.save(self._directory)
+        if self._directory is not None:
+            self._shards = [
+                _Shard(s.vectors, s.norms, m)
+                for s, m in zip(self._shards, metas)
+            ]
+
+    def has_tier(self, tier: str) -> bool:
+        return tier == F32_TIER or (tier == INT8_TIER and self._int8 is not None)
+
+    # ------------------------------------------------------------- read side
+    def _shard_norms(self, i: int) -> np.ndarray:
+        """Shard norms with the tombstone mask folded in (+inf on dead rows)."""
+        s = self._shards[i]
+        norms = np.array(s.norms, dtype=np.float32, copy=True)
+        start, nv = s.meta.row_start, s.meta.n_valid
+        dead = self._main_tomb[start : start + nv]
+        if dead.any():
+            norms[:nv][dead] = np.inf
+        return norms
+
+    def delta_shards(self) -> list[PaddedDataset]:
+        """Live appended rows as fixed-geometry padded shards (host arrays).
+
+        Every delta shard shares one shape, so the per-partition step
+        executable is compiled once per store no matter how many upserts
+        arrive. base_index continues the global id space after the main
+        rows. Full shards are materialized once (rows are immutable after a
+        shard fills; only the tombstone-masked norms are re-derived per
+        call); the trailing partial shard is rebuilt until it fills.
+        """
+        if not self._delta:
+            return []
+        rows = self._delta_rows_cap
+        n = len(self._delta)
+        n_full = n // rows
+        while len(self._delta_full) < n_full:
+            i = len(self._delta_full)
+            block = _pad_block(np.stack(self._delta[i * rows : (i + 1) * rows]),
+                               rows, self.padded_dim)
+            self._delta_full.append((block, _block_norms(block, rows)))
+        tomb = np.asarray(self._delta_tomb, dtype=bool)
+        out: list[PaddedDataset] = []
+        for i in range(n_full):
+            block, base_norms = self._delta_full[i]
+            norms = base_norms.copy()
+            dead = tomb[i * rows : (i + 1) * rows]
+            if dead.any():
+                norms[dead] = np.inf
+            out.append(PaddedDataset(block, norms, rows, self.n_main + i * rows))
+        tail = n - n_full * rows
+        if tail:
+            block = _pad_block(np.stack(self._delta[n_full * rows :]),
+                               rows, self.padded_dim)
+            norms = _block_norms(block, tail)
+            dead = tomb[n_full * rows :]
+            if dead.any():
+                norms[:tail][dead] = np.inf
+            out.append(PaddedDataset(block, norms, tail,
+                                     self.n_main + n_full * rows))
+        return out
+
+    def iter_shards(self, tier: str = F32_TIER) -> Iterator[PaddedDataset]:
+        """Fresh host-side scan of main + delta shards (restartable: every
+        call opens a new pass — safe to hand to DoubleBufferedStream).
+
+        Yields :class:`PaddedDataset` with host arrays; the streaming layer
+        device_puts each shard, which for mmap shards is the moment the
+        bytes leave the disk (one sequential read per shard, double
+        buffered against compute).
+        """
+        if tier != F32_TIER:
+            raise ValueError("streamed scans read the f32 tier; int8 is a "
+                             "resident-scan tier (executor fqsd-int8)")
+
+        def gen():
+            for i, s in enumerate(self._shards):
+                yield PaddedDataset(s.vectors, self._shard_norms(i),
+                                    s.meta.n_valid, s.meta.row_start)
+            yield from self.delta_shards()
+
+        return gen()
+
+    def __iter__(self) -> Iterator[PaddedDataset]:
+        """A DatasetStore is a restartable shard source (each iter() is a
+        fresh scan) — composes directly with DataPipeline / streaming."""
+        return self.iter_shards()
+
+    def resident(self) -> PaddedDataset:
+        """Main shards concatenated into one host PaddedDataset (reads all
+        shards — only call when the store fits the device budget).
+
+        Valid rows occupy positions 0..n_main-1 (shards fill sequentially),
+        so global ids equal positions and FD-SQ/FQ-SD executors need no
+        translation. Tombstones ride the norms channel.
+        """
+        if self.n_shards == 1:
+            vec = np.asarray(self._shards[0].vectors)
+        else:
+            vec = np.concatenate([np.asarray(s.vectors) for s in self._shards])
+        norms = np.concatenate([self._shard_norms(i) for i in range(self.n_shards)])
+        return PaddedDataset(vec, norms, self.n_main, 0)
+
+    def resident_norms(self) -> np.ndarray:
+        """Norms of :meth:`resident` alone — the only channel mutations
+        touch, so engines refresh this (same shape, no recompile)."""
+        return np.concatenate([self._shard_norms(i) for i in range(self.n_shards)])
+
+    def int8_resident(self) -> Int8Shard:
+        """Main shards' int8 tier concatenated (norms carry tombstones)."""
+        if self._int8 is None:
+            raise RuntimeError("int8 tier not materialized; call ensure_tier('int8')")
+        cat = lambda field: np.concatenate([getattr(s, field) for s in self._int8])
+        return Int8Shard(cat("q"), cat("scales"), cat("err"),
+                         self.int8_resident_norms())
+
+    def int8_resident_norms(self) -> np.ndarray:
+        """norms_sq of :meth:`int8_resident` alone — the only int8 channel
+        mutations touch, so engines refresh just this (the codes/scales/err
+        upload happens once, not per delete)."""
+        if self._int8 is None:
+            raise RuntimeError("int8 tier not materialized; call ensure_tier('int8')")
+        norms = np.concatenate([s.norms_sq for s in self._int8]).copy()
+        for i, s in enumerate(self._shards):
+            start, nv = s.meta.row_start, s.meta.n_valid
+            dead = self._main_tomb[start : start + nv]
+            if dead.any():
+                norms[i * self.rows_per_shard : i * self.rows_per_shard + nv][dead] = np.inf
+        return norms

@@ -41,6 +41,100 @@ def test_quantized_knn_exact_with_certificate(data, k, factor):
             assert set(got_i[i].tolist()) == set(np.asarray(ref_i)[i].tolist())
 
 
+# -------------------------------------------- adversarial distributions
+def _assert_certified_rows_exact(q, x, k=5, factor=4):
+    """Certified rows must match a float64 brute-force oracle.
+
+    (The f32 ``pairwise_scores`` cancellation form qn-2qx+xn loses ~1e-3
+    absolute on adversarial constant-row data; the quantized path's direct
+    (q-x)^2 rescore is MORE accurate, so the reference here is f64.)
+    """
+    ds = quantize_dataset(jnp.asarray(x))
+    xhat = np.asarray(ds.q, np.float32) * np.asarray(ds.scales)[:, None]
+    true_err = np.linalg.norm(x - xhat, axis=1)
+    assert (true_err <= np.asarray(ds.err) + 1e-5 * (1 + true_err)).all()
+
+    res, cert = knn_quantized(jnp.asarray(q), ds, jnp.asarray(x), k, factor)
+    d64 = ((q.astype(np.float64)[:, None, :]
+            - x.astype(np.float64)[None, :, :]) ** 2).sum(-1)
+    ref_i = np.argsort(d64, axis=1, kind="stable")[:, :k]
+    ref_s = np.take_along_axis(d64, ref_i, axis=1)
+    cert = np.asarray(cert)
+    for i in np.nonzero(cert)[0]:
+        np.testing.assert_allclose(
+            np.asarray(res.scores)[i], ref_s[i], rtol=1e-4, atol=1e-6,
+        )
+        assert set(np.asarray(res.indices)[i].tolist()) == set(ref_i[i].tolist())
+    return cert
+
+
+def test_constant_rows_quantize_exactly():
+    """Every row constant (one value per row): absmax scaling represents it
+    with zero error, so every query certifies and matches the oracle."""
+    vals = np.linspace(-3, 3, 64, dtype=np.float32)
+    x = np.repeat(vals[:, None], 96, axis=1)
+    q = np.repeat(np.float32([[0.1], [-2.5]]), 96, axis=1)
+    ds = quantize_dataset(jnp.asarray(x))
+    assert float(jnp.max(ds.err)) < 1e-5  # exact representation
+    cert = _assert_certified_rows_exact(q, x, k=5)
+    assert cert.all()
+
+
+def test_all_zero_rows_are_safe():
+    x = np.zeros((256, 64), np.float32)
+    x[:8] = np.eye(8, 64, dtype=np.float32)  # a few distinguishable rows
+    q = np.eye(2, 64, dtype=np.float32)
+    cert = _assert_certified_rows_exact(q, x, k=3)
+    assert cert.shape == (2,)
+
+
+def test_huge_dynamic_range_bound_still_dominates():
+    """Rows spanning 12 orders of magnitude: per-row scales keep the bound
+    valid; certified rows stay exact even where certification is rare."""
+    rng = np.random.default_rng(0)
+    scales = 10.0 ** rng.uniform(-6, 6, size=(1024, 1)).astype(np.float32)
+    x = (rng.standard_normal((1024, 80)) * scales).astype(np.float32)
+    q = (rng.standard_normal((6, 80))).astype(np.float32)
+    _assert_certified_rows_exact(q, x, k=7)
+
+
+def test_dim_not_multiple_of_128():
+    """d=33: the raw quantized path (no padding) and the engine path
+    (lane-padded via the store) must both stay exact."""
+    rng = np.random.default_rng(1)
+    x = rng.standard_normal((512, 33)).astype(np.float32)
+    q = rng.standard_normal((4, 33)).astype(np.float32)
+    cert = _assert_certified_rows_exact(q, x, k=6)
+    assert cert.mean() > 0.9
+
+    from repro.core import ExactKNN
+
+    eng = ExactKNN(k=6).fit(x).enable_int8()
+    ref = eng.query_batch(q)
+    got = eng.query_batch_int8(q)
+    np.testing.assert_allclose(np.asarray(got.scores), np.asarray(ref.scores),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(got.indices),
+                                  np.asarray(ref.indices))
+
+
+def test_invalid_rows_masked_out_of_candidates_and_rescore():
+    """+inf norms_sq marks padding/tombstones: such rows must never appear
+    in the result even though their (zero) vectors would score well."""
+    rng = np.random.default_rng(2)
+    x = rng.standard_normal((128, 32)).astype(np.float32) + 5.0
+    ds = quantize_dataset(jnp.asarray(x))
+    norms = np.asarray(ds.norms_sq).copy()
+    norms[64:] = np.inf  # invalidate the back half
+    ds = ds._replace(norms_sq=jnp.asarray(norms))
+    q = jnp.zeros((2, 32), jnp.float32)  # zeros: nearest to masked-out rows
+    res, cert = knn_quantized(q, ds, jnp.asarray(x), 70)  # k > live rows
+    idx = np.asarray(res.indices)
+    assert ((idx < 64) | (idx == -1)).all()
+    assert (idx[:, :64] >= 0).all()  # all 64 live rows returned
+    assert np.isinf(np.asarray(res.scores)[:, 64:]).all()
+
+
 def test_quantized_recall_without_certificate(data):
     """Even uncertified rows should have near-perfect recall on real data."""
     q, x = data

@@ -137,6 +137,48 @@ def test_bursty_requests_rejects_degenerate_params():
         next(bursty_requests(np.zeros((4, 8), np.float32), 0, 0))
 
 
+class TestInt8TierRouting:
+    def test_deep_backlog_routes_to_int8_with_certificates(self, engine):
+        """Acceptance: the bandwidth-aware hook sends deep backlogs to the
+        int8 tier; served results carry exact=True certificates and stats
+        report bytes scanned per tier."""
+        engine.enable_int8()
+        rng = np.random.default_rng(12)
+        s = AdaptiveScheduler(engine, policy="adaptive", fqsd_min_depth=8,
+                              int8_min_depth=16)
+        results = list(s.serve(bursty_trace(rng, burst=40, trickle=4)))
+        modes = {r.mode for r in results}
+        assert "fqsd-int8" in modes  # the burst hit the quantized tier
+        int8_results = [r for r in results if r.mode == "fqsd-int8"]
+        assert all(r.exact for r in int8_results)  # certified exact
+        assert all(r.executor == "fqsd-int8" for r in int8_results)
+        st = s.stats()
+        assert st["per_plan"]["fqsd-int8"]["certified_exact"] == 1.0
+        # per-tier traffic accounting: whole int8 passes, 4x lighter than f32
+        per_pass = engine.store.nbytes("int8")
+        assert st["bytes_scanned"]["int8"] > 0
+        assert st["bytes_scanned"]["int8"] % per_pass == 0
+        assert engine.store.nbytes("f32") == 4 * per_pass
+
+    def test_results_identical_across_tiers(self, engine):
+        """Tier routing must not change answers: dataset rows find
+        themselves through the int8 tier too."""
+        engine.enable_int8()
+        x = np.asarray(engine._ds.vectors)[:40, :32]
+        reqs = [Request(i, x[i], arrival_s=0.0) for i in range(40)]
+        s = AdaptiveScheduler(engine, policy="throughput", int8_min_depth=8)
+        for r in s.serve(iter(reqs)):
+            assert r.mode == "fqsd-int8"
+            assert int(r.indices[0]) == r.rid
+
+    def test_tier_hook_disabled_by_default(self, engine):
+        engine.enable_int8()
+        rng = np.random.default_rng(13)
+        s = AdaptiveScheduler(engine, policy="throughput")
+        results = list(s.serve(bursty_trace(rng)))
+        assert {r.mode for r in results} == {"fqsd"}  # no opt-in, no int8
+
+
 class TestNoReflashingUnderScheduling:
     def test_mode_switches_hit_executable_cache(self, engine):
         """Serving the same bursty trace twice: the second pass switches

@@ -1,0 +1,322 @@
+"""DatasetStore: manifest round-trip, mmap out-of-core exactness, tiered
+executors in the registry, and online upsert/delete under the no-reflashing
+invariant (ISSUE 2 tentpole acceptance)."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    DatasetStoreMeta,
+    ExactKNN,
+    cache_info,
+    clear_executable_cache,
+    plan,
+)
+from repro.store import DatasetStore, Manifest
+
+RNG = np.random.default_rng(7)
+
+
+@pytest.fixture(scope="module")
+def data():
+    x = RNG.standard_normal((3000, 48)).astype(np.float32)
+    q = RNG.standard_normal((8, 48)).astype(np.float32)
+    return x, q
+
+
+def _brute_topk(q, x, k, ids=None):
+    """Oracle over an explicit live row set (for mutation tests)."""
+    d = ((q[:, None, :] - x[None, :, :]) ** 2).sum(-1)
+    order = np.argsort(d, axis=1, kind="stable")[:, :k]
+    scores = np.take_along_axis(d, order, axis=1)
+    if ids is not None:
+        order = np.asarray(ids)[order]
+    return scores, order
+
+
+# ----------------------------------------------------------------- manifest
+class TestManifest:
+    def test_json_roundtrip(self, data, tmp_path):
+        x, _ = data
+        store = DatasetStore.from_array(x, rows_per_shard=512,
+                                        directory=str(tmp_path))
+        m = Manifest.load(str(tmp_path))
+        assert m == store.manifest
+        assert m.n_shards == store.n_shards == 6  # ceil(3000/512)
+        assert m.rows_per_shard == 512 and m.padded_dim == 128
+        assert [s.row_start for s in m.shards] == [512 * i for i in range(6)]
+        # all shards full except the last (global ids == positions)
+        assert [s.n_valid for s in m.shards] == [512] * 5 + [440]
+
+    def test_future_version_rejected(self):
+        m = Manifest(dim=8, padded_dim=128, rows_per_shard=128, n_valid=8)
+        bad = m.to_json().replace('"version": 1', '"version": 99')
+        with pytest.raises(ValueError, match="version"):
+            Manifest.from_json(bad)
+
+    def test_checksum_detects_corruption(self, data, tmp_path):
+        x, _ = data
+        DatasetStore.from_array(x, rows_per_shard=1024, directory=str(tmp_path))
+        victim = tmp_path / "shard_00001.f32.bin"
+        raw = bytearray(victim.read_bytes())
+        raw[100] ^= 0xFF
+        victim.write_bytes(bytes(raw))
+        with pytest.raises(ValueError, match="checksum"):
+            DatasetStore.open(str(tmp_path), verify=True)
+
+
+# ------------------------------------------------------- mmap round-trip
+class TestMmapRoundTrip:
+    def test_reopened_store_matches_in_memory_f32(self, data, tmp_path):
+        """Write manifest -> reopen -> identical top-k vs in-memory f32."""
+        x, q = data
+        ref = ExactKNN(k=9).fit(x).query_batch(q)
+
+        DatasetStore.from_array(x, rows_per_shard=512, directory=str(tmp_path))
+        reopened = DatasetStore.open(str(tmp_path), verify=True)
+        eng = ExactKNN(k=9).fit_store(reopened)  # fits budget -> resident
+        got = eng.query_batch(q)
+        np.testing.assert_allclose(np.asarray(got.scores),
+                                   np.asarray(ref.scores), rtol=1e-5, atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(got.indices),
+                                      np.asarray(ref.indices))
+
+    def test_store_is_restartable_shard_source(self, data, tmp_path):
+        x, _ = data
+        store = DatasetStore.from_array(x, rows_per_shard=1024,
+                                        directory=str(tmp_path))
+        first = [p.base_index for p in store.iter_shards()]
+        second = [p.base_index for p in store.iter_shards()]
+        assert first == second == [0, 1024, 2048]
+        # the store itself is iterable (DataPipeline / streaming source)
+        assert [p.base_index for p in store] == first
+
+
+# ---------------------------------------------------------- out-of-core
+class TestOutOfCore:
+    def test_streams_identical_topk_when_over_budget(self, data, tmp_path):
+        """Acceptance: mmap shards larger than the device budget stream
+        through fqsd-mmap-streamed, top-k identical to in-memory f32."""
+        x, q = data
+        ref = ExactKNN(k=11).fit(x).query_batch(q)
+
+        store = DatasetStore.from_array(x, rows_per_shard=512,
+                                        directory=str(tmp_path))
+        assert store.nbytes("f32") > 4096
+        eng = ExactKNN(k=11, device_budget_bytes=4096).fit_store(store)
+        assert not eng._resident
+        got = eng.query_batch(q)
+        assert eng.plans[-1].executor == "fqsd-mmap-streamed"
+        assert eng.plans[-1].mode == "fqsd-streamed"
+        np.testing.assert_allclose(np.asarray(got.scores),
+                                   np.asarray(ref.scores), rtol=1e-5, atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(got.indices),
+                                      np.asarray(ref.indices))
+        # the latency entry point streams too (no resident view exists)
+        one = eng.query(q[0])
+        np.testing.assert_array_equal(np.asarray(one.indices)[0],
+                                      np.asarray(ref.indices)[0])
+
+    def test_out_of_core_sees_mutations(self, data, tmp_path):
+        x, q = data
+        store = DatasetStore.from_array(x, rows_per_shard=512,
+                                        directory=str(tmp_path))
+        eng = ExactKNN(k=3, device_budget_bytes=1).fit_store(store)
+        ids = eng.upsert(q[0])  # the query becomes its own nearest neighbor
+        got = eng.query_batch(q[:1])
+        assert int(got.indices[0, 0]) == int(ids[0])
+        eng.delete(ids)
+        got = eng.query_batch(q[:1])
+        assert int(got.indices[0, 0]) != int(ids[0])
+
+
+# --------------------------------------------------------------- planner
+class TestStorePlanning:
+    def test_planner_reads_store_meta(self, data):
+        x, _ = data
+        eng = ExactKNN(k=5).fit(x)
+        meta = eng.dataset_meta()
+        assert isinstance(meta, DatasetStoreMeta)
+        assert meta.n_shards == 1 and meta.resident and not meta.mmap
+
+        p = plan((4, 128), meta, eng.config(), "fqsd")
+        assert p.executor == "fqsd-xla" and p.tier == "f32"
+        p8 = plan((4, 128), eng.dataset_meta(tier="int8"), eng.config(), "fqsd")
+        assert p8.executor == "fqsd-int8" and p8.tier == "int8"
+        assert p8.mode == "fqsd-int8"
+
+    def test_int8_non_l2_falls_back_to_f32(self, data):
+        x, _ = data
+        eng = ExactKNN(k=5, metric="ip").fit(x)
+        p = plan((4, 128), eng.dataset_meta(tier="int8"), eng.config(), "fqsd")
+        assert p.executor == "fqsd-xla" and p.tier == "f32"
+
+    def test_non_resident_store_selects_mmap_streamed(self, data):
+        x, _ = data
+        eng = ExactKNN(k=5).fit(x)
+        meta = eng.store.meta(device_resident=False)
+        for mode in ("fdsq", "fqsd", "fqsd-streamed"):
+            p = plan((4, 128), meta, eng.config(), mode)
+            assert p.executor == "fqsd-mmap-streamed"
+        # legacy plain-iterator streaming keeps its executor
+        from repro.core import DatasetMeta
+        legacy = DatasetMeta(padded_rows=1024, padded_dim=128, n_valid=1000,
+                             resident=False)
+        assert plan((4, 128), legacy, eng.config(), "fqsd-streamed").executor \
+            == "fqsd-streamed"
+
+
+# ------------------------------------------------------------- int8 tier
+class TestInt8Tier:
+    def test_engine_int8_matches_f32_with_certificates(self, data):
+        x, q = data
+        eng = ExactKNN(k=10).fit(x).enable_int8()
+        ref = eng.query_batch(q)
+        got = eng.query_batch_int8(q)
+        assert eng.plans[-1].executor == "fqsd-int8"
+        cert = np.asarray(eng.last_certificate)
+        assert cert.mean() > 0.9  # gaussian data certifies
+        np.testing.assert_allclose(np.asarray(got.scores),
+                                   np.asarray(ref.scores), rtol=1e-4, atol=1e-4)
+
+    def test_int8_exact_even_when_uncertified(self):
+        """Adversarial: rows differ far below the quantization error, so
+        certificates fail — the executor's f32 fallback must keep the
+        answer exact anyway."""
+        rng = np.random.default_rng(11)
+        base = rng.standard_normal(64).astype(np.float32) * 1e3
+        x = (base[None, :] + 1e-3 * rng.standard_normal((512, 64))).astype(np.float32)
+        q = x[:4] + 1e-4
+        eng = ExactKNN(k=5).fit(x).enable_int8()
+        ref = eng.query_batch(q)
+        got = eng.query_batch_int8(q)
+        cert = np.asarray(eng.last_certificate)
+        assert not cert.all()  # the adversarial construction defeats the bound
+        np.testing.assert_allclose(np.asarray(got.scores),
+                                   np.asarray(ref.scores), rtol=1e-5, atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(got.indices),
+                                      np.asarray(ref.indices))
+
+    def test_int8_requires_l2_and_enable(self, data):
+        x, q = data
+        eng = ExactKNN(k=3).fit(x)
+        with pytest.raises(RuntimeError, match="enable_int8"):
+            eng.query_batch_int8(q)
+        with pytest.raises(ValueError, match="l2"):
+            ExactKNN(k=3, metric="cos").fit(x).enable_int8()
+
+
+# --------------------------------------------- upsert/delete, no reflash
+class TestOnlineMutation:
+    def test_mutations_exact_and_never_recompile(self, data):
+        """Acceptance: after an upsert+delete sequence, queries reflect the
+        mutation with exact results and no executor recompilation for seen
+        shapes (cache_info asserted)."""
+        x, q = data
+        k = 6
+        eng = ExactKNN(k=k).fit(x).enable_int8()
+        clear_executable_cache()
+        eng.query_batch(q)
+        eng.query(q[0])
+        eng.query_batch_int8(q)
+        warm = cache_info()
+
+        new_rows = (q[:3] + 1e-4).astype(np.float32)  # near the queries
+        ids = eng.upsert(new_rows)
+        assert list(ids) == [3000, 3001, 3002]
+        r = eng.query_batch(q)
+        # first post-upsert dispatch may compile the delta step once...
+        after_upsert = cache_info()
+        assert after_upsert["misses"] <= warm["misses"] + 1
+        for i in range(3):
+            assert int(r.indices[i, 0]) == int(ids[i])
+
+        eng.delete([ids[1], int(np.asarray(r.indices)[3, 0])])
+        r2 = eng.query_batch(q)
+        live_after = cache_info()
+        assert live_after["misses"] == after_upsert["misses"]  # ...then never again
+        assert int(r2.indices[0, 0]) == int(ids[0])
+        assert int(r2.indices[1, 0]) != int(ids[1])
+
+        # exactness vs a brute-force oracle over the live row set
+        live_x = np.concatenate([x, new_rows])
+        live_ids = np.arange(live_x.shape[0])
+        dead = {int(ids[1]), int(np.asarray(r.indices)[3, 0])}
+        keep = np.array([i not in dead for i in live_ids])
+        ref_s, ref_i = _brute_topk(q, live_x[keep], k, live_ids[keep])
+        np.testing.assert_allclose(np.asarray(r2.scores), ref_s,
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_array_equal(np.asarray(r2.indices), ref_i)
+
+        # int8 tier sees the same mutations (delta merged exactly in f32)
+        r8 = eng.query_batch_int8(q)
+        np.testing.assert_allclose(np.asarray(r8.scores), ref_s,
+                                   rtol=1e-4, atol=1e-4)
+        # ... and repeated mixed-mode serving stays compile-free
+        eng.query_batch(q)
+        eng.query(q[0])
+        eng.query_batch_int8(q)
+        assert cache_info()["misses"] == live_after["misses"]
+
+    def test_delete_errors(self, data):
+        x, _ = data
+        eng = ExactKNN(k=2).fit(x)
+        with pytest.raises(KeyError):
+            eng.delete([10**6])
+        eng.delete([5])
+        with pytest.raises(KeyError, match="already deleted"):
+            eng.delete([5])
+        assert eng.n == x.shape[0] - 1
+
+    def test_delete_is_atomic(self, data):
+        """A bad id anywhere in the batch must leave the store untouched —
+        otherwise the engine's device views silently diverge (mutation
+        counter never bumps for the partially-applied tombstones)."""
+        x, q = data
+        eng = ExactKNN(k=1).fit(x)
+        target = int(np.asarray(eng.query(q[0]).indices)[0, 0])
+        before = eng.store.mutation_count
+        with pytest.raises(KeyError):
+            eng.delete([target, 10**6])
+        assert eng.store.mutation_count == before
+        assert eng.store.n_live == x.shape[0]
+        assert int(np.asarray(eng.query(q[0]).indices)[0, 0]) == target
+        with pytest.raises(KeyError, match="already deleted"):
+            eng.delete([7, 7])  # duplicate ids in one batch
+        assert eng.store.n_live == x.shape[0]
+
+    def test_upsert_dim_checked(self, data):
+        x, _ = data
+        eng = ExactKNN(k=2).fit(x)
+        with pytest.raises(ValueError, match="upsert"):
+            eng.upsert(np.zeros((2, 7), np.float32))
+
+    def test_many_upserts_roll_into_equal_delta_shards(self):
+        rng = np.random.default_rng(3)
+        x = rng.standard_normal((300, 16)).astype(np.float32)
+        store = DatasetStore.from_array(x, delta_rows=128)
+        store.upsert(rng.standard_normal((200, 16)).astype(np.float32))
+        shards = store.delta_shards()
+        assert [s.vectors.shape for s in shards] == [(128, 128), (128, 128)]
+        assert [s.n_valid for s in shards] == [128, 72]
+        assert [s.base_index for s in shards] == [300, 428]
+        assert store.n_live == 500
+        # full shards are materialized once; their row buffer is reused
+        # across calls (only the tombstone-masked norms are re-derived)
+        again = store.delta_shards()
+        assert again[0].vectors is shards[0].vectors
+        store.delete([300])
+        masked = store.delta_shards()
+        assert masked[0].vectors is shards[0].vectors
+        assert np.isinf(masked[0].norms[0])
+
+    def test_rows_with_overflowing_norms_rejected(self):
+        """A row whose f32 squared norm is +inf would wear the tombstone
+        sentinel — silently stored but never returnable. Reject at ingest."""
+        huge = np.full((2, 16), 2e19, np.float32)
+        with pytest.raises(ValueError, match="non-finite"):
+            DatasetStore.from_array(huge)
+        x = np.ones((4, 16), np.float32)
+        store = DatasetStore.from_array(x)
+        with pytest.raises(ValueError, match="non-finite"):
+            store.upsert(huge[0])
+        assert store.n_live == 4 and store.n_delta == 0  # nothing half-applied

@@ -1,0 +1,68 @@
+"""DoubleBufferedStream: prefetch structure + the re-iteration regression
+(a second pass used to silently yield nothing — ISSUE 2 satellite)."""
+import numpy as np
+import pytest
+
+from repro.core import DoubleBufferedStream, ExactKNN
+from repro.core.streaming import prefetch_to_device
+
+
+def test_single_pass_order_and_transfers():
+    items = [np.full((4,), i, np.float32) for i in range(5)]
+    s = DoubleBufferedStream(items, depth=2)
+    out = [int(x[0]) for x in s]
+    assert out == [0, 1, 2, 3, 4]
+    assert s.transfers == 5
+
+
+def test_restartable_source_reiterates():
+    """A list source supports any number of passes; each is a fresh scan."""
+    items = [np.full((2,), i, np.float32) for i in range(4)]
+    s = DoubleBufferedStream(items, depth=3)
+    first = [int(x[0]) for x in s]
+    second = [int(x[0]) for x in s]
+    assert first == second == [0, 1, 2, 3]
+    assert s.transfers == 8 and s.restarts == 1
+
+
+def test_one_shot_iterator_raises_instead_of_yielding_nothing():
+    """Regression: re-iterating a consumed generator must raise loudly."""
+    gen = (np.zeros((2,), np.float32) for _ in range(3))
+    s = DoubleBufferedStream(gen, depth=2)
+    assert len(list(s)) == 3
+    with pytest.raises(RuntimeError, match="one-shot iterator"):
+        list(s)
+
+
+def test_partially_consumed_restartable_restarts_from_the_top():
+    items = list(range(6))
+    s = DoubleBufferedStream(items, depth=2, put_fn=lambda x: x)
+    it = iter(s)
+    assert next(it) == 0 and next(it) == 1
+    assert list(s) == [0, 1, 2, 3, 4, 5]  # fresh pass, not a resume
+
+
+def test_depth_validation():
+    with pytest.raises(ValueError):
+        DoubleBufferedStream([1, 2], depth=0)
+
+
+def test_prefetch_to_device_alias():
+    out = list(prefetch_to_device([np.ones(3, np.float32)], depth=2))
+    assert len(out) == 1
+
+
+def test_store_streamed_engine_can_query_twice(tmp_path):
+    """End-to-end regression: the out-of-core engine issues one streamed
+    scan per query — the second query must not see an exhausted source."""
+    from repro.store import DatasetStore
+
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((600, 24)).astype(np.float32)
+    q = rng.standard_normal((4, 24)).astype(np.float32)
+    store = DatasetStore.from_array(x, rows_per_shard=256, directory=str(tmp_path))
+    eng = ExactKNN(k=5, device_budget_bytes=1).fit_store(store)
+    a = eng.query_batch(q)
+    b = eng.query_batch(q)
+    np.testing.assert_array_equal(np.asarray(a.indices), np.asarray(b.indices))
+    assert (np.asarray(a.indices) >= 0).all()
