@@ -8,14 +8,19 @@ Emits ``name,us_per_call,derived`` CSV rows (stdout), matching:
     chipknn/*    section 4.6    (GB/s vs dimension, CHIP-KNN comparison)
     roofline/*   EXPERIMENTS.md Roofline (from dry-run artifacts)
     store/*      DatasetStore tiers (f32 / int8 / mmap-streamed)
+    kernels/*    executor x tier sweep, pruning skip-rate, autotuned blocks
 
 Every section additionally lands as machine-readable
 ``<json-dir>/BENCH_<section>.json`` (qps, p50/p99, bytes scanned per tier,
-certification rate) so the perf trajectory is trackable across PRs.
+certification rate) so the perf trajectory is trackable across PRs. The
+kernels section is ALSO copied to ``BENCH_kernels.json`` at the repo root
+— that file is the CI artifact tracking the execution-layer trajectory.
 """
 from __future__ import annotations
 
 import argparse
+import os
+import shutil
 import sys
 import traceback
 
@@ -25,12 +30,22 @@ def main(argv=None) -> int:
     ap.add_argument("--quick", action="store_true", help="reduced sizes")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: table2,table3,chipknn,"
-                         "roofline,store")
+                         "roofline,store,kernels")
     ap.add_argument("--json-dir", default="artifacts/bench",
                     help="directory for BENCH_<section>.json outputs")
+    ap.add_argument("--kernels-json", default="BENCH_kernels.json",
+                    help="repo-root copy of the kernels section (CI artifact)")
     args = ap.parse_args(argv)
 
-    from benchmarks import chipknn, common, roofline_table, store_bench, table2, table3
+    from benchmarks import (
+        chipknn,
+        common,
+        kernels_bench,
+        roofline_table,
+        store_bench,
+        table2,
+        table3,
+    )
 
     sections = {
         "table2": table2.run,
@@ -38,6 +53,7 @@ def main(argv=None) -> int:
         "chipknn": chipknn.run,
         "roofline": roofline_table.run,
         "store": store_bench.run,
+        "kernels": kernels_bench.run,
     }
     chosen = (args.only.split(",") if args.only else list(sections))
     print("name,us_per_call,derived")
@@ -51,6 +67,11 @@ def main(argv=None) -> int:
             print(f"{name},0,ERROR", flush=True)
     for path in common.write_json(args.json_dir, quick=args.quick):
         print(f"# wrote {path}", file=sys.stderr)
+    kern_src = os.path.join(args.json_dir, "BENCH_kernels.json")
+    if ("kernels" in common.RESULTS and os.path.exists(kern_src)
+            and os.path.abspath(kern_src) != os.path.abspath(args.kernels_json)):
+        shutil.copyfile(kern_src, args.kernels_json)
+        print(f"# wrote {args.kernels_json}", file=sys.stderr)
     return failures
 
 

@@ -29,6 +29,7 @@ from repro.core.executors import (
     get_executor,
     list_executors,
     register_executor,
+    set_executable_cache_limit,
 )
 from repro.core.fdsq import fdsq_query_stream, fdsq_search
 from repro.core.planner import (
@@ -60,7 +61,8 @@ __all__ = [
     "plan", "DatasetMeta", "DatasetStoreMeta", "EngineConfig",
     "largest_divisor_at_most",
     "execute", "register_executor", "get_executor", "list_executors",
-    "cache_info", "clear_executable_cache", "ExecContext",
+    "cache_info", "clear_executable_cache", "set_executable_cache_limit",
+    "ExecContext",
     "TieredResident", "cached_partition_step",
     "fqsd_scan", "fqsd_streamed", "fdsq_search", "fdsq_query_stream",
     "fdsq_sharded", "fqsd_sharded", "fqsd_ring", "shard_dataset",

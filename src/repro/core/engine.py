@@ -98,6 +98,13 @@ class ExactKNN:
         self.device_budget_bytes = device_budget_bytes
         self._store = None  # repro.store.DatasetStore
         self._resident = True
+        # cos + fused backend: the resident view is normalized at fit time
+        # (every resident plan routes to the fused kernel, which then skips
+        # its own dataset normalization; delta/streamed paths score raw
+        # rows through cosine_distance, which is scale-invariant anyway)
+        self._cos_prenormalized = (
+            metric == "cos" and backend == "pallas" and mesh is None
+        )
         self._ds: part.PaddedDataset | None = None  # device f32 view
         self._int8: QuantizedDataset | None = None  # device int8 view
         self._delta_dev: list[part.PaddedDataset] = []  # device delta shards
@@ -146,6 +153,18 @@ class ExactKNN:
             host = store.resident()  # tombstones already folded into norms
             vec = jnp.asarray(host.vectors, dtype=self.dtype)
             nrm = jnp.asarray(host.norms)
+            if self._cos_prenormalized:
+                # cos is scale-invariant, so the resident view is normalized
+                # ONCE here instead of per query batch inside the fused
+                # kernel (an O(N*d) pass on the serving hot path). The norms
+                # channel keeps the RAW norms: it is the validity mask
+                # (+inf = padding/tombstone) and mutations refresh it.
+                rn = jnp.sqrt(jnp.sum(vec.astype(jnp.float32) ** 2,
+                                      axis=-1, keepdims=True))
+                vec = jnp.where(
+                    jnp.isfinite(rn) & (rn > 0),
+                    vec / jnp.maximum(rn, 1e-30), 0.0,
+                ).astype(self.dtype)
             if self.mesh is not None:
                 vec, nrm = sh.shard_dataset(self.mesh, vec, nrm, self.mesh_axes)
             self._ds = part.PaddedDataset(vec, nrm, host.n_valid, 0)
@@ -326,6 +345,12 @@ class ExactKNN:
         (None when the last plan ran a non-quantized executor)."""
         return self._last_ctx.certificate if self._last_ctx else None
 
+    @property
+    def last_kernel_stats(self) -> dict | None:
+        """Observability from the most recent fused-kernel plan (pruning
+        skip rate, resolved tile shapes); None for non-Pallas executors."""
+        return self._last_ctx.kernel_stats if self._last_ctx else None
+
     # ------------------------------------------------------------ planning
     def config(self) -> EngineConfig:
         """The engine's knobs as pure planner input."""
@@ -338,6 +363,7 @@ class ExactKNN:
             sharded=self.mesh is not None,
             mesh_axes=self.mesh_axes,
             rescore_factor=self.rescore_factor,
+            dtype=jnp.dtype(self.dtype).name,
         )
 
     def dataset_meta(self, tier: str = "f32") -> DatasetMeta:
@@ -369,7 +395,9 @@ class ExactKNN:
 
     def _ctx(self, prefetch_depth: int = 2) -> ExecContext:
         return ExecContext(
-            mesh=self.mesh, mesh_axes=self.mesh_axes, prefetch_depth=prefetch_depth
+            mesh=self.mesh, mesh_axes=self.mesh_axes,
+            prefetch_depth=prefetch_depth,
+            cos_prenormalized=self._cos_prenormalized,
         )
 
     def _run(self, p: ExecutionPlan, queries: jax.Array, dataset, **ctx_kw) -> TopK:

@@ -13,10 +13,17 @@ for shapes already seen ("no reflashing", section 3.2) — and because the
 cache is explicit, that invariant is directly testable via
 :func:`cache_info` (see tests/test_planner.py) instead of being an
 accident of jit internals.
+
+The cache is a bounded LRU (:func:`set_executable_cache_limit`): autotune
+sweeps and long-lived multi-tenant servers plan many distinct keys, and an
+unbounded map would pin every executable ever compiled. Evictions are
+counted in :func:`cache_info` so tests (and dashboards) can tell a genuine
+recompile from an eviction-induced one.
 """
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 from typing import Callable, Iterable, NamedTuple, Sequence
 
 import jax
@@ -40,7 +47,14 @@ class ExecContext:
     mesh: jax.sharding.Mesh | None = None
     mesh_axes: Sequence[str] = ("data", "model")
     prefetch_depth: int = 2
-    certificate: jax.Array | None = None  # set by fqsd-int8: (m,) bool
+    certificate: jax.Array | None = None  # set by int8 executors: (m,) bool
+    #: set by the fused Pallas executors: {"prune_skip_rate": 0-d array,
+    #: "blocks": (bm, bn, bd)}. The skip rate stays a device scalar so
+    #: publishing stats never forces a host sync; float() it lazily.
+    kernel_stats: dict | None = None
+    #: the resident dataset rows were L2-normalized at fit time (cos metric
+    #: via the fused kernel: the kernel then skips its own dataset pass)
+    cos_prenormalized: bool = False
 
 
 class TieredResident(NamedTuple):
@@ -54,8 +68,12 @@ class TieredResident(NamedTuple):
 Executor = Callable[[ExecutionPlan, jax.Array, object, ExecContext], TopK]
 
 _REGISTRY: dict[str, Executor] = {}
-_EXECUTABLE_CACHE: dict[tuple, Callable] = {}
-_CACHE_STATS = {"hits": 0, "misses": 0}
+_EXECUTABLE_CACHE: "OrderedDict[tuple, Callable]" = OrderedDict()
+_CACHE_STATS = {"hits": 0, "misses": 0, "evictions": 0}
+#: LRU bound on compiled executables (None = unbounded). Generous enough
+#: that serving workloads never evict (they cycle O(log max_batch) plans);
+#: tight enough that autotune sweeps cannot grow the cache without limit.
+_CACHE_MAX_ENTRIES: int | None = 256
 
 
 # ----------------------------------------------------------------- registry
@@ -99,22 +117,49 @@ def execute(
 def _cached(key: tuple, build: Callable[[], Callable]) -> Callable:
     try:
         fn = _EXECUTABLE_CACHE[key]
+        _EXECUTABLE_CACHE.move_to_end(key)  # LRU: reads refresh recency
         _CACHE_STATS["hits"] += 1
         return fn
     except KeyError:
         fn = _EXECUTABLE_CACHE[key] = build()
         _CACHE_STATS["misses"] += 1
+        _evict_over_limit()
         return fn
 
 
+def _evict_over_limit() -> None:
+    if _CACHE_MAX_ENTRIES is None:
+        return
+    while len(_EXECUTABLE_CACHE) > _CACHE_MAX_ENTRIES:
+        _EXECUTABLE_CACHE.popitem(last=False)  # least recently used
+        _CACHE_STATS["evictions"] += 1
+
+
+def set_executable_cache_limit(max_entries: int | None) -> None:
+    """Bound the executable cache (None = unbounded). Shrinking evicts the
+    least-recently-used executables immediately (counted in cache_info)."""
+    global _CACHE_MAX_ENTRIES
+    if max_entries is not None and max_entries < 1:
+        raise ValueError(f"max_entries must be >= 1 or None, got {max_entries}")
+    _CACHE_MAX_ENTRIES = max_entries
+    _evict_over_limit()
+
+
 def cache_info() -> dict:
-    """{"hits", "misses", "size"} — misses == number of compiles triggered."""
-    return {**_CACHE_STATS, "size": len(_EXECUTABLE_CACHE)}
+    """{"hits", "misses", "evictions", "size", "max_entries"} — misses ==
+    number of compiles triggered; evictions == executables dropped by the
+    LRU bound (a later re-plan of an evicted key recompiles = new miss)."""
+    return {
+        **_CACHE_STATS,
+        "size": len(_EXECUTABLE_CACHE),
+        "max_entries": _CACHE_MAX_ENTRIES,
+    }
 
 
 def clear_executable_cache() -> None:
     _EXECUTABLE_CACHE.clear()
     _CACHE_STATS["hits"] = _CACHE_STATS["misses"] = 0
+    _CACHE_STATS["evictions"] = 0
 
 
 def _arr_key(a: jax.Array) -> tuple:
@@ -161,20 +206,44 @@ def _fqsd_xla(plan, queries, dataset: part.PaddedDataset, ctx) -> TopK:
     return _cached(key, build)(queries, dataset.vectors, dataset.norms)
 
 
+def _plan_blocks(plan) -> tuple[int, int, int]:
+    """Resolve a plan's (possibly autotuned) kernel tile shapes; 0 = cold
+    tuning cache = the kernel defaults."""
+    from repro.kernels.knn.ops import DEFAULT_BLOCKS
+
+    return (plan.block_m or DEFAULT_BLOCKS[0],
+            plan.block_n or DEFAULT_BLOCKS[1],
+            plan.block_d or DEFAULT_BLOCKS[2])
+
+
+
+
 @register_executor("fdsq-pallas")
 def _fdsq_pallas(plan, queries, dataset: part.PaddedDataset, ctx) -> TopK:
     """Fused distance+queue kernel; one executable serves both logical modes
-    (interpret mode off-TPU, MXU/VMEM pipeline on hardware)."""
+    (interpret mode off-TPU, MXU/VMEM pipeline on hardware). Tile shapes
+    come from the plan (autotuned) and the measured threshold-pruning skip
+    rate is published on ctx.kernel_stats."""
     from repro.kernels.knn import ops as knn_ops
 
-    key = (plan.cache_key(), _arr_key(queries), _arr_key(dataset.vectors))
+    bm, bn, bd = _plan_blocks(plan)
+    pre = bool(ctx.cos_prenormalized) and plan.metric == "cos"
+    key = (plan.cache_key(), _arr_key(queries), _arr_key(dataset.vectors), pre)
 
     def build():
         return knn_ops.knn.lower(
             queries, dataset.vectors, plan.k, plan.metric, dataset.norms,
+            block_m=bm, block_n=bn, block_d=bd, return_stats=True,
+            x_prenormalized=pre,
         ).compile()
 
-    return _cached(key, build)(queries, dataset.vectors, dataset.norms)
+    out, skip_rate = _cached(key, build)(queries, dataset.vectors, dataset.norms)
+    ctx.kernel_stats = {
+        "prune_skip_rate": skip_rate,
+        # resolved through ops.py so stats report the tiles that ACTUALLY ran
+        "blocks": knn_ops.resolved_blocks(plan.k, plan.padded_dim, bm, bn, bd),
+    }
+    return out
 
 
 @register_executor("fqsd-streamed")
@@ -240,6 +309,57 @@ def _fqsd_int8(plan, queries, dataset: TieredResident, ctx) -> TopK:
             return fqsd_scan.lower(
                 queries, dataset.f32.vectors, dataset.f32.norms,
                 plan.k, plan.metric, plan.chunk_rows,
+            ).compile()
+
+        exact = _cached(fkey, build_fallback)(
+            queries, dataset.f32.vectors, dataset.f32.norms
+        )
+        keep = cert[:, None]
+        out = TopK(jnp.where(keep, out.scores, exact.scores),
+                   jnp.where(keep, out.indices, exact.indices))
+    return out
+
+
+@register_executor("fqsd-int8-pallas")
+def _fqsd_int8_pallas(plan, queries, dataset: TieredResident, ctx) -> TopK:
+    """Fused quantized FQ-SD: the int8 Pallas scan streams the dataset at
+    1 B/element, keeps the widened candidate queue in VMEM, and the exact
+    rescore reads ONLY the candidate rows of the f32 tier — distances and
+    bounds never touch HBM (paper sections 3.2 + 5 combined).
+
+    Exactness mirrors fqsd-int8: the per-query certificate (published on
+    ctx.certificate) proves the on-chip candidate set covered every
+    possible true neighbor; uncertified rows are recomputed by a cached
+    direct-form exact scan of the SAME padded shapes, so the returned
+    top-k is exact for every row. The kernel's threshold-pruning skip rate
+    and tile shapes land on ctx.kernel_stats."""
+    from repro.kernels.knn import ops as knn_ops
+
+    q8 = dataset.quant
+    bm, bn, bd = _plan_blocks(plan)
+    key = (plan.cache_key(), _arr_key(queries), _arr_key(q8.q))
+
+    def build():
+        return knn_ops.knn_int8.lower(
+            queries, q8, dataset.f32.vectors, plan.k, plan.rescore_factor,
+            block_m=bm, block_n=bn, block_d=bd, return_stats=True,
+        ).compile()
+
+    out, cert, skip_rate = _cached(key, build)(queries, q8, dataset.f32.vectors)
+    ctx.certificate = cert
+    ctx.kernel_stats = {
+        "prune_skip_rate": skip_rate,
+        "blocks": knn_ops.resolved_blocks(plan.k, plan.padded_dim, bm, bn, bd,
+                                          rescore_factor=plan.rescore_factor),
+    }
+    if not bool(jax.device_get(cert).all()):
+        fkey = ("int8-pallas-fallback", plan.cache_key(),
+                _arr_key(queries), _arr_key(dataset.f32.vectors))
+
+        def build_fallback():
+            return knn_ops.knn_exact_direct.lower(
+                queries, dataset.f32.vectors, dataset.f32.norms,
+                plan.k, plan.chunk_rows,
             ).compile()
 
         exact = _cached(fkey, build_fallback)(

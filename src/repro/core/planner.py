@@ -17,12 +17,19 @@ plans hit the same cached executable no matter how many mode switches
 happened in between (section 3.2).
 
 Nothing here touches device state; everything here is unit-testable
-without JAX tracing.
+without JAX tracing. The one external fact a plan may carry is the
+*autotuned block shapes* for the fused Pallas executors: ``plan()``
+consults the per-device tuning cache (``repro.tuning``, a pure read of
+deterministic data — a cold cache simply leaves the blocks at 0 = kernel
+defaults), and the chosen blocks ride ``cache_key()`` so tuned plans hit
+the same compiled executable forever after.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Literal, Sequence
+
+from repro.tuning.autotune import lookup_blocks
 
 Backend = Literal["xla", "pallas"]
 ModeHint = Literal["fdsq", "fqsd", "fqsd-streamed"]
@@ -36,9 +43,13 @@ PLANNABLE_EXECUTORS = (
     "fqsd-streamed",
     "fqsd-mmap-streamed",
     "fqsd-int8",
+    "fqsd-int8-pallas",
     "fdsq-sharded",
     "fqsd-sharded",
 )
+
+#: Executors whose block shapes the per-device autotuner may override.
+TUNABLE_EXECUTORS = ("fdsq-pallas", "fqsd-int8-pallas")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,6 +78,11 @@ class ExecutionPlan(EnginePlan):
     tier: str = "f32"
     rescore_factor: int = 4  # int8 tier: exact-rescore budget = factor * k
     n_shards: int = 1
+    #: Autotuned kernel tile shapes for the fused executors; 0 means "use
+    #: the kernel defaults" (cold tuning cache). See repro.tuning.
+    block_m: int = 0
+    block_n: int = 0
+    block_d: int = 0
 
     def cache_key(self) -> tuple:
         """Everything that determines the compiled executable for this plan
@@ -75,6 +91,7 @@ class ExecutionPlan(EnginePlan):
             self.executor, self.m, self.k, self.metric, self.chunk_rows,
             self.n_partitions, self.padded_rows, self.padded_dim,
             self.tier, self.rescore_factor,
+            self.block_m, self.block_n, self.block_d,
         )
 
 
@@ -114,6 +131,7 @@ class EngineConfig:
     sharded: bool = False
     mesh_axes: Sequence[str] = ("data", "model")
     rescore_factor: int = 4  # int8 tier exact-rescore budget (x k)
+    dtype: str = "float32"  # query/dataset dtype (part of the tuning key)
 
 
 def largest_divisor_at_most(n: int, cap: int) -> int:
@@ -161,11 +179,12 @@ def plan(
       host-iterator "fqsd-streamed" otherwise;
     * sharded dataset  -> the mesh executors (mode picks fan-out vs ring);
     * tier="int8"      -> the 1 B/element quantized scan with certified
-      exact rescore ("fqsd-int8"; l2 only — other metrics fall back to the
-      f32 executors, like the pallas/cos fallback below);
+      exact rescore: the fused on-chip kernel "fqsd-int8-pallas" when
+      backend="pallas", the XLA "fqsd-int8" otherwise (l2 only — other
+      metrics fall back to the f32 executors);
     * backend="pallas" -> the fused kernel, which serves BOTH logical modes
-      with one executable ("fdsq-pallas"); metrics it cannot fuse (cos)
-      fall back to the XLA executors instead of raising;
+      AND all three metrics with one executable family ("fdsq-pallas";
+      cos is served by pre-normalized rows through the ip epilogue);
     * mode="fqsd"      -> chunked scan with a chunk size that is a real
       divisor of the padded row count (see `largest_divisor_at_most`);
     * mode="fdsq"      -> partition-parallel fan-out with a partition count
@@ -202,11 +221,12 @@ def plan(
         mode_label = f"{mode}-sharded"
         tier = "f32"
     elif tier == "int8" and mode == "fqsd" and cfg.metric == "l2":
-        executor = "fqsd-int8"
+        executor = ("fqsd-int8-pallas" if cfg.backend == "pallas"
+                    else "fqsd-int8")
         mode_label = "fqsd-int8"
         # chunking doubles as the f32 fallback geometry for uncertified rows
         chunk = largest_divisor_at_most(rows, max(1, chunk))
-    elif cfg.backend == "pallas" and cfg.metric in ("l2", "ip"):
+    elif cfg.backend == "pallas":
         executor = "fdsq-pallas"
         tier = "f32"
     elif mode == "fdsq":
@@ -217,6 +237,19 @@ def plan(
         executor = "fqsd-xla"
         tier = "f32"
         chunk = largest_divisor_at_most(rows, max(1, chunk))
+
+    # per-device autotuned tile shapes for the fused kernels (0 = kernel
+    # defaults). The lookup is a pure read of the persisted tuning cache:
+    # equal inputs + equal cache state -> equal plans -> executable cache
+    # hits, so tuning never causes a recompile for a seen key.
+    block_m = block_n = block_d = 0
+    if executor in TUNABLE_EXECUTORS:
+        tuned = lookup_blocks(
+            executor, m, rows, int(dataset_meta.padded_dim),
+            cfg.dtype, cfg.metric, int(cfg.k),
+        )
+        if tuned is not None:
+            block_m, block_n, block_d = tuned
 
     return ExecutionPlan(
         mode=mode_label,
@@ -234,4 +267,7 @@ def plan(
         tier=tier,
         rescore_factor=int(cfg.rescore_factor),
         n_shards=int(getattr(dataset_meta, "n_shards", 1)),
+        block_m=block_m,
+        block_n=block_n,
+        block_d=block_d,
     )

@@ -114,3 +114,24 @@ def sort_topk_tile(scores, idxs, k_eff: int):
     """Sort a (..., L) tile ascending and return its first k_eff columns."""
     v, i = bitonic_sort(scores, idxs)
     return v[..., :k_eff], i[..., :k_eff]
+
+
+def tile_prunable(scores, queue_vals):
+    """True iff NO element of a (bm, bn) score tile can enter the queues.
+
+    This is the paper's kNN-queue insertion filter lifted to tile
+    granularity: once the per-query queues are warm, a whole tile whose
+    row-wise minimum cannot beat the queue's current worst entry carries
+    zero insertable candidates, so the O(log^2 bn) bitonic sort and the
+    merge can be skipped entirely.
+
+    Pruning invariant (what keeps the pruned kernel bit-identical to the
+    unpruned one): the comparison is STRICTLY greater-than. A candidate
+    whose score merely *ties* the queue's worst value can still displace it
+    through the lexicographic (value, index) tie-break, so tiles touching
+    the threshold are never pruned. `queue_vals` is sorted ascending, hence
+    its last column is the per-query worst ("kth-best") value.
+    """
+    worst = queue_vals[..., -1:]  # (bm, 1): per-query kth-best
+    tile_min = jnp.min(scores, axis=-1, keepdims=True)  # (bm, 1)
+    return jnp.all(tile_min > worst)

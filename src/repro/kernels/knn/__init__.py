@@ -1,1 +1,6 @@
-from repro.kernels.knn.ops import knn
+from repro.kernels.knn.ops import (
+    DEFAULT_BLOCKS,
+    knn,
+    knn_exact_direct,
+    knn_int8,
+)

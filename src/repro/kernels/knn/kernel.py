@@ -18,6 +18,22 @@ into an f32 VMEM accumulator; on the last d step the tile is scored
 queues flush to HBM on the last (n, d) step. The sequential-grid input
 pipelining (next (Q, X) tiles DMA while current tile computes) is the
 paper's double-buffering at the VMEM tier.
+
+Threshold-pruned queue merge (``prune=True``, the default): the queue
+scratch ``buf_v`` is sorted ascending, so its last column is each query's
+current kth-best score. Before sorting a tile, the kernel computes the
+tile's row-wise minimum; when EVERY query's tile minimum is strictly worse
+than its kth-best, no candidate in the tile can enter any queue and the
+bitonic sort + merge are skipped (``repro.kernels.bitonic.tile_prunable``).
+
+**Pruning invariant**: the skip test uses strict ``>``. A candidate that
+ties the queue's worst value can still displace it via the lexicographic
+(value, index) tie-break, so tying tiles are never pruned — the pruned
+kernel is bit-identical (values AND indices) to the unpruned kernel on
+every input, including tie-heavy ones (tested by tests/test_int8_pallas.py).
+This is the paper's insertion filter: once queues warm up, the per-tile
+sort runs rarely instead of always. Skipped-merge counts are emitted per
+m-tile in the third output so callers can report the measured skip rate.
 """
 from __future__ import annotations
 
@@ -31,12 +47,13 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro import compat
 
-from repro.kernels.bitonic import bitonic_sort, topk_update
+from repro.kernels.bitonic import bitonic_sort, tile_prunable, topk_update
 
 
 def _knn_kernel(
-    q_ref, x_ref, qn_ref, xn_ref, ov_ref, oi_ref, acc, buf_v, buf_i,
+    q_ref, x_ref, qn_ref, xn_ref, ov_ref, oi_ref, sk_ref, acc, buf_v, buf_i,
     *, k_eff: int, n_steps: int, d_steps: int, bn: int, metric: str,
+    prune: bool,
 ):
     j = pl.program_id(1)
     kd = pl.program_id(2)
@@ -45,6 +62,7 @@ def _knn_kernel(
     def _init_queue():
         buf_v[...] = jnp.full_like(buf_v, jnp.inf)
         buf_i[...] = jnp.full_like(buf_i, -1)
+        sk_ref[0, 0] = 0
 
     @pl.when(kd == 0)
     def _init_acc():
@@ -67,10 +85,25 @@ def _knn_kernel(
             s = -cross
         s = jnp.where(valid, s, jnp.inf)
         idx = j * bn + lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        sv, si = bitonic_sort(s, idx)
-        buf_v[...], buf_i[...] = topk_update(
-            buf_v[...], buf_i[...], sv[:, :k_eff], si[:, :k_eff]
-        )
+
+        def _merge():
+            sv, si = bitonic_sort(s, idx)
+            buf_v[...], buf_i[...] = topk_update(
+                buf_v[...], buf_i[...], sv[:, :k_eff], si[:, :k_eff]
+            )
+
+        if prune:
+            # kNN-queue insertion filter: sort+merge only when some row of
+            # the tile can still beat that query's kth-best (strict >; ties
+            # never prune — see module docstring).
+            skip = tile_prunable(s, buf_v[...])
+            pl.when(~skip)(_merge)
+
+            @pl.when(skip)
+            def _count_skip():
+                sk_ref[0, 0] += 1
+        else:
+            _merge()
 
     @pl.when((j == n_steps - 1) & (kd == d_steps - 1))
     def _flush():
@@ -80,7 +113,10 @@ def _knn_kernel(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("k_eff", "metric", "block_m", "block_n", "block_d", "interpret"),
+    static_argnames=(
+        "k_eff", "metric", "block_m", "block_n", "block_d", "interpret",
+        "prune",
+    ),
 )
 def knn_pallas(
     q: jax.Array,
@@ -92,10 +128,15 @@ def knn_pallas(
     block_n: int = 512,
     block_d: int = 512,
     interpret: bool = False,
+    prune: bool = True,
 ):
     """Fused exact kNN. Preconditions enforced by ops.py:
     M % bm == N % bn == d % bd == 0; k_eff pow2 <= bn; xn is (1, N) with
     +inf on padded rows; q/x same dtype.
+
+    Returns (values (M, k_eff), indices (M, k_eff), skips (m_tiles, 1)):
+    `skips` counts threshold-pruned tile merges per m-tile (each m-tile has
+    exactly n_tiles merge opportunities).
     """
     m, d = q.shape
     n, _ = x.shape
@@ -107,7 +148,7 @@ def knn_pallas(
     grid = (m // bm, n_steps, d_steps)
     kern = functools.partial(
         _knn_kernel, k_eff=k_eff, n_steps=n_steps, d_steps=d_steps, bn=bn,
-        metric=metric,
+        metric=metric, prune=prune,
     )
     return pl.pallas_call(
         kern,
@@ -121,10 +162,12 @@ def knn_pallas(
         out_specs=[
             pl.BlockSpec((bm, k_eff), lambda i, j, kd: (i, 0)),
             pl.BlockSpec((bm, k_eff), lambda i, j, kd: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, j, kd: (i, 0)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((m, k_eff), jnp.float32),
             jax.ShapeDtypeStruct((m, k_eff), jnp.int32),
+            jax.ShapeDtypeStruct((m // bm, 1), jnp.int32),
         ],
         scratch_shapes=[
             pltpu.VMEM((bm, bn), jnp.float32),  # cross-product accumulator

@@ -1,0 +1,176 @@
+"""Fused int8 Pallas scan — 1 B/element dataset traffic, on-chip candidates.
+
+The paper's FQ-SD throughput ceiling is memory bandwidth (section 5 names
+quantization as the lever), so the int8 tier's whole point is bytes moved:
+this kernel streams the int8 codes from HBM at 1 byte/element and never
+materializes any (M, N) intermediate. Per grid step it
+
+1. dot-accumulates one quantized (bm, bn) cross-product tile on the MXU
+   into an f32 VMEM accumulator (the int8 tile is widened in VMEM, so HBM
+   sees only the 1-byte codes);
+2. applies the per-row scale dequant in the epilogue and forms the
+   *certified lower bound* on the exact squared-L2 distance
+   (``repro.core.quantized`` bound: |d - d_hat| <= 2*sqrt(d_hat)*err + err^2);
+3. folds the tile's lower bounds into a VMEM-resident *widened* candidate
+   queue of q_len = 2 * (rescore_budget) entries per query — wide so the
+   caller can read both the rescore candidates (first half) and the
+   (r+1)-th smallest lower bound that certifies them (entry r).
+
+The certified exact rescore then happens outside the kernel and reads ONLY
+the candidate rows of the f32 base tier (an (M, r) gather instead of a full
+4 B/element pass) — see ``repro.kernels.knn.ops.knn_int8``.
+
+The threshold-pruned queue merge is shared with the f32 kernel: strictly
+worse tiles skip the bitonic sort + merge (strict ``>`` keeps pruning
+bit-identical under ties — see ``kernel.py`` for the invariant), and
+skipped-merge counts flush per m-tile for skip-rate reporting.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro import compat
+
+from repro.kernels.bitonic import bitonic_sort, tile_prunable, topk_update
+
+
+def _knn_int8_kernel(
+    q_ref, x_ref, qn_ref, sc_ref, er_ref, xn_ref, ov_ref, oi_ref, sk_ref,
+    acc, buf_v, buf_i,
+    *, q_len: int, n_steps: int, d_steps: int, bn: int, prune: bool,
+):
+    j = pl.program_id(1)
+    kd = pl.program_id(2)
+
+    @pl.when((j == 0) & (kd == 0))
+    def _init_queue():
+        buf_v[...] = jnp.full_like(buf_v, jnp.inf)
+        buf_i[...] = jnp.full_like(buf_i, -1)
+        sk_ref[0, 0] = 0
+
+    @pl.when(kd == 0)
+    def _init_acc():
+        acc[...] = jnp.zeros_like(acc)
+
+    # int8 codes widen in VMEM; HBM traffic for the dataset stays 1 B/elem
+    acc[...] += lax.dot_general(
+        q_ref[...], x_ref[...].astype(jnp.float32), (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(kd == d_steps - 1)
+    def _bound_and_enqueue():
+        # per-row scale dequant epilogue: <q, x_hat> = s_x * <q, q_x>
+        cross = acc[...] * sc_ref[...]  # (bm, bn) * (1, bn)
+        xn = xn_ref[...]  # (1, bn) exact f32 norms; +inf marks invalid rows
+        e = er_ref[...]  # (1, bn) certified ||e_x|| upper bound
+        valid = jnp.isfinite(xn)
+        # ||x_hat||^2 bounded via exact norms (inf-safe on invalid rows)
+        xhat_sq = jnp.maximum(jnp.where(valid, xn, 0.0) - e * e, 0.0)
+        d_hat = jnp.maximum(qn_ref[...] - 2.0 * cross + xhat_sq, 0.0)
+        eps = 2.0 * jnp.sqrt(d_hat) * e + e * e
+        lower = jnp.where(valid, jnp.maximum(d_hat - eps, 0.0), jnp.inf)
+        idx = j * bn + lax.broadcasted_iota(jnp.int32, lower.shape, 1)
+
+        def _merge():
+            sv, si = bitonic_sort(lower, idx)
+            buf_v[...], buf_i[...] = topk_update(
+                buf_v[...], buf_i[...], sv[:, :q_len], si[:, :q_len]
+            )
+
+        if prune:
+            skip = tile_prunable(lower, buf_v[...])
+            pl.when(~skip)(_merge)
+
+            @pl.when(skip)
+            def _count_skip():
+                sk_ref[0, 0] += 1
+        else:
+            _merge()
+
+    @pl.when((j == n_steps - 1) & (kd == d_steps - 1))
+    def _flush():
+        ov_ref[...] = buf_v[...]
+        oi_ref[...] = buf_i[...]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "q_len", "block_m", "block_n", "block_d", "interpret", "prune",
+    ),
+)
+def knn_pallas_int8(
+    q: jax.Array,
+    x8: jax.Array,
+    qn: jax.Array,
+    scales: jax.Array,
+    err: jax.Array,
+    xn: jax.Array,
+    q_len: int,
+    block_m: int = 128,
+    block_n: int = 512,
+    block_d: int = 512,
+    interpret: bool = False,
+    prune: bool = True,
+):
+    """Fused int8 candidate scan. Preconditions enforced by ops.py:
+    M % bm == N % bn == d % bd == 0; q_len pow2 <= bn; q f32, x8 int8;
+    scales/err/xn are (1, N) f32 with xn = +inf on invalid rows (padding /
+    tombstones), err = 0 and scales = 1 on padding.
+
+    Returns (lower bounds (M, q_len) sorted ascending, indices (M, q_len),
+    skips (m_tiles, 1)). The first q_len//2 columns are the rescore
+    candidates; column q_len//2 is the (r+1)-th smallest lower bound used
+    by the exactness certificate.
+    """
+    m, d = q.shape
+    n, _ = x8.shape
+    bm, bn, bd = block_m, block_n, block_d
+    if m % bm or n % bn or d % bd or q_len > bn:
+        raise ValueError(
+            f"bad blocking m{m} n{n} d{d} bm{bm} bn{bn} bd{bd} q_len{q_len}"
+        )
+    n_steps, d_steps = n // bn, d // bd
+    grid = (m // bm, n_steps, d_steps)
+    kern = functools.partial(
+        _knn_int8_kernel, q_len=q_len, n_steps=n_steps, d_steps=d_steps,
+        bn=bn, prune=prune,
+    )
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bd), lambda i, j, kd: (i, kd)),
+            pl.BlockSpec((bn, bd), lambda i, j, kd: (j, kd)),
+            pl.BlockSpec((bm, 1), lambda i, j, kd: (i, 0)),
+            pl.BlockSpec((1, bn), lambda i, j, kd: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kd: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kd: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, q_len), lambda i, j, kd: (i, 0)),
+            pl.BlockSpec((bm, q_len), lambda i, j, kd: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, j, kd: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, q_len), jnp.float32),
+            jax.ShapeDtypeStruct((m, q_len), jnp.int32),
+            jax.ShapeDtypeStruct((m // bm, 1), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bm, bn), jnp.float32),  # int32->f32 cross accumulator
+            pltpu.VMEM((bm, q_len), jnp.float32),  # candidate lower bounds
+            pltpu.VMEM((bm, q_len), jnp.int32),  # candidate indices
+        ],
+        compiler_params=compat.tpu_compiler_params(
+            ('parallel', 'arbitrary', 'arbitrary')
+        ),
+        interpret=interpret,
+    )(q, x8, qn, scales, err, xn)

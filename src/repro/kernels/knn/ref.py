@@ -15,6 +15,10 @@ def knn_ref(
         s = jnp.maximum(qn - 2.0 * cross + xn[None, :], 0.0)
     elif metric == "ip":
         s = -cross
+    elif metric == "cos":
+        qn = jnp.sqrt(jnp.sum(q32 * q32, axis=-1, keepdims=True))
+        xn = jnp.sqrt(jnp.sum(x32 * x32, axis=-1))[None, :]
+        s = 1.0 - cross / jnp.maximum(qn * xn, 1e-30)
     else:
         raise ValueError(metric)
     m, n = s.shape

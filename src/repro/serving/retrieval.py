@@ -149,6 +149,10 @@ class AdaptiveScheduler:
         self._executors: dict[str, set] = {m: set() for m in self.MODES}
         self._bytes_scanned: dict[str, int] = {"f32": 0, "int8": 0}
         self._certified = {"total": 0, "true": 0}
+        # fused-kernel pruning skip rates: running sum + count (O(1) memory
+        # for long-lived servers, like the _certified counters)
+        self._skip_rate_sum = 0.0
+        self._skip_rate_n = 0
 
     # ------------------------------------------------------------ decisions
     def _expected_service_s(self, mode: str) -> float:
@@ -236,6 +240,11 @@ class AdaptiveScheduler:
             self._certified["true"] += int(cert.sum())
         else:
             cert = None
+        ks = self.engine.last_kernel_stats
+        if ks is not None and "prune_skip_rate" in ks:
+            # float() is a free sync here: results were materialized above
+            self._skip_rate_sum += float(ks["prune_skip_rate"])
+            self._skip_rate_n += 1
         if self._last_mode is not None and mode != self._last_mode:
             self._switches += 1
         self._last_mode = mode
@@ -309,7 +318,7 @@ class AdaptiveScheduler:
             per_plan["fqsd-int8"]["certified_exact"] = (
                 self._certified["true"] / self._certified["total"]
             )
-        return {
+        out = {
             "served": self.served,
             "deadline_misses": self.deadline_misses,
             "policy": self.policy,
@@ -317,6 +326,9 @@ class AdaptiveScheduler:
             "per_plan": per_plan,
             "bytes_scanned": dict(self._bytes_scanned),
         }
+        if self._skip_rate_n:  # fused Pallas plans only
+            out["prune_skip_rate"] = self._skip_rate_sum / self._skip_rate_n
+        return out
 
 
 class RetrievalServer(AdaptiveScheduler):

@@ -1,0 +1,24 @@
+"""repro.tuning — per-device block-shape autotuning for the fused kernels.
+
+    AutotuneCache     JSON-persisted {key -> BlockShapes} (artifacts/autotune/)
+    autotune_knn      sweep legal (bm, bn, bd) on the live device, cache winner
+    lookup_blocks     pure read the planner uses to fill ExecutionPlan blocks
+    candidate_blocks  the legality-filtered sweep space for one problem key
+"""
+from repro.tuning.autotune import (
+    AutotuneCache,
+    BlockShapes,
+    autotune_knn,
+    candidate_blocks,
+    default_cache,
+    device_kind,
+    lookup_blocks,
+    set_default_cache,
+    tuning_key,
+)
+
+__all__ = [
+    "AutotuneCache", "BlockShapes", "autotune_knn", "candidate_blocks",
+    "default_cache", "device_kind", "lookup_blocks", "set_default_cache",
+    "tuning_key",
+]

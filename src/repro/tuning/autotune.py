@@ -1,0 +1,356 @@
+"""Per-device block-shape autotuner for the fused Pallas kernels.
+
+The fused kNN kernels are tiled by (block_m, block_n, block_d); the right
+tile shapes depend on the device (VMEM size, MXU/VPU width, interpret-mode
+CPU) and on the problem key (M, N, d, dtype, metric). Instead of baked-in
+constants, this module:
+
+1. enumerates the *legal* candidate shapes for a key
+   (:func:`candidate_blocks` — alignment + VMEM-budget filtered);
+2. times each candidate on the live device (:func:`autotune_knn`; off-TPU
+   the kernels run in interpret mode, so the sweep still works on CPU —
+   the timings then rank the interpreter, which is exactly what serves
+   local tests);
+3. persists the winner to a JSON cache under ``artifacts/autotune/`` keyed
+   by device kind, and
+4. answers the planner's pure lookup (:func:`lookup_blocks`) so
+   ``ExecutionPlan`` carries tuned blocks instead of constants.
+
+The planner only ever *reads* the cache (a cold cache falls back to the
+kernel defaults), so planning stays pure and cheap; sweeps are explicit
+offline/benchmark-time calls. Because tuned blocks ride the plan's
+``cache_key()``, a cache hit reproduces the exact previous plan and the
+executor layer's executable cache guarantees zero recompiles
+("no reflashing" extends to tuning).
+
+Cache key format (one line per entry in the JSON file):
+
+    <kernel>|m<pow2-bucketed batch>|n<padded rows>|d<padded dim>|<dtype>|<metric>
+
+M is bucketed to the next power of two — the serving layer already pads
+batches that way, so tuning inherits the same O(log max_batch) key space.
+See ``src/repro/tuning/README.md`` for the sweep space and how to pre-seed
+caches for CI.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import NamedTuple
+
+SCHEMA_VERSION = 1
+DEFAULT_CACHE_DIR = os.path.join("artifacts", "autotune")
+
+#: Sweep space (filtered per key by :func:`candidate_blocks`).
+BM_CANDIDATES = (8, 32, 128, 256)
+BN_CANDIDATES = (256, 512, 1024, 2048)
+BD_CANDIDATES = (128, 256, 512)
+
+#: VMEM budget for (q tile + x tile + accumulator + queues); real cores
+#: have ~16 MB, keep headroom for double buffering.
+VMEM_BUDGET_BYTES = 8 * 1024 * 1024
+
+
+class BlockShapes(NamedTuple):
+    block_m: int
+    block_n: int
+    block_d: int
+
+
+def _next_pow2(v: int) -> int:
+    p = 1
+    while p < v:
+        p <<= 1
+    return p
+
+
+def _round_up(v: int, m: int) -> int:
+    return ((v + m - 1) // m) * m
+
+
+def tuning_key(kernel: str, m: int, n: int, d: int, dtype: str,
+               metric: str, k: int) -> str:
+    """Stable string key for one tuning problem (see module docstring).
+
+    `k` is part of the key because it sets the on-chip queue width, which
+    both constrains legal block_n and changes the winning trade-off —
+    blocks tuned at one k must never be applied (and silently re-clamped)
+    under another.
+    """
+    return (f"{kernel}|m{_next_pow2(max(1, int(m)))}|n{int(n)}|d{int(d)}"
+            f"|{dtype}|{metric}|k{int(k)}")
+
+
+def device_kind() -> str:
+    """Live device kind ("cpu", "TPU v5e", ...), filesystem-sanitized."""
+    import jax
+
+    kind = jax.devices()[0].device_kind
+    return re.sub(r"[^A-Za-z0-9_.-]+", "_", kind).strip("_") or "unknown"
+
+
+class AutotuneCache:
+    """JSON-persisted {tuning key -> winning BlockShapes} map.
+
+    Loading is tolerant by design: a missing, corrupted, or wrong-schema
+    file yields an empty cache (the planner then falls back to kernel
+    defaults) and the next :meth:`put` rewrites it cleanly — a damaged
+    cache can never take serving down, only un-tune it.
+    """
+
+    def __init__(self, path: str | None = None):
+        self.path = path
+        self._entries: dict[str, dict] = {}
+        self._loaded = path is None
+
+    @classmethod
+    def for_device(cls, cache_dir: str = DEFAULT_CACHE_DIR) -> "AutotuneCache":
+        return cls(os.path.join(cache_dir, f"{device_kind()}.json"))
+
+    # ------------------------------------------------------------- storage
+    def load(self) -> "AutotuneCache":
+        self._loaded = True
+        self._entries = {}
+        if self.path is None or not os.path.exists(self.path):
+            return self
+        try:
+            with open(self.path) as f:
+                payload = json.load(f)
+            entries = payload["entries"]
+            if not isinstance(entries, dict):
+                raise TypeError("entries must be a dict")
+            for key, e in entries.items():
+                # validate eagerly so one bad entry cannot poison lookups
+                BlockShapes(int(e["block_m"]), int(e["block_n"]),
+                            int(e["block_d"]))
+            self._entries = {k: dict(v) for k, v in entries.items()}
+        except (OSError, ValueError, KeyError, TypeError):
+            self._entries = {}  # corrupt cache == cold cache, never an error
+        return self
+
+    def save(self) -> None:
+        if self.path is None:
+            return
+        os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
+        payload = {
+            "schema_version": SCHEMA_VERSION,
+            "device": os.path.splitext(os.path.basename(self.path))[0],
+            "entries": self._entries,
+        }
+        tmp = self.path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        os.replace(tmp, self.path)
+
+    # -------------------------------------------------------------- access
+    def _ensure(self) -> None:
+        if not self._loaded:
+            self.load()
+
+    def get(self, key: str) -> BlockShapes | None:
+        self._ensure()
+        e = self._entries.get(key)
+        if e is None:
+            return None
+        return BlockShapes(int(e["block_m"]), int(e["block_n"]),
+                           int(e["block_d"]))
+
+    def put(self, key: str, blocks: BlockShapes, **meta) -> None:
+        self._ensure()
+        self._entries[key] = {
+            "block_m": int(blocks.block_m),
+            "block_n": int(blocks.block_n),
+            "block_d": int(blocks.block_d),
+            **meta,
+        }
+        self.save()
+
+    def __len__(self) -> int:
+        self._ensure()
+        return len(self._entries)
+
+    def keys(self):
+        self._ensure()
+        return tuple(self._entries)
+
+
+# ------------------------------------------------------- default instance
+_default_cache: AutotuneCache | None = None
+
+
+def default_cache() -> AutotuneCache:
+    """Process-wide cache for the live device (lazy; used by the planner)."""
+    global _default_cache
+    if _default_cache is None:
+        _default_cache = AutotuneCache.for_device()
+    return _default_cache
+
+
+def set_default_cache(cache: AutotuneCache | None) -> None:
+    """Swap the planner-visible cache (tests; None resets to lazy default)."""
+    global _default_cache
+    _default_cache = cache
+
+
+def lookup_blocks(kernel: str, m: int, n: int, d: int, dtype: str,
+                  metric: str, k: int) -> BlockShapes | None:
+    """Pure read the planner calls: tuned blocks for a key, else None.
+
+    Never raises — a broken cache (or a device-less environment) must not
+    break planning; it only costs the tuning.
+    """
+    try:
+        return default_cache().get(
+            tuning_key(kernel, m, n, d, dtype, metric, k)
+        )
+    except Exception:
+        return None
+
+
+# --------------------------------------------------------------- sweeping
+def candidate_blocks(
+    m: int,
+    n: int,
+    d: int,
+    queue_len: int,
+    dtype_bytes: int = 4,
+    vmem_budget_bytes: int = VMEM_BUDGET_BYTES,
+) -> list[BlockShapes]:
+    """Legal (bm, bn, bd) sweep for one problem (ops.py pads to any of
+    these, so legality = queue fits the tile + VMEM budget holds).
+
+    queue_len is the per-query on-chip queue width (k_eff for the f32
+    kernel, 2 * rescore budget for int8); bn must be able to hold it.
+    """
+    d_pad = _round_up(max(1, d), 128)
+    out: list[BlockShapes] = []
+    for bm in BM_CANDIDATES:
+        if bm > 2 * _round_up(max(1, m), 8):
+            continue  # all-padding m tiles are pure waste
+        for bn in BN_CANDIDATES:
+            if bn < queue_len or bn > 2 * _round_up(max(1, n), 256):
+                continue
+            for bd in BD_CANDIDATES:
+                if bd > d_pad:
+                    continue
+                vmem = (
+                    bm * bd * 4            # query tile (f32)
+                    + bn * bd * dtype_bytes  # dataset tile
+                    + bm * bn * 4          # accumulator
+                    + bm * queue_len * 8   # queue values + indices
+                    + bm * 8               # epilogue rows
+                )
+                if vmem <= vmem_budget_bytes:
+                    out.append(BlockShapes(bm, bn, bd))
+    if not out:  # degenerate budget: at least offer the smallest legal tile
+        out.append(BlockShapes(BM_CANDIDATES[0],
+                               max(BN_CANDIDATES[0], queue_len),
+                               min(BD_CANDIDATES[0], d_pad)))
+    return out
+
+
+def _time_call(fn, *args, repeats: int = 2) -> float:
+    import time
+
+    import jax
+
+    jax.block_until_ready(fn(*args))  # compile + warm
+    samples = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        samples.append(time.perf_counter() - t0)
+    samples.sort()
+    return samples[len(samples) // 2]
+
+
+def autotune_knn(
+    m: int,
+    n: int,
+    d: int,
+    k: int = 10,
+    metric: str = "l2",
+    dtype: str = "float32",
+    tier: str = "f32",
+    rescore_factor: int = 4,
+    cache: AutotuneCache | None = None,
+    repeats: int = 2,
+    max_candidates: int | None = None,
+    seed: int = 0,
+) -> tuple[BlockShapes, dict]:
+    """Sweep legal block shapes for one key on the live device and persist
+    the winner. Returns (winner, {candidate repr -> median seconds}).
+
+    Pass the PLANNER-VISIBLE geometry — m = plan.m (the padded batch),
+    n = plan.padded_rows, d = plan.padded_dim — so the stored key is the
+    one ``planner.plan()`` will look up (``ExactKNN.plan_for`` exposes it;
+    the kernels re-pad internally, so padded sizes are valid sweep sizes).
+
+    tier="f32" tunes the fused kernel behind the "fdsq-pallas" executor;
+    tier="int8" tunes "fqsd-int8-pallas" (the key's kernel field follows
+    the executor name, so the planner's lookups match by construction).
+    """
+    import functools
+
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.partition import next_pow2
+    from repro.kernels.knn import ops as knn_ops
+
+    if cache is None:
+        cache = default_cache()
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((m, d)), dtype=dtype)
+    x = jnp.asarray(rng.standard_normal((n, d)), dtype=dtype)
+
+    k_eff = next_pow2(k)
+    if tier == "int8":
+        from repro.core.quantized import quantize_dataset
+
+        kernel = "fqsd-int8-pallas"
+        ds = quantize_dataset(x)
+        queue_len = 2 * next_pow2(max(1, rescore_factor) * k_eff)
+        dtype_bytes = 1
+
+        def run(blocks: BlockShapes):
+            fn = functools.partial(
+                knn_ops.knn_int8, k=k, rescore_factor=rescore_factor,
+                block_m=blocks.block_m, block_n=blocks.block_n,
+                block_d=blocks.block_d,
+            )
+            return _time_call(fn, q, ds, x.astype(jnp.float32),
+                              repeats=repeats)
+    elif tier == "f32":
+        kernel = "fdsq-pallas"
+        queue_len = k_eff
+        dtype_bytes = jnp.dtype(dtype).itemsize
+
+        def run(blocks: BlockShapes):
+            fn = functools.partial(
+                knn_ops.knn, k=k, metric=metric,
+                block_m=blocks.block_m, block_n=blocks.block_n,
+                block_d=blocks.block_d,
+            )
+            return _time_call(fn, q, x, repeats=repeats)
+    else:
+        raise ValueError(f"unknown tier {tier!r}; known: f32, int8")
+
+    cands = candidate_blocks(m, n, d, queue_len, dtype_bytes=dtype_bytes)
+    if max_candidates is not None:
+        cands = cands[:max_candidates]
+    timings: dict[str, float] = {}
+    best: BlockShapes | None = None
+    best_t = float("inf")
+    for blocks in cands:
+        t = run(blocks)
+        timings[f"{blocks.block_m}x{blocks.block_n}x{blocks.block_d}"] = t
+        if t < best_t:
+            best, best_t = blocks, t
+    assert best is not None  # candidate_blocks never returns empty
+    cache.put(
+        tuning_key(kernel, m, n, d, dtype, metric, k), best,
+        us_per_call=best_t * 1e6, n_candidates=len(cands),
+    )
+    return best, timings

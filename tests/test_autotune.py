@@ -1,0 +1,221 @@
+"""Per-device block-shape autotuner: cache robustness, sweep legality, and
+the planner/executable-cache contract (tuned plans never recompile)."""
+import dataclasses
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import ExactKNN, cache_info, clear_executable_cache
+from repro.tuning import (
+    AutotuneCache,
+    BlockShapes,
+    autotune_knn,
+    candidate_blocks,
+    lookup_blocks,
+    set_default_cache,
+    tuning_key,
+)
+
+
+@pytest.fixture(autouse=True)
+def isolated_default_cache():
+    """Never let tests read/write the real artifacts/autotune/ cache."""
+    set_default_cache(AutotuneCache(path=None))
+    yield
+    set_default_cache(None)
+
+
+KEY = tuning_key("fdsq-pallas", m=8, n=1024, d=128, dtype="float32",
+                 metric="l2", k=10)
+
+
+class TestCacheRoundTrip:
+    def test_put_get_round_trip(self, tmp_path):
+        path = str(tmp_path / "cpu.json")
+        cache = AutotuneCache(path)
+        assert cache.get(KEY) is None  # missing file == cold cache
+        cache.put(KEY, BlockShapes(32, 512, 128), us_per_call=12.5)
+        assert cache.get(KEY) == BlockShapes(32, 512, 128)
+        # a fresh instance reads the persisted winner back
+        reread = AutotuneCache(path)
+        assert reread.get(KEY) == BlockShapes(32, 512, 128)
+        payload = json.load(open(path))
+        assert payload["schema_version"] == 1
+        assert payload["entries"][KEY]["us_per_call"] == 12.5
+
+    def test_missing_file_is_cold_not_fatal(self, tmp_path):
+        cache = AutotuneCache(str(tmp_path / "never_written.json"))
+        assert cache.get(KEY) is None
+        assert len(cache) == 0
+
+    def test_corrupted_json_is_cold_then_recovers(self, tmp_path):
+        path = str(tmp_path / "cpu.json")
+        with open(path, "w") as f:
+            f.write("{ this is not json !!")
+        cache = AutotuneCache(path)
+        assert cache.get(KEY) is None  # corrupt == cold, never an exception
+        # the next put() rewrites the file cleanly
+        cache.put(KEY, BlockShapes(8, 256, 128))
+        assert AutotuneCache(path).get(KEY) == BlockShapes(8, 256, 128)
+
+    @pytest.mark.parametrize("payload", [
+        '{"schema_version": 1, "entries": "nope"}',
+        '{"schema_version": 1, "entries": {"k": {"block_m": "x"}}}',
+        '{"schema_version": 1}',
+        '[]',
+    ])
+    def test_wrong_schema_is_cold(self, tmp_path, payload):
+        path = str(tmp_path / "cpu.json")
+        with open(path, "w") as f:
+            f.write(payload)
+        assert AutotuneCache(path).get(KEY) is None
+
+    def test_lookup_blocks_never_raises(self, tmp_path):
+        bad = str(tmp_path / "bad.json")
+        with open(bad, "w") as f:
+            f.write("garbage")
+        set_default_cache(AutotuneCache(bad))
+        assert lookup_blocks("fdsq-pallas", 8, 1024, 128, "float32", "l2",
+                             k=10) is None
+
+
+class TestCandidateLegality:
+    def test_candidates_respect_queue_and_dim(self):
+        cands = candidate_blocks(m=16, n=4096, d=100, queue_len=1024)
+        assert cands
+        for c in cands:
+            assert c.block_n >= 1024  # queue must fit the tile sort
+            assert c.block_d <= 128  # d=100 pads to 128, never beyond
+
+    def test_vmem_budget_filters(self):
+        small = candidate_blocks(m=256, n=1 << 20, d=1024, queue_len=128,
+                                 vmem_budget_bytes=1 << 20)
+        for c in small:
+            vmem = (c.block_m * c.block_d * 4 + c.block_n * c.block_d * 4
+                    + c.block_m * c.block_n * 4)
+            assert vmem <= (1 << 20) or (c,) == tuple(small)  # fallback only
+
+    def test_degenerate_budget_still_returns_one(self):
+        cands = candidate_blocks(m=1, n=128, d=8, queue_len=512,
+                                 vmem_budget_bytes=1)
+        assert len(cands) == 1 and cands[0].block_n >= 512
+
+
+class TestSweepAndPlanner:
+    @pytest.fixture
+    def engine(self):
+        rng = np.random.default_rng(0)
+        x = rng.standard_normal((900, 32)).astype(np.float32)
+        return ExactKNN(k=4, backend="pallas").fit(x)
+
+    def test_cold_cache_falls_back_to_defaults(self, engine):
+        p = engine.plan_for("fqsd", 8)
+        assert (p.block_m, p.block_n, p.block_d) == (0, 0, 0)
+        q = np.zeros((8, 32), np.float32)
+        out = engine.query_batch(q)  # executes with kernel defaults
+        assert np.asarray(out.indices).shape == (8, 4)
+
+    def test_sweep_persists_and_planner_consults(self, tmp_path, engine):
+        cache = AutotuneCache(str(tmp_path / "dev.json"))
+        set_default_cache(cache)
+        p_cold = engine.plan_for("fqsd", 8)
+        best, timings = autotune_knn(
+            p_cold.m, p_cold.padded_rows, p_cold.padded_dim, k=engine.k,
+            cache=cache, repeats=1, max_candidates=2,
+        )
+        assert len(timings) == 2 and all(t > 0 for t in timings.values())
+        # two plans for the same key: identical tuned blocks (purity)
+        p1 = engine.plan_for("fqsd", 8)
+        p2 = engine.plan_for("fqsd", 8)
+        assert p1 == p2
+        assert (p1.block_m, p1.block_n, p1.block_d) == tuple(best) != (0, 0, 0)
+
+    def test_tuned_plans_hit_executable_cache(self, tmp_path, engine):
+        """The no-reflashing extension: after a sweep, repeated queries for
+        the tuned key compile exactly once — the second call is a pure
+        cache hit with zero new misses."""
+        cache = AutotuneCache(str(tmp_path / "dev.json"))
+        set_default_cache(cache)
+        p_cold = engine.plan_for("fqsd", 8)
+        autotune_knn(p_cold.m, p_cold.padded_rows, p_cold.padded_dim,
+                     k=engine.k, cache=cache, repeats=1, max_candidates=1)
+        q = np.zeros((8, 32), np.float32)
+        clear_executable_cache()
+        engine.query_batch(q)
+        first = cache_info()
+        assert first["misses"] == 1
+        engine.query_batch(q)
+        second = cache_info()
+        assert second["misses"] == first["misses"]  # no recompile
+        assert second["hits"] == first["hits"] + 1
+
+    def test_int8_sweep_uses_its_own_key(self, tmp_path):
+        rng = np.random.default_rng(1)
+        x = rng.standard_normal((600, 24)).astype(np.float32)
+        eng = ExactKNN(k=3, backend="pallas").fit(x).enable_int8()
+        cache = AutotuneCache(str(tmp_path / "dev.json"))
+        set_default_cache(cache)
+        p_cold = eng.plan_for("fqsd", 4, tier="int8")
+        assert p_cold.executor == "fqsd-int8-pallas"
+        best, _ = autotune_knn(
+            p_cold.m, p_cold.padded_rows, p_cold.padded_dim, k=eng.k,
+            tier="int8", cache=cache, repeats=1, max_candidates=1,
+        )
+        p = eng.plan_for("fqsd", 4, tier="int8")
+        assert (p.block_m, p.block_n, p.block_d) == tuple(best)
+        # the f32 plan for the same geometry is untouched (distinct key)
+        pf = eng.plan_for("fqsd", 4)
+        assert (pf.block_m, pf.block_n, pf.block_d) == (0, 0, 0)
+
+    def test_k_is_part_of_the_key(self, tmp_path):
+        """Blocks tuned at one k must not leak to plans with another k (a
+        different k changes the on-chip queue width, so the stored blocks
+        would be silently re-clamped by the kernel)."""
+        rng = np.random.default_rng(3)
+        x = rng.standard_normal((600, 24)).astype(np.float32)
+        eng = ExactKNN(k=3, backend="pallas").fit(x)
+        cache = AutotuneCache(str(tmp_path / "dev.json"))
+        set_default_cache(cache)
+        p = eng.plan_for("fqsd", 4)
+        autotune_knn(p.m, p.padded_rows, p.padded_dim, k=eng.k,
+                     cache=cache, repeats=1, max_candidates=1)
+        assert eng.plan_for("fqsd", 4).block_n > 0  # k=3: tuned
+        other = ExactKNN(k=64, backend="pallas").fit(x)
+        po = other.plan_for("fqsd", 4)
+        assert (po.block_m, po.block_n, po.block_d) == (0, 0, 0)  # k=64: cold
+
+    def test_plan_equality_and_frozen(self, engine):
+        p = engine.plan_for("fqsd", 8)
+        with pytest.raises(dataclasses.FrozenInstanceError):
+            p.block_m = 64
+
+
+class TestExecutableCacheLRU:
+    def test_eviction_bounds_size_and_counts(self):
+        from repro.core import set_executable_cache_limit
+
+        rng = np.random.default_rng(2)
+        x = rng.standard_normal((700, 24)).astype(np.float32)
+        q = rng.standard_normal((4, 24)).astype(np.float32)
+        eng = ExactKNN(k=3, n_partitions=4).fit(x)
+        clear_executable_cache()
+        set_executable_cache_limit(1)
+        try:
+            eng.query(q)       # compile #1
+            eng.query_batch(q)  # compile #2 -> evicts #1
+            info = cache_info()
+            assert info["size"] == 1 and info["max_entries"] == 1
+            assert info["evictions"] == 1
+            eng.query(q)  # evicted key recompiles
+            assert cache_info()["misses"] == 3
+        finally:
+            set_executable_cache_limit(256)
+            clear_executable_cache()
+
+    def test_limit_validation(self):
+        from repro.core import set_executable_cache_limit
+
+        with pytest.raises(ValueError):
+            set_executable_cache_limit(0)

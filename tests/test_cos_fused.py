@@ -1,0 +1,94 @@
+"""cos metric through the fused kernel path (no hypothesis dependency —
+tests/test_kernels.py importorskips hypothesis, which would silently gate
+the cos-fallback-removal coverage on an optional dev dependency).
+
+The fused kernel serves cos by pre-normalizing rows and reusing the ip
+epilogue; engines additionally normalize the resident view once at fit
+time (cos is scale-invariant), so the per-batch cost is query
+normalization only.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ExactKNN
+from repro.kernels.knn.ops import knn
+from repro.kernels.knn.ref import knn_ref
+
+RNG = np.random.default_rng(77)
+
+
+@pytest.mark.parametrize(
+    "m,n,d,k", [(1, 128, 8, 1), (4, 2048, 64, 10), (9, 700, 100, 17),
+                (3, 33, 5, 50)]  # k > n padding case included
+)
+def test_cos_fused_sweep(m, n, d, k):
+    q = jnp.asarray(RNG.standard_normal((m, d)), dtype=jnp.float32)
+    x = jnp.asarray(RNG.standard_normal((n, d)), dtype=jnp.float32)
+    got = knn(q, x, k, "cos")
+    rv, ri = knn_ref(q, x, k, "cos")
+    np.testing.assert_allclose(np.asarray(got.scores), np.asarray(rv),
+                               rtol=1e-4, atol=1e-4)
+    kk = min(k, n)
+    agree = (np.asarray(got.indices)[:, :kk] == np.asarray(ri)[:, :kk]).mean()
+    assert agree > 0.99, agree
+    if k > n:
+        assert np.isinf(np.asarray(got.scores)[:, n:]).all()
+        assert (np.asarray(got.indices)[:, n:] == -1).all()
+
+
+def test_cos_zero_vectors():
+    """cos convention: zero vectors map to distance 1 (never NaN), matching
+    repro.core.distance.cosine_distance — pre-normalization keeps them zero."""
+    x = RNG.standard_normal((300, 40)).astype(np.float32)
+    x[7] = 0.0
+    q = np.concatenate([np.zeros((1, 40), np.float32),
+                        RNG.standard_normal((2, 40)).astype(np.float32)])
+    got = knn(jnp.asarray(q), jnp.asarray(x), 5, "cos")
+    s = np.asarray(got.scores)
+    assert np.isfinite(s).all()
+    np.testing.assert_allclose(s[0], 1.0, atol=1e-6)  # zero query: all cos=1
+    rv, _ = knn_ref(jnp.asarray(q), jnp.asarray(x), 5, "cos")
+    np.testing.assert_allclose(s, np.asarray(rv), rtol=1e-4, atol=1e-4)
+
+
+def test_cos_engine_matches_xla_path():
+    """Engine cos routing: backend='pallas' serves cos fused (the planner's
+    cos->xla fallback is gone) and agrees with the XLA cos executors. The
+    fused engine's resident view is fit-time normalized (x_prenormalized
+    fast path), so this also locks the two normalization orders together."""
+    x = RNG.standard_normal((2000, 72)).astype(np.float32)
+    q = RNG.standard_normal((5, 72)).astype(np.float32)
+    xla = ExactKNN(k=15, metric="cos").fit(x).query_batch(q)
+    eng = ExactKNN(k=15, metric="cos", backend="pallas").fit(x)
+    assert eng._cos_prenormalized
+    pal = eng.query_batch(q)
+    assert eng.plans[-1].executor == "fdsq-pallas"
+    np.testing.assert_allclose(
+        np.asarray(pal.scores), np.asarray(xla.scores), rtol=1e-4, atol=1e-4
+    )
+    agree = (np.asarray(pal.indices) == np.asarray(xla.indices)).mean()
+    assert agree > 0.99
+
+
+def test_cos_prenormalized_view_survives_mutation():
+    """Upsert/delete on a cos+pallas engine: delta rows merge through the
+    scale-invariant XLA cos step while the resident view stays normalized —
+    results must keep matching the XLA engine under churn."""
+    x = RNG.standard_normal((900, 24)).astype(np.float32)
+    extra = RNG.standard_normal((3, 24)).astype(np.float32) * 7.0
+    q = extra[:2] + RNG.standard_normal((2, 24)).astype(np.float32) * 1e-3
+
+    pal = ExactKNN(k=4, metric="cos", backend="pallas").fit(x)
+    xla = ExactKNN(k=4, metric="cos").fit(x)
+    ids = pal.upsert(extra)
+    xla.upsert(extra)
+    pal.delete(ids[2:])
+    xla.delete(ids[2:])
+    got, ref = pal.query_batch(q), xla.query_batch(q)
+    np.testing.assert_allclose(np.asarray(got.scores), np.asarray(ref.scores),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(got.indices),
+                                  np.asarray(ref.indices))
+    # the upserted rows are each query's own nearest neighbor
+    assert (np.asarray(got.indices)[:, 0] == ids[:2]).all()

@@ -1,0 +1,234 @@
+"""Fused int8 Pallas scan + certified rescore, and the threshold-pruned
+queue merge (interpret mode).
+
+Exactness contract under test (the PR's acceptance criterion): the
+``fqsd-int8-pallas`` executor returns EXACTLY the f32 oracle's top-k —
+values and indices, ties broken by smaller index — on every adversarial
+quantization case. The oracle is ``knn_exact_direct``: the literal f32
+sum-of-squared-differences over the same padded geometry the engine scans,
+fully sorted lexicographically. Certified rows go through the kernel's
+candidate rescore (same formula → bitwise equal); uncertified rows go
+through the executor's direct-form fallback scan (same formula, chunked
+lexicographic merge → also bitwise equal).
+
+Pruning contract: the threshold-pruned kernels are bit-identical to the
+unpruned kernels on every input (strict-> skip test; ties never prune),
+and the skip rate is > 0 once queues warm up on favorable row orderings.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ExactKNN
+from repro.core.quantized import quantize_dataset
+from repro.kernels.knn.ops import knn, knn_exact_direct, knn_int8
+
+
+def _gaussian():
+    rng = np.random.default_rng(42)
+    x = rng.standard_normal((1024, 96)).astype(np.float32)
+    q = rng.standard_normal((8, 96)).astype(np.float32)
+    return q, x, 10
+
+
+def _constant_rows():
+    # every row constant: absmax scaling represents it with zero error
+    vals = np.linspace(-3, 3, 64, dtype=np.float32)
+    x = np.repeat(vals[:, None], 96, axis=1)
+    q = np.repeat(np.float32([[0.1], [-2.5]]), 96, axis=1)
+    return q, x, 5
+
+
+def _dynamic_range_12_decades():
+    # rows spanning 12 orders of magnitude: certification is rare, so this
+    # case drives the uncertified fallback path too
+    rng = np.random.default_rng(0)
+    scales = 10.0 ** rng.uniform(-6, 6, size=(1024, 1)).astype(np.float32)
+    x = (rng.standard_normal((1024, 80)) * scales).astype(np.float32)
+    q = rng.standard_normal((6, 80)).astype(np.float32)
+    return q, x, 7
+
+
+def _dim_not_multiple_of_128():
+    rng = np.random.default_rng(1)
+    x = rng.standard_normal((512, 33)).astype(np.float32)
+    q = rng.standard_normal((4, 33)).astype(np.float32)
+    return q, x, 6
+
+
+CASES = {
+    "gaussian": _gaussian,
+    "constant_rows": _constant_rows,
+    "dynamic_range_12_decades": _dynamic_range_12_decades,
+    "dim_not_multiple_of_128": _dim_not_multiple_of_128,
+}
+
+
+def _engine_oracle(eng: ExactKNN, q: np.ndarray):
+    """Direct-form full-sort oracle over the engine's padded device view
+    (same shapes as the executor's rescore/fallback => bitwise comparable).
+    """
+    qv = eng._pad_queries(q)
+    vec, norms = eng._ds.vectors, eng._ds.norms
+    return knn_exact_direct(qv, vec, norms, eng.k, int(vec.shape[0]))
+
+
+class TestFusedInt8ExecutorExactness:
+    @pytest.mark.parametrize("name", sorted(CASES))
+    def test_matches_f32_oracle_exactly(self, name):
+        q, x, k = CASES[name]()
+        eng = ExactKNN(k=k, backend="pallas").fit(x).enable_int8()
+        got = eng.query_batch_int8(q)
+        assert eng.plans[-1].executor == "fqsd-int8-pallas"
+        oracle = _engine_oracle(eng, q)
+        np.testing.assert_array_equal(np.asarray(got.scores),
+                                      np.asarray(oracle.scores))
+        np.testing.assert_array_equal(np.asarray(got.indices),
+                                      np.asarray(oracle.indices))
+        # the certificate is per-query and boolean; exactness held above
+        # for every row regardless of its value
+        cert = np.asarray(eng.last_certificate)
+        assert cert.shape == (q.shape[0],) and cert.dtype == bool
+
+    def test_constant_rows_fully_certified(self):
+        """Zero quantization error => every query certifies on-chip (no
+        fallback scan needed for exactness)."""
+        q, x, k = _constant_rows()
+        eng = ExactKNN(k=k, backend="pallas").fit(x).enable_int8()
+        eng.query_batch_int8(q)
+        assert np.asarray(eng.last_certificate).all()
+
+    def test_tombstoned_rows_never_returned(self):
+        q, x, k = _gaussian()
+        eng = ExactKNN(k=k, backend="pallas").fit(x).enable_int8()
+        first = eng.query_batch_int8(q)
+        dead = set(np.unique(np.asarray(first.indices))[:4].tolist())
+        eng.delete(sorted(dead))
+        got = eng.query_batch_int8(q)
+        assert not (np.isin(np.asarray(got.indices), sorted(dead))).any()
+        oracle = _engine_oracle(eng, q)  # norms now carry the tombstones
+        np.testing.assert_array_equal(np.asarray(got.scores),
+                                      np.asarray(oracle.scores))
+        np.testing.assert_array_equal(np.asarray(got.indices),
+                                      np.asarray(oracle.indices))
+
+    def test_matches_xla_int8_executor(self):
+        """Both quantized executors answer identically (same contract)."""
+        q, x, k = _gaussian()
+        pal = ExactKNN(k=k, backend="pallas").fit(x).enable_int8()
+        xla = ExactKNN(k=k).fit(x).enable_int8()
+        got_p = pal.query_batch_int8(q)
+        got_x = xla.query_batch_int8(q)
+        assert xla.plans[-1].executor == "fqsd-int8"
+        np.testing.assert_allclose(np.asarray(got_p.scores),
+                                   np.asarray(got_x.scores),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_array_equal(np.asarray(got_p.indices),
+                                      np.asarray(got_x.indices))
+
+
+class TestRawInt8Kernel:
+    @pytest.mark.parametrize("name", sorted(CASES))
+    def test_certified_rows_bitwise_exact(self, name):
+        q, x, k = CASES[name]()
+        ds = quantize_dataset(jnp.asarray(x))
+        res, cert = knn_int8(jnp.asarray(q), ds, jnp.asarray(x), k)
+        norms = jnp.sum(jnp.asarray(x).astype(jnp.float32) ** 2, axis=-1)
+        oracle = knn_exact_direct(jnp.asarray(q), jnp.asarray(x), norms, k,
+                                  x.shape[0])
+        c = np.asarray(cert)
+        np.testing.assert_array_equal(np.asarray(res.scores)[c],
+                                      np.asarray(oracle.scores)[c])
+        np.testing.assert_array_equal(np.asarray(res.indices)[c],
+                                      np.asarray(oracle.indices)[c])
+
+    def test_prune_bit_identical_and_certificate_stable(self):
+        q, x, k = _gaussian()
+        ds = quantize_dataset(jnp.asarray(x))
+        r1, c1, sr = knn_int8(jnp.asarray(q), ds, jnp.asarray(x), k,
+                              block_n=256, return_stats=True)
+        r0, c0 = knn_int8(jnp.asarray(q), ds, jnp.asarray(x), k,
+                          block_n=256, prune=False)
+        np.testing.assert_array_equal(np.asarray(r1.scores), np.asarray(r0.scores))
+        np.testing.assert_array_equal(np.asarray(r1.indices), np.asarray(r0.indices))
+        np.testing.assert_array_equal(np.asarray(c1), np.asarray(c0))
+        assert 0.0 <= float(sr) <= 1.0
+
+
+def _compare_pruned_unpruned(q, x, k, block_n=256):
+    """Run the f32 kernel with and without pruning; assert bit-identity and
+    return the measured skip rate."""
+    qj, xj = jnp.asarray(q), jnp.asarray(x)
+    p1, sr = knn(qj, xj, k, "l2", block_n=block_n, return_stats=True)
+    p0 = knn(qj, xj, k, "l2", block_n=block_n, prune=False)
+    np.testing.assert_array_equal(np.asarray(p1.scores), np.asarray(p0.scores))
+    np.testing.assert_array_equal(np.asarray(p1.indices), np.asarray(p0.indices))
+    return float(sr)
+
+
+class TestThresholdPrunedMerge:
+    def test_tie_heavy_bit_identical(self):
+        """Integer-valued coordinates: masses of exact score ties. Ties can
+        displace queue entries via the index tie-break, so the pruned
+        kernel must never skip a tying tile — results stay bit-identical."""
+        rng = np.random.default_rng(7)
+        x = rng.integers(-2, 3, size=(1536, 16)).astype(np.float32)
+        q = rng.integers(-2, 3, size=(5, 16)).astype(np.float32)
+        _compare_pruned_unpruned(q, x, 9)
+
+    def test_all_identical_rows_never_skip(self):
+        """Degenerate all-ties input: every tile minimum EQUALS the queue
+        worst, so the strict > filter must never fire (skip rate 0)."""
+        x = np.ones((1024, 32), np.float32)
+        q = np.zeros((3, 32), np.float32)
+        sr = _compare_pruned_unpruned(q, x, 4)
+        assert sr == 0.0
+
+    def test_ascending_workload_warms_queues_and_skips(self):
+        """Rows sorted nearest-first: queues warm in the first tiles and
+        later tiles are provably worse — the insertion filter must
+        actually fire (skip rate > 0) while staying bit-identical."""
+        rng = np.random.default_rng(8)
+        x = rng.standard_normal((2048, 32)).astype(np.float32)
+        q = rng.standard_normal((4, 32)).astype(np.float32)
+        d = ((q.mean(0)[None, :] - x) ** 2).sum(1)
+        sr = _compare_pruned_unpruned(q, x[np.argsort(d)], 8)
+        assert sr > 0.0
+
+    def test_descending_workload_never_skips(self):
+        """Rows sorted farthest-first (monotonically improving scores):
+        every tile beats the current worst, so nothing may be skipped."""
+        rng = np.random.default_rng(9)
+        x = rng.standard_normal((2048, 32)).astype(np.float32)
+        q = rng.standard_normal((4, 32)).astype(np.float32)
+        d = ((q.mean(0)[None, :] - x) ** 2).sum(1)
+        sr = _compare_pruned_unpruned(q, x[np.argsort(d)[::-1]], 8)
+        assert sr == 0.0
+
+
+class TestExactDirectScan:
+    def test_chunk_invariance(self):
+        """The chunked lexicographic merge equals the single-chunk full
+        sort bit for bit (what makes it a valid oracle AND fallback)."""
+        rng = np.random.default_rng(10)
+        x = rng.standard_normal((1024, 24)).astype(np.float32)
+        q = rng.standard_normal((5, 24)).astype(np.float32)
+        norms = jnp.sum(jnp.asarray(x) ** 2, axis=-1)
+        full = knn_exact_direct(jnp.asarray(q), jnp.asarray(x), norms, 6, 1024)
+        for chunk in (128, 256, 512):
+            got = knn_exact_direct(jnp.asarray(q), jnp.asarray(x), norms, 6, chunk)
+            np.testing.assert_array_equal(np.asarray(got.scores),
+                                          np.asarray(full.scores))
+            np.testing.assert_array_equal(np.asarray(got.indices),
+                                          np.asarray(full.indices))
+
+    def test_invalid_rows_masked(self):
+        x = np.zeros((256, 8), np.float32)
+        norms = np.zeros(256, np.float32)
+        norms[128:] = np.inf  # tombstoned back half
+        q = np.zeros((2, 8), np.float32)
+        got = knn_exact_direct(jnp.asarray(q), jnp.asarray(x),
+                               jnp.asarray(norms), 200, 256)
+        idx = np.asarray(got.indices)
+        assert ((idx < 128) | (idx == -1)).all()
+        assert np.isinf(np.asarray(got.scores)[:, 128:]).all()

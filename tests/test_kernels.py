@@ -108,7 +108,7 @@ def test_topk_with_ties():
 
 
 # ------------------------------------------------------------ fused knn
-@pytest.mark.parametrize("metric", ["l2", "ip"])
+@pytest.mark.parametrize("metric", ["l2", "ip", "cos"])
 @pytest.mark.parametrize(
     "m,n,d,k", [(1, 128, 8, 1), (4, 2048, 64, 10), (1, 1500, 769, 64),
                 (9, 700, 100, 17), (2, 4096, 960, 128), (3, 33, 5, 50)]

@@ -57,9 +57,24 @@ class TestPlan:
         assert lat.executor == thr.executor == "fdsq-pallas"
         assert (lat.mode, thr.mode) == ("fdsq", "fqsd")
 
-    def test_pallas_cos_falls_back_to_xla(self):
+    def test_pallas_serves_cos_fused(self):
+        # cos used to fall back to the XLA executors; the fused kernel now
+        # serves it via pre-normalized rows through the ip epilogue
         cfg = dataclasses.replace(CFG, backend="pallas", metric="cos")
-        assert plan((1, 128), META, cfg, "fdsq").executor == "fdsq-xla"
+        assert plan((1, 128), META, cfg, "fdsq").executor == "fdsq-pallas"
+
+    def test_pallas_int8_tier_routes_to_fused_quantized(self):
+        from repro.core import DatasetStoreMeta
+
+        meta = DatasetStoreMeta(padded_rows=2048, padded_dim=128,
+                                n_valid=2000, tier="int8")
+        cfg = dataclasses.replace(CFG, backend="pallas")
+        p = plan((8, 128), meta, cfg, "fqsd")
+        assert p.executor == "fqsd-int8-pallas" and p.mode == "fqsd-int8"
+        assert p.tier == "int8"
+        # same storage tier without the pallas backend keeps the XLA scan
+        p_xla = plan((8, 128), meta, CFG, "fqsd")
+        assert p_xla.executor == "fqsd-int8"
 
     def test_sharded_routing(self):
         meta = dataclasses.replace(META, sharded=True)

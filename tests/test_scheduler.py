@@ -171,6 +171,24 @@ class TestInt8TierRouting:
             assert r.mode == "fqsd-int8"
             assert int(r.indices[0]) == r.rid
 
+    def test_deep_backlog_routes_to_fused_int8_on_pallas_backend(self):
+        """With backend='pallas' the bandwidth-aware tier hook lands deep
+        backlogs on the fused int8 kernel (fqsd-int8-pallas): 1 B/element
+        scan, on-chip candidate queue, certified exact rescore — and the
+        kernel's pruning skip rate surfaces in stats()."""
+        rng = np.random.default_rng(21)
+        x = rng.standard_normal((1500, 32)).astype(np.float32)
+        eng = ExactKNN(k=5, backend="pallas").fit(x).enable_int8()
+        s = AdaptiveScheduler(eng, policy="throughput", int8_min_depth=8)
+        results = list(s.serve(bursty_trace(rng, burst=24, trickle=0)))
+        assert {r.mode for r in results} == {"fqsd-int8"}
+        assert {r.executor for r in results} == {"fqsd-int8-pallas"}
+        assert all(r.exact for r in results)
+        st = s.stats()
+        assert st["per_plan"]["fqsd-int8"]["executors"] == ["fqsd-int8-pallas"]
+        assert st["bytes_scanned"]["int8"] > 0
+        assert 0.0 <= st["prune_skip_rate"] <= 1.0
+
     def test_tier_hook_disabled_by_default(self, engine):
         engine.enable_int8()
         rng = np.random.default_rng(13)
