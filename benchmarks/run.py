@@ -12,9 +12,11 @@ Emits ``name,us_per_call,derived`` CSV rows (stdout), matching:
 
 Every section additionally lands as machine-readable
 ``<json-dir>/BENCH_<section>.json`` (qps, p50/p99, bytes scanned per tier,
-certification rate) so the perf trajectory is trackable across PRs. The
-kernels section is ALSO copied to ``BENCH_kernels.json`` at the repo root
-— that file is the CI artifact tracking the execution-layer trajectory.
+certification rate) so the perf trajectory is trackable across PRs.
+``artifacts/bench/BENCH_kernels.json`` is the CI artifact tracking the
+execution-layer trajectory; a convenience mirror is also written to
+``BENCH_kernels.json`` at the repo root. Both live in .gitignore — they
+are regenerated on every run and must never be committed.
 """
 from __future__ import annotations
 
@@ -34,7 +36,8 @@ def main(argv=None) -> int:
     ap.add_argument("--json-dir", default="artifacts/bench",
                     help="directory for BENCH_<section>.json outputs")
     ap.add_argument("--kernels-json", default="BENCH_kernels.json",
-                    help="repo-root copy of the kernels section (CI artifact)")
+                    help="untracked repo-root mirror of the kernels section "
+                         "(CI uploads <json-dir>/BENCH_kernels.json)")
     args = ap.parse_args(argv)
 
     from benchmarks import (

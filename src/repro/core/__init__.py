@@ -43,7 +43,12 @@ from repro.core.planner import (
 )
 from repro.core.fqsd import fqsd_scan, fqsd_streamed
 from repro.core.partition import PaddedDataset, iter_partitions, make_padded
-from repro.core.quantized import QuantizedDataset, knn_quantized, quantize_dataset
+from repro.core.quantized import (
+    QuantizedDataset,
+    knn_quantized,
+    quantize_dataset,
+    quantized_norm_sq,
+)
 from repro.core.sharded import fdsq_sharded, fqsd_ring, fqsd_sharded, shard_dataset
 from repro.core.streaming import DoubleBufferedStream, prefetch_to_device
 from repro.core.topk import (
@@ -72,4 +77,5 @@ __all__ = [
     "PaddedDataset", "make_padded", "iter_partitions",
     "DoubleBufferedStream", "prefetch_to_device",
     "QuantizedDataset", "quantize_dataset", "knn_quantized",
+    "quantized_norm_sq",
 ]

@@ -65,7 +65,7 @@ from repro.core.planner import (
     ExecutionPlan,
     plan as plan_fn,
 )
-from repro.core.quantized import QuantizedDataset
+from repro.core.quantized import QuantizedDataset, quantized_norm_sq
 from repro.core.topk import TopK
 
 
@@ -330,9 +330,13 @@ class ExactKNN:
 
     def _refresh_int8_view(self) -> None:
         i8 = self._store.int8_resident()
+        codes, scales = jnp.asarray(i8.q), jnp.asarray(i8.scales)
+        # qnorm_sq is derived from the immutable codes/scales with the same
+        # formula quantize_dataset uses, so engine-path bounds match the
+        # raw path bitwise; mutations only ever refresh norms_sq
         self._int8 = QuantizedDataset(
-            jnp.asarray(i8.q), jnp.asarray(i8.scales),
-            jnp.asarray(i8.err), jnp.asarray(i8.norms_sq),
+            codes, scales, jnp.asarray(i8.err), jnp.asarray(i8.norms_sq),
+            quantized_norm_sq(codes, scales),
         )
 
     @property

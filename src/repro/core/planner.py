@@ -244,9 +244,13 @@ def plan(
     # hits, so tuning never causes a recompile for a seen key.
     block_m = block_n = block_d = 0
     if executor in TUNABLE_EXECUTORS:
+        # the int8 kernel's queue width also depends on the rescore budget,
+        # so its tuned blocks are keyed per rescore_factor (autotune.py)
         tuned = lookup_blocks(
             executor, m, rows, int(dataset_meta.padded_dim),
             cfg.dtype, cfg.metric, int(cfg.k),
+            int(cfg.rescore_factor) if executor == "fqsd-int8-pallas"
+            else None,
         )
         if tuned is not None:
             block_m, block_n, block_d = tuned

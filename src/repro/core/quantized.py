@@ -7,20 +7,32 @@ cost of approximation. We implement it so the final answer remains EXACT:
 2. The scan computes approximate squared-L2 on int8 via one int8xint8->int32
    MXU GEMM (4x less HBM traffic than f32 — the FQ-SD bottleneck is memory
    bandwidth, see EXPERIMENTS.md roofline).
-3. Per-pair error bound: for x = s_x q_x + e_x (||e_x|| <= s_x sqrt(d)/2) the
-   approximate distance satisfies |d_hat - d| <= eps(q, x) with
-   eps = 2*(||e_x|| * ||q - x_hat||_ub + ...) — we use the simpler certified
-   form below based on row norms.
+3. Per-pair error bound: for x = s_x q_x + e_x the scan computes
+   d_hat = ||q - x_hat||^2 EXACTLY (the quantized norm ||x_hat||^2 is
+   stored, not approximated), then brackets the true distance with the
+   reverse-triangle bound below.
 4. Candidate filter: keep every row whose LOWER bound is <= the k-th smallest
    UPPER bound; rescore candidates in f32; take exact top-k. A boolean
    certificate (`exact`) reports whether the static rescore budget covered
    the candidate set — on all tested real-scale distributions a 4x budget
    certifies exactness (property-tested).
 
-Bound derivation (squared L2): d(q,x) = ||q - x||^2, x = x_hat + e.
-  d = ||q - x_hat||^2 - 2<q - x_hat, e> + ||e||^2
-  => |d - d_hat| <= 2 ||q - x_hat|| ||e|| + ||e||^2   (Cauchy-Schwarz)
-with ||e|| <= err_x = s_x * sqrt(d)/2 (elementwise rounding error <= s_x/2).
+Bound derivation (squared L2): d(q,x) = ||q - x||^2 with x = x_hat + e,
+x_hat = s_x q_x, and d_hat = ||q - x_hat||^2 computed exactly from the
+stored quantized norm ||x_hat||^2 = s_x^2 ||q_x||^2:
+  sqrt(d) = ||(q - x_hat) - e||  =>  |sqrt(d) - sqrt(d_hat)| <= ||e||
+  =>  max(sqrt(d_hat) - err_x, 0)^2 <= d <= (sqrt(d_hat) + err_x)^2
+with err_x >= ||e_x|| the stored per-row error norm. The quantized norm
+must be exact: substituting ||x||^2 - err^2 for it drops the cross term
+2<x_hat, e>, which reaches 2*||x||*err when the quantization error aligns
+with the row direction — lower bounds then overshoot true distances and
+the filter silently prunes true neighbors while still certifying.
+
+The bracket is sound in real arithmetic; d_hat itself is evaluated in f32
+via the cancellation form qn - 2<q,x_hat> + ||x_hat||^2, so the certified
+claim (like every exactness claim in this repo, including the oracle) is
+modulo f32 rounding of order ||q||^2 * 2^-24 — the same precision class
+as the f32 scans it certifies against, not a structural bound violation.
 """
 from __future__ import annotations
 
@@ -37,9 +49,24 @@ class QuantizedDataset(NamedTuple):
     q: jax.Array  # (N, d) int8
     scales: jax.Array  # (N,) f32
     err: jax.Array  # (N,) f32 — certified ||e_x|| upper bound
-    norms_sq: jax.Array  # (N,) f32 — EXACT f32 row norms (kept for epilogue);
-    #                      +inf marks an invalid row (padding / tombstone):
-    #                      masked out of bounds, candidates, and rescore.
+    norms_sq: jax.Array  # (N,) f32 — EXACT f32 row norms: the validity
+    #                      channel. +inf marks an invalid row (padding /
+    #                      tombstone): masked out of bounds, candidates,
+    #                      and rescore.
+    qnorm_sq: jax.Array  # (N,) f32 — EXACT quantized norm ||x_hat||^2 =
+    #                      s_x^2 * ||q_x||^2. Must be this exact value (not
+    #                      derived from norms_sq) or the distance bounds
+    #                      lose soundness — see module docstring.
+
+
+def quantized_norm_sq(q: jax.Array, scales: jax.Array) -> jax.Array:
+    """EXACT ||x_hat||^2 = s_x^2 * sum(q_x^2) of the dequantized rows.
+
+    One formula, used by every QuantizedDataset producer (quantize time and
+    store-view rebuilds), so raw-path and engine-path bounds agree bitwise.
+    """
+    qf = q.astype(jnp.float32)
+    return scales.astype(jnp.float32) ** 2 * jnp.sum(qf * qf, axis=-1)
 
 
 def quantize_dataset(x: jax.Array) -> QuantizedDataset:
@@ -47,19 +74,21 @@ def quantize_dataset(x: jax.Array) -> QuantizedDataset:
     absmax = jnp.max(jnp.abs(x32), axis=-1)
     scales = jnp.where(absmax > 0, absmax / 127.0, 1.0)
     q = jnp.clip(jnp.round(x32 / scales[:, None]), -127, 127).astype(jnp.int8)
-    d = x.shape[-1]
     # exact per-row quantization error (tighter than the sqrt(d)/2 worst case)
     e = x32 - q.astype(jnp.float32) * scales[:, None]
     err = jnp.sqrt(jnp.sum(e * e, axis=-1))
     norms = jnp.sum(x32 * x32, axis=-1)
-    return QuantizedDataset(q, scales, err, norms)
+    return QuantizedDataset(q, scales, err, norms, quantized_norm_sq(q, scales))
 
 
 def _approx_l2(qv: jax.Array, ds: QuantizedDataset) -> jax.Array:
-    """Approximate squared L2 using the int8 dataset (f32 queries).
+    """d_hat = ||q - x_hat||^2 using the int8 dataset (f32 queries).
 
     <q, x_hat> = s_x * <q, q_x>; the GEMM runs with int8 dataset operand —
-    on TPU the dataset side streams from HBM at 1 byte/element.
+    on TPU the dataset side streams from HBM at 1 byte/element. The result
+    is the EXACT quantized-approximation distance (qnorm_sq is the true
+    ||x_hat||^2), which is what makes the reverse-triangle bounds in
+    :func:`knn_quantized` sound.
     """
     q32 = qv.astype(jnp.float32)
     qn = jnp.sum(q32 * q32, axis=-1, keepdims=True)
@@ -71,13 +100,7 @@ def _approx_l2(qv: jax.Array, ds: QuantizedDataset) -> jax.Array:
         preferred_element_type=jnp.float32,
     )
     cross = cross * ds.scales[None, :]
-    # ||x_hat||^2 = ||x||^2 - ||e||^2 - 2<x_hat,e>; we use the certified form:
-    # d_hat = qn - 2<q,x_hat> + ||x_hat||^2 with ||x_hat||^2 bounded by norms.
-    # Invalid rows carry norms_sq=+inf: substitute 0 here (avoids inf-inf
-    # NaNs) — callers force their bounds to +inf via the validity mask.
-    safe_norms = jnp.where(jnp.isfinite(ds.norms_sq), ds.norms_sq, 0.0)
-    xhat_sq = jnp.maximum(safe_norms - ds.err**2, 0.0)
-    return jnp.maximum(qn - 2.0 * cross + xhat_sq[None, :], 0.0)
+    return jnp.maximum(qn - 2.0 * cross + ds.qnorm_sq[None, :], 0.0)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "rescore_factor"))
@@ -99,12 +122,14 @@ def knn_quantized(
     r = min(n, rescore_factor * k)
 
     valid = jnp.isfinite(ds.norms_sq)  # False on padding / tombstones
-    d_hat = _approx_l2(queries, ds)  # (M, N)
+    d_hat = _approx_l2(queries, ds)  # (M, N) exact ||q - x_hat||^2
     q32 = queries.astype(jnp.float32)
-    qxhat_ub = jnp.sqrt(d_hat)  # ||q - x_hat||
-    eps = 2.0 * qxhat_ub * ds.err[None, :] + (ds.err**2)[None, :]
-    lower = jnp.where(valid[None, :], jnp.maximum(d_hat - eps, 0.0), jnp.inf)
-    upper = jnp.where(valid[None, :], d_hat + eps, jnp.inf)
+    root = jnp.sqrt(d_hat)  # ||q - x_hat||
+    e = ds.err[None, :]
+    # reverse-triangle bracket around the true distance (module docstring)
+    lower = jnp.where(valid[None, :],
+                      jnp.maximum(root - e, 0.0) ** 2, jnp.inf)
+    upper = jnp.where(valid[None, :], (root + e) ** 2, jnp.inf)
 
     idx = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[None, :], (m, n))
     # k-th smallest upper bound = certified pruning threshold

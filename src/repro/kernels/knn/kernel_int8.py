@@ -8,9 +8,11 @@ materializes any (M, N) intermediate. Per grid step it
 1. dot-accumulates one quantized (bm, bn) cross-product tile on the MXU
    into an f32 VMEM accumulator (the int8 tile is widened in VMEM, so HBM
    sees only the 1-byte codes);
-2. applies the per-row scale dequant in the epilogue and forms the
-   *certified lower bound* on the exact squared-L2 distance
-   (``repro.core.quantized`` bound: |d - d_hat| <= 2*sqrt(d_hat)*err + err^2);
+2. applies the per-row scale dequant in the epilogue, forms the EXACT
+   quantized-approximation distance d_hat = ||q - x_hat||^2 from the
+   stored quantized norms, and lower-bounds the true squared-L2 distance
+   with the ``repro.core.quantized`` reverse-triangle bound
+   max(sqrt(d_hat) - err, 0)^2;
 3. folds the tile's lower bounds into a VMEM-resident *widened* candidate
    queue of q_len = 2 * (rescore_budget) entries per query — wide so the
    caller can read both the rescore candidates (first half) and the
@@ -41,7 +43,7 @@ from repro.kernels.bitonic import bitonic_sort, tile_prunable, topk_update
 
 
 def _knn_int8_kernel(
-    q_ref, x_ref, qn_ref, sc_ref, er_ref, xn_ref, ov_ref, oi_ref, sk_ref,
+    q_ref, x_ref, qn_ref, sc_ref, er_ref, hn_ref, ov_ref, oi_ref, sk_ref,
     acc, buf_v, buf_i,
     *, q_len: int, n_steps: int, d_steps: int, bn: int, prune: bool,
 ):
@@ -68,14 +70,19 @@ def _knn_int8_kernel(
     def _bound_and_enqueue():
         # per-row scale dequant epilogue: <q, x_hat> = s_x * <q, q_x>
         cross = acc[...] * sc_ref[...]  # (bm, bn) * (1, bn)
-        xn = xn_ref[...]  # (1, bn) exact f32 norms; +inf marks invalid rows
+        hn = hn_ref[...]  # (1, bn) exact ||x_hat||^2; +inf marks invalid rows
         e = er_ref[...]  # (1, bn) certified ||e_x|| upper bound
-        valid = jnp.isfinite(xn)
-        # ||x_hat||^2 bounded via exact norms (inf-safe on invalid rows)
-        xhat_sq = jnp.maximum(jnp.where(valid, xn, 0.0) - e * e, 0.0)
-        d_hat = jnp.maximum(qn_ref[...] - 2.0 * cross + xhat_sq, 0.0)
-        eps = 2.0 * jnp.sqrt(d_hat) * e + e * e
-        lower = jnp.where(valid, jnp.maximum(d_hat - eps, 0.0), jnp.inf)
+        valid = jnp.isfinite(hn)
+        # d_hat = ||q - x_hat||^2 EXACTLY (inf-safe on invalid rows), so the
+        # reverse-triangle bound (sqrt(d_hat) - err)^2 <= d is sound; an
+        # approximated quantized norm would drop the 2<x_hat, e> cross term
+        # and overshoot the bound past true distances (see core.quantized)
+        d_hat = jnp.maximum(
+            qn_ref[...] - 2.0 * cross + jnp.where(valid, hn, 0.0), 0.0
+        )
+        lower = jnp.where(
+            valid, jnp.maximum(jnp.sqrt(d_hat) - e, 0.0) ** 2, jnp.inf
+        )
         idx = j * bn + lax.broadcasted_iota(jnp.int32, lower.shape, 1)
 
         def _merge():
@@ -112,7 +119,7 @@ def knn_pallas_int8(
     qn: jax.Array,
     scales: jax.Array,
     err: jax.Array,
-    xn: jax.Array,
+    hn: jax.Array,
     q_len: int,
     block_m: int = 128,
     block_n: int = 512,
@@ -122,8 +129,9 @@ def knn_pallas_int8(
 ):
     """Fused int8 candidate scan. Preconditions enforced by ops.py:
     M % bm == N % bn == d % bd == 0; q_len pow2 <= bn; q f32, x8 int8;
-    scales/err/xn are (1, N) f32 with xn = +inf on invalid rows (padding /
-    tombstones), err = 0 and scales = 1 on padding.
+    scales/err/hn are (1, N) f32 with hn the EXACT quantized norm
+    ||x_hat||^2 = s^2 * sum(q_x^2), set to +inf on invalid rows (padding /
+    tombstones); err = 0 and scales = 1 on padding.
 
     Returns (lower bounds (M, q_len) sorted ascending, indices (M, q_len),
     skips (m_tiles, 1)). The first q_len//2 columns are the rescore
@@ -173,4 +181,4 @@ def knn_pallas_int8(
             ('parallel', 'arbitrary', 'arbitrary')
         ),
         interpret=interpret,
-    )(q, x8, qn, scales, err, xn)
+    )(q, x8, qn, scales, err, hn)

@@ -133,6 +133,10 @@ def knn(
                 jnp.isfinite(xn_row) & (xn_row > 0),
                 x32 / jnp.maximum(xn_row, 1e-30), 0.0,
             )
+        else:
+            # resident pre-normalized views keep their storage dtype; the
+            # fused kernel requires q/x to share one dtype, so follow x
+            q = q.astype(x.dtype)
         kernel_metric = "ip"
 
     m, d = q.shape
@@ -220,10 +224,14 @@ def knn_int8(
     scales = jnp.pad(ds.scales.astype(jnp.float32), (0, np_ - n),
                      constant_values=1.0)[None, :]
     err = jnp.pad(ds.err.astype(jnp.float32), (0, np_ - n))[None, :]
-    xn = jnp.pad(ds.norms_sq.astype(jnp.float32), (0, np_ - n),
-                 constant_values=jnp.inf)[None, :]
+    # validity rides norms_sq (+inf on tombstones; the only channel
+    # mutations refresh), folded onto the exact quantized norms the
+    # kernel's certified bound requires
+    hn = jnp.where(jnp.isfinite(ds.norms_sq),
+                   ds.qnorm_sq.astype(jnp.float32), jnp.inf)
+    hn = jnp.pad(hn, (0, np_ - n), constant_values=jnp.inf)[None, :]
 
-    lb, li, skips = knn_pallas_int8(qp, x8, qn, scales, err, xn, q_len,
+    lb, li, skips = knn_pallas_int8(qp, x8, qn, scales, err, hn, q_len,
                                     bm, bn, bd, interpret, prune)
     lb, li = lb[:m], li[:m]
 

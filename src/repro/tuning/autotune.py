@@ -25,8 +25,10 @@ executor layer's executable cache guarantees zero recompiles
 
 Cache key format (one line per entry in the JSON file):
 
-    <kernel>|m<pow2-bucketed batch>|n<padded rows>|d<padded dim>|<dtype>|<metric>
+    <kernel>|m<pow2-bucketed batch>|n<padded rows>|d<padded dim>|<dtype>|<metric>|k<k>[|r<rescore_factor>]
 
+(the |r field appears only on int8-kernel keys; both k and the rescore
+factor set the on-chip queue width, so each gets its own tuning entry).
 M is bucketed to the next power of two — the serving layer already pads
 batches that way, so tuning inherits the same O(log max_batch) key space.
 See ``src/repro/tuning/README.md`` for the sweep space and how to pre-seed
@@ -70,16 +72,23 @@ def _round_up(v: int, m: int) -> int:
 
 
 def tuning_key(kernel: str, m: int, n: int, d: int, dtype: str,
-               metric: str, k: int) -> str:
+               metric: str, k: int, rescore_factor: int | None = None) -> str:
     """Stable string key for one tuning problem (see module docstring).
 
     `k` is part of the key because it sets the on-chip queue width, which
     both constrains legal block_n and changes the winning trade-off —
     blocks tuned at one k must never be applied (and silently re-clamped)
-    under another.
+    under another. `rescore_factor` joins the key for the int8 kernel
+    (None for f32) for the same reason: the queue width is
+    2 * next_pow2(rescore_factor * k_eff), so a winner swept at one budget
+    would otherwise be re-clamped past the vetted VMEM legality under
+    another.
     """
-    return (f"{kernel}|m{_next_pow2(max(1, int(m)))}|n{int(n)}|d{int(d)}"
-            f"|{dtype}|{metric}|k{int(k)}")
+    key = (f"{kernel}|m{_next_pow2(max(1, int(m)))}|n{int(n)}|d{int(d)}"
+           f"|{dtype}|{metric}|k{int(k)}")
+    if rescore_factor is not None:
+        key += f"|r{int(rescore_factor)}"
+    return key
 
 
 def device_kind() -> str:
@@ -194,7 +203,8 @@ def set_default_cache(cache: AutotuneCache | None) -> None:
 
 
 def lookup_blocks(kernel: str, m: int, n: int, d: int, dtype: str,
-                  metric: str, k: int) -> BlockShapes | None:
+                  metric: str, k: int,
+                  rescore_factor: int | None = None) -> BlockShapes | None:
     """Pure read the planner calls: tuned blocks for a key, else None.
 
     Never raises — a broken cache (or a device-less environment) must not
@@ -202,7 +212,7 @@ def lookup_blocks(kernel: str, m: int, n: int, d: int, dtype: str,
     """
     try:
         return default_cache().get(
-            tuning_key(kernel, m, n, d, dtype, metric, k)
+            tuning_key(kernel, m, n, d, dtype, metric, k, rescore_factor)
         )
     except Exception:
         return None
@@ -234,9 +244,15 @@ def candidate_blocks(
             for bd in BD_CANDIDATES:
                 if bd > d_pad:
                     continue
+                # sub-f32 dataset tiles are widened to f32 in VMEM before
+                # the MXU dot (x_ref[...].astype(f32)), so both the raw
+                # tile and its widened copy count against the budget
+                x_tile = bn * bd * dtype_bytes
+                if dtype_bytes < 4:
+                    x_tile += bn * bd * 4
                 vmem = (
                     bm * bd * 4            # query tile (f32)
-                    + bn * bd * dtype_bytes  # dataset tile
+                    + x_tile               # dataset tile (+ f32 widening)
                     + bm * bn * 4          # accumulator
                     + bm * queue_len * 8   # queue values + indices
                     + bm * 8               # epilogue rows
@@ -349,8 +365,9 @@ def autotune_knn(
         if t < best_t:
             best, best_t = blocks, t
     assert best is not None  # candidate_blocks never returns empty
+    key_factor = rescore_factor if tier == "int8" else None
     cache.put(
-        tuning_key(kernel, m, n, d, dtype, metric, k), best,
+        tuning_key(kernel, m, n, d, dtype, metric, k, key_factor), best,
         us_per_call=best_t * 1e6, n_candidates=len(cands),
     )
     return best, timings

@@ -1,0 +1,29 @@
+"""Shared adversarial quantization fixtures (imported by the quantized
+and int8-Pallas test modules, which must exercise the identical hole)."""
+import numpy as np
+
+
+def aligned_quantization_error():
+    """Quantization error aligned with the row direction.
+
+    Row 0 sits +0.4*scale above a code point in every coordinate, so its
+    error vector is (nearly) parallel to the row and 2<x_hat, e> reaches
+    ~2*||x||*err. Any bound that approximates ||x_hat||^2 from ||x||^2
+    (dropping that cross term) overshoots row 0's lower bound by ~9e3
+    while its true distance to the query (= row 0 itself) is 0 — the true
+    NN gets pruned behind the integer-valued decoys (which quantize with
+    zero error at distinct distances ~1.3e2..1e3) and the certificate
+    still passes. The exact-quantized-norm bound keeps row 0 a candidate.
+
+    Returns (queries (1, 256), dataset (13, 256)); the true NN of query 0
+    is row 0 at distance 0.
+    """
+    d = 256
+    row = np.full(d, 50.4, np.float32)
+    row[0] = 127.0  # pins absmax so the scale is exactly 1.0
+    decoys = np.tile(np.round(row), (12, 1))
+    for j in range(12):
+        decoys[j, 1 + j] += np.float32(10 + 2 * j)  # distinct distances
+    x = np.vstack([row[None, :], decoys]).astype(np.float32)
+    q = row[None, :].copy()
+    return q, x

@@ -97,6 +97,19 @@ class TestCandidateLegality:
                     + c.block_m * c.block_n * 4)
             assert vmem <= (1 << 20) or (c,) == tuple(small)  # fallback only
 
+    def test_int8_widening_counted_against_vmem(self):
+        """The kernel widens the int8 dataset tile to f32 in VMEM before
+        the MXU dot, so int8 legality must charge 1+4 B/elem for it — a
+        1 B/elem model would admit tiles ~3 MB past the budget."""
+        budget = 2 << 20
+        cands = candidate_blocks(m=128, n=1 << 20, d=2048, queue_len=64,
+                                 dtype_bytes=1, vmem_budget_bytes=budget)
+        for c in cands:
+            widened = (c.block_m * c.block_d * 4
+                       + c.block_n * c.block_d * (1 + 4)
+                       + c.block_m * c.block_n * 4)
+            assert widened <= budget or (c,) == tuple(cands)  # fallback only
+
     def test_degenerate_budget_still_returns_one(self):
         cands = candidate_blocks(m=1, n=128, d=8, queue_len=512,
                                  vmem_budget_bytes=1)
@@ -168,6 +181,26 @@ class TestSweepAndPlanner:
         # the f32 plan for the same geometry is untouched (distinct key)
         pf = eng.plan_for("fqsd", 4)
         assert (pf.block_m, pf.block_n, pf.block_d) == (0, 0, 0)
+
+    def test_rescore_factor_is_part_of_the_int8_key(self, tmp_path):
+        """The rescore budget scales the int8 on-chip queue width exactly
+        like k, so blocks swept at one budget must never be applied (and
+        silently re-clamped past the vetted VMEM legality) under another."""
+        rng = np.random.default_rng(4)
+        x = rng.standard_normal((600, 24)).astype(np.float32)
+        eng = ExactKNN(k=3, backend="pallas",
+                       rescore_factor=4).fit(x).enable_int8()
+        cache = AutotuneCache(str(tmp_path / "dev.json"))
+        set_default_cache(cache)
+        p = eng.plan_for("fqsd", 4, tier="int8")
+        autotune_knn(p.m, p.padded_rows, p.padded_dim, k=eng.k, tier="int8",
+                     rescore_factor=4, cache=cache, repeats=1,
+                     max_candidates=1)
+        assert eng.plan_for("fqsd", 4, tier="int8").block_n > 0  # tuned
+        other = ExactKNN(k=3, backend="pallas",
+                         rescore_factor=16).fit(x).enable_int8()
+        po = other.plan_for("fqsd", 4, tier="int8")
+        assert (po.block_m, po.block_n, po.block_d) == (0, 0, 0)  # cold
 
     def test_k_is_part_of_the_key(self, tmp_path):
         """Blocks tuned at one k must not leak to plans with another k (a

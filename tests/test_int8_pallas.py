@@ -56,11 +56,19 @@ def _dim_not_multiple_of_128():
     return q, x, 6
 
 
+def _aligned_quantization_error():
+    from adversarial_cases import aligned_quantization_error
+
+    q, x = aligned_quantization_error()
+    return q, x, 1
+
+
 CASES = {
     "gaussian": _gaussian,
     "constant_rows": _constant_rows,
     "dynamic_range_12_decades": _dynamic_range_12_decades,
     "dim_not_multiple_of_128": _dim_not_multiple_of_128,
+    "aligned_quantization_error": _aligned_quantization_error,
 }
 
 
@@ -141,6 +149,19 @@ class TestRawInt8Kernel:
                                       np.asarray(oracle.scores)[c])
         np.testing.assert_array_equal(np.asarray(res.indices)[c],
                                       np.asarray(oracle.indices)[c])
+
+    def test_aligned_error_certifies_and_keeps_true_neighbor(self):
+        """Regression for the unsound xn - err^2 norm substitution: the
+        on-chip candidate queue must retain the true NN even when the
+        quantization error aligns with the row direction, and the
+        certificate must hold (no fallback needed for exactness)."""
+        q, x, k = _aligned_quantization_error()
+        ds = quantize_dataset(jnp.asarray(x))
+        res, cert = knn_int8(jnp.asarray(q), ds, jnp.asarray(x), k)
+        assert np.asarray(cert).all()
+        assert np.asarray(res.indices)[0, 0] == 0
+        np.testing.assert_allclose(np.asarray(res.scores)[0, 0], 0.0,
+                                   atol=1e-3)
 
     def test_prune_bit_identical_and_certificate_stable(self):
         q, x, k = _gaussian()

@@ -118,6 +118,19 @@ def test_dim_not_multiple_of_128():
                                   np.asarray(ref.indices))
 
 
+def test_aligned_error_lower_bound_keeps_true_neighbor():
+    from adversarial_cases import aligned_quantization_error
+
+    q, x = aligned_quantization_error()
+    ds = quantize_dataset(jnp.asarray(x))
+    assert float(ds.scales[0]) == 1.0
+    assert float(ds.err[1]) == 0.0  # decoys are exactly representable
+    res, cert = knn_quantized(jnp.asarray(q), ds, jnp.asarray(x), 1, 4)
+    assert np.asarray(cert).all()
+    assert np.asarray(res.indices)[0, 0] == 0  # the true NN survived
+    np.testing.assert_allclose(np.asarray(res.scores)[0, 0], 0.0, atol=1e-3)
+
+
 def test_invalid_rows_masked_out_of_candidates_and_rescore():
     """+inf norms_sq marks padding/tombstones: such rows must never appear
     in the result even though their (zero) vectors would score well."""
