@@ -6,10 +6,11 @@ The paper's STAR/MS-MARCO pipeline: a dense encoder embeds passages and
 queries into one space; retrieval is exact kNN by maximum inner product.
 Offline we stand in for STAR with the two-tower item tower (the encoder
 family the paper's dense-retrieval baselines use), encode a synthetic
-passage corpus, then serve a *bursty* query stream through the
-AdaptiveScheduler: dense bursts route to an FQ-SD (throughput) plan, the
-sparse trickle to FD-SQ (latency) — the paper's RQ3 trade-off as a runtime
-policy instead of a deployment choice.
+passage corpus into a named `Router` collection, then serve a *bursty*
+stream of `SearchRequest`s through the AdaptiveScheduler: dense bursts
+route to an FQ-SD (throughput) plan, the sparse trickle to FD-SQ (latency)
+— the paper's RQ3 trade-off as a runtime policy instead of a deployment
+choice. Every dispatch goes `Router.search -> ExactKNN.search`.
 """
 import time
 
@@ -17,7 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import ExactKNN
+from repro.api import Router
 from repro.models import recsys as R
 from repro.serving import AdaptiveScheduler, bursty_requests
 
@@ -41,9 +42,11 @@ def main():
     src = rng.integers(0, n_passages, n_queries)
     qvecs = corpus[src] + 0.05 * rng.standard_normal((n_queries, corpus.shape[1])).astype(np.float32)
 
-    # ----- exact MIPS retrieval through the adaptive scheduler ------------
-    engine = ExactKNN(k=10, metric="ip", n_partitions=8).fit(corpus)
-    server = AdaptiveScheduler(engine, policy="adaptive", fqsd_min_depth=32)
+    # ----- exact MIPS retrieval through Router + adaptive scheduler -------
+    router = Router()
+    router.create("passages", corpus, k=10, metric="ip", n_partitions=8)
+    server = AdaptiveScheduler(policy="adaptive", fqsd_min_depth=32,
+                               router=router, collection="passages")
 
     t0 = time.perf_counter()
     hits = 0
@@ -52,12 +55,17 @@ def main():
     wall = time.perf_counter() - t0
 
     st = server.stats()
-    print(f"served {st['served']} queries in {wall:.2f}s "
+    print(f"served {st['served']} queries from collection "
+          f"{st['collection']!r} in {wall:.2f}s "
           f"({n_queries / wall:.1f} q/s), mode_switches={st['mode_switches']}")
     for mode, r in st["per_plan"].items():
         print(f"  plan={mode:<5} n={r['count']:<5} p50={r['p50_ms']:.2f}ms "
               f"p99={r['p99_ms']:.2f}ms q/s={r['qps']:.1f} "
-              f"executors={','.join(r['executors'])}")
+              f"executors={','.join(r['executors'])} tier={','.join(r['tier'])} "
+              f"certified={r['certified_exact']:.2f}")
+    rs = router.stats()["collections"]["passages"]
+    print(f"  router: {rs['requests']} dispatches, "
+          f"{rs['bytes_scanned']['f32'] / 2**30:.2f} GiB scanned (f32)")
     print(f"recall@10 of source passage: {hits / n_queries:.3f}")
 
 

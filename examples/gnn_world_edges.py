@@ -5,14 +5,16 @@
 MeshGraphNet (arXiv:2010.03409) adds "world edges" between mesh nodes that
 are CLOSE IN SPACE but far on the mesh (collision handling). That proximity
 search is exactly the paper's problem: for every node, find its k nearest
-nodes in world space. Here the kNN engine builds the world edges, then one
-MeshGraphNet step runs on the combined mesh+world graph.
+nodes in world space. The two node embeddings (parameter space and world
+space) are two named collections in one `api.Router` — the multi-tenant
+shape of the request-first API; both searches are `SearchRequest`s, then
+one MeshGraphNet step runs on the combined mesh+world graph.
 """
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import ExactKNN
+from repro.api import Router, SearchRequest
 from repro.models import gnn as G
 
 
@@ -24,14 +26,21 @@ def main():
         [u[:, 0], np.abs(u[:, 1] - 0.5), np.sin(4 * np.pi * u[:, 1]) * 0.05],
         axis=1).astype(np.float32)
 
-    # mesh edges: 8-NN in PARAMETER space (the regular mesh)
+    # two collections, one router: same rows, two embedding spaces
     k_mesh, k_world = 8, 4
-    mesh_nn = ExactKNN(k=k_mesh + 1).fit(u).query_batch(u)
+    router = Router()
+    router.create("mesh-params", u, k=k_mesh + 1)
+    router.create("world", world, k=k_world + 1)
+
+    # mesh edges: 8-NN in PARAMETER space (the regular mesh)
+    mesh_nn = router.search(
+        "mesh-params", SearchRequest(queries=u, mode_hint="fqsd")).topk
     mesh_src = np.repeat(np.arange(n), k_mesh)
     mesh_dst = np.asarray(mesh_nn.indices[:, 1:]).reshape(-1)  # skip self
 
     # world edges: kNN in WORLD space, keep pairs that are far on the mesh
-    world_nn = ExactKNN(k=k_world + 1).fit(world).query_batch(world)
+    world_nn = router.search(
+        "world", SearchRequest(queries=world, mode_hint="fqsd")).topk
     w_src = np.repeat(np.arange(n), k_world)
     w_dst = np.asarray(world_nn.indices[:, 1:]).reshape(-1)
     mesh_gap = np.linalg.norm(u[w_src] - u[w_dst], axis=1)
@@ -39,6 +48,9 @@ def main():
     w_src, w_dst = w_src[keep], w_dst[keep]
     print(f"mesh edges: {len(mesh_src)}, world (collision) edges: {len(w_src)} "
           f"(exact kNN over {n} nodes, both searches)")
+    cache = router.cache_info()
+    print(f"router collections: {router.collections()}  "
+          f"shared executable cache misses={cache['misses']}")
 
     senders = np.concatenate([mesh_src, w_src]).astype(np.int32)
     receivers = np.concatenate([mesh_dst, w_dst]).astype(np.int32)

@@ -3,17 +3,20 @@ paper section 4.1 use case 1 (YFCC100M-HNFc6 shape), FQ-SD configuration.
 
     PYTHONPATH=src python examples/image_retrieval_streaming.py
 
-The 4096-dim deep-feature corpus streams through the engine partition by
-partition with double buffering (paper section 3.3 arrows 3-4); the 16
-resident query "images" keep their kNN queues on device the whole time.
-The result is verified exact against a resident-memory pass.
+The 4096-dim deep-feature corpus is a non-resident DatasetStore: every
+`SearchRequest` streams it through the engine shard by shard with double
+buffering (paper section 3.3 arrows 3-4); the 16 resident query "images"
+keep their kNN queues on device the whole time. The result is verified
+exact against a resident-memory pass through the same `search` entry point.
 """
 import time
 
 import numpy as np
 
-from repro.core import DoubleBufferedStream, ExactKNN
+from repro.api import SearchRequest
+from repro.core import ExactKNN
 from repro.data import query_stream, vector_dataset
+from repro.store import DatasetStore
 
 
 def main():
@@ -23,17 +26,21 @@ def main():
     corpus = vector_dataset(n, d, n_clusters=32, seed=0)
     queries = query_stream(corpus, m, seed=1)
 
-    engine = ExactKNN(k=k, metric="l2")
+    # the corpus never resides on device: a non-resident store streams it
+    store = DatasetStore.from_array(corpus, rows_per_shard=8192)
+    engine = ExactKNN(k=k, metric="l2").fit_store(store, resident=False)
 
-    # --- streamed FQ-SD: the corpus never resides on device ------------
+    # --- streamed FQ-SD through the one search entry point --------------
     t0 = time.perf_counter()
-    streamed = engine.search_streamed(queries, corpus, rows_per_partition=8192)
+    streamed = engine.search(SearchRequest(queries=queries))
     t_stream = time.perf_counter() - t0
-    print(f"FQ-SD streamed: {m} queries in {t_stream:.2f}s "
+    print(f"FQ-SD streamed ({streamed.plan.executor}): {m} queries in "
+          f"{t_stream:.2f}s "
           f"({n * d * 4 / t_stream / 1e9:.2f} GB/s effective scan rate)")
 
     # --- reference: resident pass ---------------------------------------
-    resident = ExactKNN(k=k).fit(corpus).query_batch(queries)
+    resident = ExactKNN(k=k).fit(corpus).search(
+        SearchRequest(queries=queries, mode_hint="fqsd")).topk
     np.testing.assert_allclose(np.asarray(streamed.scores),
                                np.asarray(resident.scores), rtol=1e-5, atol=1e-3)
     print("streamed result == resident result (exact)")

@@ -1,17 +1,19 @@
-"""Quickstart: exact kNN search with both of the paper's configurations.
+"""Quickstart: exact kNN search through the request-first API.
 
     PYTHONPATH=src python examples/quickstart.py
 
-Builds a clustered corpus, answers queries through FD-SQ (latency path) and
-FQ-SD (throughput path), verifies exactness against the brute-force oracle,
-and shows the int8-quantized scan with its exactness certificate.
+Builds a clustered corpus and answers every call through ONE entry point —
+``ExactKNN.search(SearchRequest)`` — with the paper's two configurations
+(FD-SQ latency / FQ-SD throughput) selected per request, verifies
+exactness against the brute-force oracle, and shows per-request options:
+k override, validity filter, and the int8 tier with its exactness
+certificate.
 """
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import (
-    ExactKNN, knn_oracle, knn_quantized, pairwise_scores, quantize_dataset,
-)
+from repro.api import SearchRequest
+from repro.core import ExactKNN, knn_oracle, pairwise_scores
 from repro.data import query_stream, vector_dataset
 
 
@@ -24,13 +26,14 @@ def main():
     engine = ExactKNN(k=k, metric="l2", n_partitions=8).fit(x)
 
     # --- FD-SQ: latency path (paper fig. 2) -----------------------------
-    res = engine.query(queries[0])
+    res = engine.search(SearchRequest(queries=queries[0], mode_hint="fdsq"))
     print(f"FD-SQ 1-query: top-3 idx={np.asarray(res.indices[0, :3])} "
           f"dist={np.round(np.asarray(res.scores[0, :3]), 3)}")
 
     # --- FQ-SD: throughput path (paper fig. 1) --------------------------
-    batch = engine.query_batch(queries)
-    print(f"FQ-SD batch of {len(queries)}: result {batch.scores.shape}")
+    batch = engine.search(SearchRequest(queries=queries, mode_hint="fqsd"))
+    print(f"FQ-SD batch of {len(queries)}: result {batch.scores.shape} "
+          f"(plan: {batch.plan.executor})")
 
     # --- exactness vs brute force ---------------------------------------
     ref_s, ref_i = knn_oracle(pairwise_scores(jnp.asarray(queries), jnp.asarray(x)), k)
@@ -42,27 +45,47 @@ def main():
     ])
     print(f"exactness: scores allclose to oracle, recall@{k} = {recall:.3f}")
 
+    # --- per-request k: no new engine needed ----------------------------
+    res3 = engine.search(SearchRequest(queries=queries, k=3, mode_hint="fqsd"))
+    np.testing.assert_allclose(np.asarray(res3.scores),
+                               np.asarray(batch.scores[:, :3]), rtol=1e-6)
+    print(f"per-request k=3: result {res3.scores.shape} "
+          f"== first 3 columns of the k={k} result")
+
+    # --- per-request validity filter (runtime data, no recompile) -------
+    mask = np.ones(engine.n_ids, dtype=bool)
+    mask[np.asarray(batch.indices[0, 0])] = False  # ban query 0's best hit
+    filtered = engine.search(SearchRequest(queries=queries[0], filter_mask=mask))
+    assert int(filtered.indices[0, 0]) == int(batch.indices[0, 1])
+    print("filter_mask: banned row excluded, runner-up promoted")
+
     # --- streamed FQ-SD (dataset "larger than device memory") -----------
-    streamed = engine.search_streamed(queries, x, rows_per_partition=8192)
+    from repro.store import DatasetStore
+
+    ooc = ExactKNN(k=k).fit_store(
+        DatasetStore.from_array(x, rows_per_shard=8192), resident=False)
+    streamed = ooc.search(SearchRequest(queries=queries))
     np.testing.assert_allclose(np.asarray(streamed.scores),
                                np.asarray(batch.scores), rtol=1e-4, atol=2e-3)
-    print("FQ-SD host-streamed (double-buffered) == resident result")
+    print(f"FQ-SD host-streamed ({streamed.plan.executor}) == resident result")
 
     # --- the plans behind the calls above (planner -> executor registry) -
-    print("execution plans (one physical config, three logical ones):")
+    print("execution plans (one physical config, many logical ones):")
     for p in engine.plans:
         print(f"  mode={p.mode:<14} executor={p.executor:<14} m={p.m:<3} "
-              f"chunk={p.chunk_rows} partitions={p.n_partitions}")
+              f"k={p.k:<3} chunk={p.chunk_rows} partitions={p.n_partitions}")
 
-    # --- int8 quantized scan + exact rescore (paper future work) --------
-    ds8 = quantize_dataset(jnp.asarray(x))
-    q8, cert = knn_quantized(jnp.asarray(queries), ds8, jnp.asarray(x), k)
+    # --- int8 tier: 1 B/elem scan + certified exact rescore -------------
+    engine.enable_int8()
+    r8 = engine.search(SearchRequest(queries=queries, tier="int8"))
     recall8 = np.mean([
-        len(set(np.asarray(q8.indices)[i]) & set(np.asarray(ref_i)[i])) / k
+        len(set(np.asarray(r8.indices)[i]) & set(np.asarray(ref_i)[i])) / k
         for i in range(len(queries))
     ])
     print(f"int8 scan + f32 rescore: recall@{k}={recall8:.3f}, "
-          f"certified-exact rows: {np.asarray(cert).mean():.0%}")
+          f"certified-exact rows: {np.asarray(r8.certified).mean():.0%}, "
+          f"bytes/pass: {r8.stats['bytes_scanned'] / 2**20:.0f} MiB "
+          f"(f32 pass: {batch.stats['bytes_scanned'] / 2**20:.0f} MiB)")
 
 
 if __name__ == "__main__":

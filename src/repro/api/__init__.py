@@ -1,0 +1,23 @@
+"""repro.api — the request-first public search API.
+
+    SearchRequest   one search call, fully described (queries, k, metric,
+                    tier, mode_hint, deadline_ms, filter_mask, rid)
+    SearchResult    one answer: TopK + exactness certificate + plan/kernel
+                    stats
+    Router          named multi-collection serving front: collection name ->
+                    DatasetStore-backed engine, shared bounded executable
+                    cache, per-collection stats
+
+Entry points: ``ExactKNN.search(SearchRequest)`` for one engine,
+``Router.search(name, SearchRequest)`` across collections, and
+``serving.AdaptiveScheduler`` for policy-scheduled streams of requests.
+The legacy ``query_*`` methods are deprecated shims over ``search`` —
+see docs/api.md for the migration table.
+
+This package's surface is snapshot-tested (tests/test_api_surface.py):
+changing ``__all__`` is an API change and must fail loudly, not drift.
+"""
+from repro.api.types import SearchRequest, SearchResult
+from repro.api.router import Router
+
+__all__ = ["SearchRequest", "SearchResult", "Router"]

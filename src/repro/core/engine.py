@@ -22,19 +22,25 @@ seen — the paper's "no reflashing" invariant (section 3.2), testable via
 tombstones ride the norms channel (runtime data, not shapes) and upserts
 land in fixed-geometry delta shards.
 
-Usage:
+Usage (request-first API — every option is a per-request fact):
     eng = ExactKNN(k=10, metric="l2")
     eng.fit(dataset)                       # FD-SQ: resident dataset
-    res = eng.query(q)                     # latency path  (fdsq plan)
-    res = eng.query_batch(Q)               # throughput    (fqsd plan)
+    res = eng.search(SearchRequest(queries=q))            # auto mode
+    res = eng.search(SearchRequest(queries=Q, mode_hint="fqsd"))
+    res = eng.search(SearchRequest(queries=Q, k=3))       # per-request k
     eng.enable_int8()
-    res = eng.query_batch_int8(Q)          # 1 B/elem scan, exact rescore
-    ids = eng.upsert(new_rows)             # visible to the next query
+    res = eng.search(SearchRequest(queries=Q, tier="int8"))
+    res.topk, res.certified, res.plan, res.kernel_stats   # one result type
+    ids = eng.upsert(new_rows)             # visible to the next request
     eng.delete(ids[:1])                    # ditto; still exact
     eng.plans                              # every ExecutionPlan executed
 
+The historical entry points (``query``, ``query_batch``,
+``query_batch_int8``, ``query_stream``, ``search_streamed``) remain as thin
+deprecated shims over :meth:`search`.
+
 Out-of-core: ``ExactKNN(..., device_budget_bytes=B).fit_store(store)`` with
-an mmap-backed store bigger than B routes every query through the
+an mmap-backed store bigger than B routes every request through the
 manifest-driven streamed executor. Distributed (mesh) usage routes to the
 sharded executors; Pallas-fused kernels are selected with backend="pallas".
 Mode selection itself lives in ``repro.core.planner`` — this class contains
@@ -42,6 +48,8 @@ no ``if mesh`` / ``if backend`` dispatch of its own.
 """
 from __future__ import annotations
 
+import time
+import warnings
 from typing import Iterable, Sequence
 
 import jax
@@ -67,6 +75,48 @@ from repro.core.planner import (
 )
 from repro.core.quantized import QuantizedDataset, quantized_norm_sq
 from repro.core.topk import TopK
+from repro.api.types import AUTO_FDSQ_MAX_BATCH, SearchRequest, SearchResult
+
+
+def _deprecated_shim(old: str, new: str) -> None:
+    warnings.warn(
+        f"ExactKNN.{old} is deprecated; use ExactKNN.search("
+        f"SearchRequest({new})) instead (see docs/api.md)",
+        DeprecationWarning, stacklevel=3,
+    )
+
+
+def _keep_rows(mask: np.ndarray, base_index: int, n_valid: int,
+               n_pad: int) -> np.ndarray:
+    """Slice a global-id filter mask down to one padded row block: True =
+    row eligible; padding rows stay True (their norms are +inf already).
+    The ONE place the id-space -> row-block arithmetic lives — every mask
+    fold (resident f32, int8 norms_sq, delta shards, streamed shards) goes
+    through here so the semantics cannot drift between paths."""
+    keep = np.ones(n_pad, dtype=bool)
+    keep[:n_valid] = mask[base_index : base_index + n_valid]
+    return keep
+
+
+class _MaskedShardSource:
+    """A DatasetStore view with a per-request filter mask folded onto each
+    shard's norms channel (+inf = excluded) as it streams — duck-types the
+    one method the streamed executor reads (`iter_shards`)."""
+
+    def __init__(self, store, mask: np.ndarray):
+        self._store = store
+        self._mask = mask
+
+    def iter_shards(self):
+        for p in self._store.iter_shards():
+            keep = _keep_rows(self._mask, p.base_index, p.n_valid,
+                              int(p.vectors.shape[0]))
+            if keep.all():
+                yield p
+                continue
+            norms = np.where(keep, np.asarray(p.norms), np.float32(np.inf))
+            yield part.PaddedDataset(p.vectors, norms.astype(np.float32),
+                                     p.n_valid, p.base_index)
 
 
 class ExactKNN:
@@ -294,14 +344,30 @@ class ExactKNN:
                 ))
         self._delta_dev = fresh
 
-    def _merge_delta(self, out: TopK, queries: jax.Array) -> TopK:
+    def _merge_delta(
+        self,
+        out: TopK,
+        queries: jax.Array,
+        k: int | None = None,
+        metric: str | None = None,
+        mask: np.ndarray | None = None,
+    ) -> TopK:
         """Fold live delta shards into a main-scan result (exact merge via
-        the shared cached partition step — compiled once per delta shape)."""
+        the shared cached partition step — compiled once per delta shape).
+        Per-request k/metric ride the step's cache key; a filter mask folds
+        onto the norms channel (+inf = excluded, runtime data only)."""
         if not self._delta_dev:
             return out
-        step = cached_partition_step(self.k, self.metric)
+        k = self.k if k is None else int(k)
+        metric = self.metric if metric is None else metric
+        step = cached_partition_step(k, metric)
         for p in self._delta_dev:
-            out = step(out, queries, p.vectors, p.norms,
+            norms = p.norms
+            if mask is not None:
+                keep = _keep_rows(mask, p.base_index, p.n_valid,
+                                  int(p.vectors.shape[0]))
+                norms = jnp.where(jnp.asarray(keep), norms, jnp.inf)
+            out = step(out, queries, p.vectors, norms,
                        jnp.int32(p.base_index), jnp.int32(p.n_valid))
         return out
 
@@ -415,59 +481,170 @@ class ExactKNN:
         """Every plan executed, in order (observability / tests)."""
         return list(self._plans)
 
-    # ---------------------------------------------------------------- FD-SQ
-    def query(self, q) -> TopK:
-        """Low-latency path: one query (or micro-batch) vs resident dataset."""
+    # ------------------------------------------------------------ request API
+    @property
+    def n_ids(self) -> int:
+        """Size of the global row-id space (main + delta rows, including
+        tombstoned ids — ids are never reused). ``SearchRequest.filter_mask``
+        must have exactly this length."""
         self._require_fit()
-        if not self._resident:
-            return self._query_store_streamed(q)
+        if self._store is not None:
+            return self._store.n_main + self._store.n_delta
+        return int(self._ds.n_valid)
+
+    def _masked_resident(self, mask: np.ndarray | None) -> part.PaddedDataset:
+        """Resident f32 view with a per-request filter mask folded onto the
+        norms channel (+inf = excluded — runtime data, so filtering never
+        changes compiled shapes)."""
+        ds = self._ds
+        if mask is None:
+            return ds
+        n_main = self._store.n_main if self._store is not None else ds.n_valid
+        keep = _keep_rows(mask, 0, n_main, int(ds.vectors.shape[0]))
+        norms = jnp.where(jnp.asarray(keep), ds.norms, jnp.inf)
+        return part.PaddedDataset(ds.vectors, norms, ds.n_valid, ds.base_index)
+
+    def _masked_int8(self, mask: np.ndarray | None) -> QuantizedDataset:
+        """Int8 view under the same per-request mask (norms_sq is the int8
+        executors' validity channel, exactly like f32 norms)."""
+        q8 = self._int8
+        if mask is None:
+            return q8
+        keep = _keep_rows(mask, 0, self._store.n_main,
+                          int(q8.norms_sq.shape[0]))
+        return q8._replace(
+            norms_sq=jnp.where(jnp.asarray(keep), q8.norms_sq, jnp.inf)
+        )
+
+    def search(self, request: SearchRequest) -> SearchResult:
+        """Serve one :class:`SearchRequest` — the single entry point.
+
+        Normalizes every per-request option (k, metric, tier, mode, filter
+        mask, deadline) and routes through ``planner.plan`` so the option
+        set rides ``ExecutionPlan.cache_key()``: a request with k ≠ the
+        engine's configured k returns results bit-identical to a fresh
+        engine built with that k, and hits exactly the executables such an
+        engine would have compiled (the autotune key already carries k).
+
+        tier="auto" serves the exact f32 base tier; the serving layer's
+        bandwidth-aware policy may upgrade auto requests to int8 per batch.
+        mode_hint="auto" takes the FD-SQ latency plan for micro-batches
+        (<= AUTO_FDSQ_MAX_BATCH rows) and the FQ-SD throughput plan beyond.
+        """
+        if not isinstance(request, SearchRequest):
+            raise TypeError(
+                f"search() takes a SearchRequest, got {type(request).__name__}"
+            )
+        self._require_fit()
+        k = self.k if request.k is None else int(request.k)
+        if k < 1:
+            raise ValueError(f"k must be >= 1, got {k}")
+        metric = self.metric if request.metric is None else request.metric
+        validate_metric(metric)
+        if self._cos_prenormalized and metric != "cos":
+            raise ValueError(
+                "this engine L2-normalized its resident rows at fit time "
+                f"(cos metric, pallas backend); per-request metric={metric!r} "
+                "would score normalized rows — fit a separate engine"
+            )
+        tier = "f32" if request.tier == "auto" else request.tier
+        if tier == "int8":
+            if request.mode_hint == "fdsq":
+                raise ValueError(
+                    "tier='int8' is a throughput (FQ-SD) tier and cannot "
+                    "serve an explicit mode_hint='fdsq' request"
+                )
+            if self._int8 is None:
+                raise RuntimeError("int8 tier not enabled; call enable_int8() first")
+            if metric != "l2":
+                raise ValueError("int8 tier supports the l2 metric only")
         self._sync_mutations()
-        qv = self._pad_queries(q)
-        out = self._run(self.plan_for("fdsq", qv.shape[0]), qv, self._ds)
-        return self._merge_delta(out, qv)
+        qv = self._pad_queries(request.queries)
+        m = int(qv.shape[0])
+        mode = request.mode_hint
+        if tier == "int8":
+            mode = "fqsd"
+        elif mode == "auto":
+            mode = "fdsq" if m <= AUTO_FDSQ_MAX_BATCH else "fqsd"
+        mask = request.filter_mask
+        if mask is not None:
+            mask = np.asarray(mask, dtype=bool).reshape(-1)
+            if mask.shape[0] != self.n_ids:
+                raise ValueError(
+                    "filter_mask must cover the engine's global id space "
+                    f"({self.n_ids} rows), got {mask.shape[0]}"
+                )
+            if self.mesh is not None:
+                raise NotImplementedError(
+                    "per-request filter masks on a mesh-sharded engine are "
+                    "not supported yet"
+                )
+        t0 = time.perf_counter()
+        if not self._resident:
+            p = plan_fn(
+                qv.shape, self.dataset_meta(), self.config(), "fqsd-streamed",
+                stream_rows=self._store.rows_per_shard, k=k, metric=metric,
+            )
+            source = (self._store if mask is None
+                      else _MaskedShardSource(self._store, mask))
+            out = self._run(p, qv, source)
+            # streamed scans fold delta shards (mask applied) in-pass
+        else:
+            p = plan_fn(
+                (m, self._padded_dim()), self.dataset_meta(tier=tier),
+                self.config(), mode, k=k, metric=metric,
+            )
+            if p.tier == "int8":
+                dataset = TieredResident(self._masked_resident(mask),
+                                         self._masked_int8(mask))
+            else:
+                dataset = self._masked_resident(mask)
+            out = self._run(p, qv, dataset)
+            out = self._merge_delta(out, qv, k=k, metric=metric, mask=mask)
+        dispatch_ms = (time.perf_counter() - t0) * 1e3
+        ctx = self._last_ctx
+        cert = ctx.certificate if (ctx is not None and p.tier == "int8") else None
+        stats = {
+            "k": k, "metric": metric, "m": m, "batched": m,
+            "bytes_scanned": p.padded_rows * p.padded_dim
+            * (1 if p.tier == "int8" else 4),
+            "dispatch_ms": dispatch_ms,
+        }
+        if request.deadline_ms is not None:
+            stats["deadline_ms"] = request.deadline_ms
+        return SearchResult(
+            topk=out, plan=p, tier=p.tier,
+            certified=True if cert is None else cert,
+            kernel_stats=ctx.kernel_stats if ctx is not None else None,
+            stats=stats, rid=request.rid,
+        )
+
+    # ------------------------------------------- deprecated query_* shims
+    def query(self, q) -> TopK:
+        """Deprecated low-latency path; delegates to :meth:`search`."""
+        _deprecated_shim("query(q)", "queries=q, mode_hint='fdsq'")
+        return self.search(SearchRequest(queries=q, mode_hint="fdsq")).topk
 
     def query_stream(self, queries_iter: Iterable) -> Iterable[TopK]:
-        """Streamed queries, one at a time (fig. 2 arrows 3-5)."""
+        """Deprecated streamed-queries path; delegates to :meth:`search`."""
+        _deprecated_shim("query_stream(qs)", "queries=q, mode_hint='fdsq'")
         for q in queries_iter:
-            out = self.query(q)
+            out = self.search(SearchRequest(queries=q, mode_hint="fdsq")).topk
             yield TopK(out.scores[0], out.indices[0])
 
-    # ---------------------------------------------------------------- FQ-SD
     def query_batch(self, queries) -> TopK:
-        """Throughput path: a batch of M queries over the resident dataset."""
-        self._require_fit()
-        if not self._resident:
-            return self._query_store_streamed(queries)
-        self._sync_mutations()
-        qv = self._pad_queries(queries)
-        out = self._run(self.plan_for("fqsd", qv.shape[0]), qv, self._ds)
-        return self._merge_delta(out, qv)
+        """Deprecated throughput path; delegates to :meth:`search`."""
+        _deprecated_shim("query_batch(Q)", "queries=Q, mode_hint='fqsd'")
+        return self.search(
+            SearchRequest(queries=queries, mode_hint="fqsd")
+        ).topk
 
     def query_batch_int8(self, queries) -> TopK:
-        """Throughput path through the int8 tier: 1 B/element scan with a
-        certified exact rescore (`last_certificate` holds the per-query
-        proof; uncertified rows are recomputed exactly by the executor).
-        Delta rows are merged through the exact f32 step, so mutation
-        exactness is independent of quantization."""
-        self._require_fit()
-        if self._int8 is None:
-            raise RuntimeError("int8 tier not enabled; call enable_int8() first")
-        self._sync_mutations()
-        qv = self._pad_queries(queries)
-        p = self.plan_for("fqsd", qv.shape[0], tier="int8")
-        out = self._run(p, qv, TieredResident(self._ds, self._int8))
-        return self._merge_delta(out, qv)
-
-    def _query_store_streamed(self, queries) -> TopK:
-        """Out-of-core path (both entry points collapse to one streamed
-        plan): the planner sees a non-resident store and selects the
-        manifest-driven streamed executor; the store hands the executor a
-        fresh shard scan (main + delta, tombstones applied)."""
-        self._sync_mutations()
-        qv = self._pad_queries(queries)
-        p = plan_fn(qv.shape, self.dataset_meta(), self.config(), "fqsd-streamed",
-                    stream_rows=self._store.rows_per_shard)
-        return self._run(p, qv, self._store)
+        """Deprecated int8-tier path; delegates to :meth:`search`."""
+        _deprecated_shim("query_batch_int8(Q)", "queries=Q, tier='int8'")
+        return self.search(
+            SearchRequest(queries=queries, tier="int8", mode_hint="fqsd")
+        ).topk
 
     def search_streamed(
         self,
@@ -478,11 +655,17 @@ class ExactKNN:
     ) -> TopK:
         """FQ-SD over a host dataset too large for device memory (fig. 1).
 
-        Queries are loaded once (arrow 1); partitions stream through the
-        double buffer (arrows 3-4); results come back at the end (arrow 5).
-        Legacy iterator path — prefer `fit_store(DatasetStore.open(...))`
-        for manifest-backed datasets.
+        Deprecated legacy iterator path: prefer attaching a (possibly
+        non-resident) DatasetStore and calling :meth:`search` — e.g.
+        ``fit_store(DatasetStore.from_array(x, rows_per_shard=...),
+        resident=False)`` then ``search(SearchRequest(queries=Q))``.
         """
+        warnings.warn(
+            "ExactKNN.search_streamed() is deprecated; attach a "
+            "non-resident DatasetStore (fit_store(..., resident=False)) "
+            "and call search(SearchRequest(queries=Q)) (see docs/api.md)",
+            DeprecationWarning, stacklevel=2,
+        )
         q = jnp.asarray(queries, dtype=self.dtype)
         if q.ndim == 1:
             q = q[None, :]
@@ -502,4 +685,5 @@ class ExactKNN:
         return self._run(p, q, parts, prefetch_depth=prefetch_depth)
 
 
-__all__ = ["ExactKNN", "EnginePlan", "ExecutionPlan"]
+__all__ = ["ExactKNN", "EnginePlan", "ExecutionPlan",
+           "SearchRequest", "SearchResult"]

@@ -167,8 +167,20 @@ def plan(
     engine_cfg: EngineConfig,
     mode: ModeHint = "fdsq",
     stream_rows: int | None = None,
+    k: int | None = None,
+    metric: str | None = None,
+    **unknown,
 ) -> ExecutionPlan:
     """Pure planning function: shapes + config in, ExecutionPlan out.
+
+    ``k`` and ``metric`` are *per-request* overrides of the engine config
+    (the request-first API: every option is a fact of the request the
+    planner normalizes). They ride ``ExecutionPlan.cache_key()`` — and the
+    autotune lookup key — so per-request values hit exactly the executables
+    a dedicated engine with those values would have compiled.
+
+    Unknown keyword arguments are rejected loudly: a typo'd option must
+    fail the call, not silently plan something else.
 
     Replaces the inline ``if mesh / if backend == "pallas"`` branches that
     used to live in ``ExactKNN.query`` / ``query_batch``:
@@ -190,6 +202,11 @@ def plan(
     * mode="fdsq"      -> partition-parallel fan-out with a partition count
       that divides the padded rows.
     """
+    if unknown:
+        raise TypeError(
+            "plan() got unexpected keyword argument(s): "
+            + ", ".join(repr(key) for key in sorted(unknown))
+        )
     if mode not in ("fdsq", "fqsd", "fqsd-streamed"):
         raise ValueError(f"unknown mode hint {mode!r}")
     if len(query_shape) == 2:
@@ -200,6 +217,10 @@ def plan(
         raise ValueError(f"query_shape must be (m, d) or (d,), got {query_shape}")
 
     cfg = engine_cfg
+    k = int(cfg.k) if k is None else int(k)
+    if k < 1:
+        raise ValueError(f"k must be >= 1, got {k}")
+    metric = cfg.metric if metric is None else metric
     sharded = bool(cfg.sharded or dataset_meta.sharded)
     rows = int(dataset_meta.padded_rows)
     chunk = int(cfg.chunk_rows)
@@ -220,7 +241,7 @@ def plan(
         executor = "fdsq-sharded" if mode == "fdsq" else "fqsd-sharded"
         mode_label = f"{mode}-sharded"
         tier = "f32"
-    elif tier == "int8" and mode == "fqsd" and cfg.metric == "l2":
+    elif tier == "int8" and mode == "fqsd" and metric == "l2":
         executor = ("fqsd-int8-pallas" if cfg.backend == "pallas"
                     else "fqsd-int8")
         mode_label = "fqsd-int8"
@@ -248,7 +269,7 @@ def plan(
         # so its tuned blocks are keyed per rescore_factor (autotune.py)
         tuned = lookup_blocks(
             executor, m, rows, int(dataset_meta.padded_dim),
-            cfg.dtype, cfg.metric, int(cfg.k),
+            cfg.dtype, metric, k,
             int(cfg.rescore_factor) if executor == "fqsd-int8-pallas"
             else None,
         )
@@ -259,8 +280,8 @@ def plan(
         mode=mode_label,
         backend=cfg.backend,
         m=m,
-        k=int(cfg.k),
-        metric=cfg.metric,
+        k=k,
+        metric=metric,
         chunk_rows=chunk,
         n_partitions=n_parts,
         executor=executor,

@@ -1,13 +1,17 @@
 """Serving driver: kNN retrieval (the paper's workloads) or LM decode.
 
     PYTHONPATH=src python -m repro.launch.serve --mode knn --n 20000 --d 128 \
-        --k 10 --queries 200 --policy {latency,throughput,adaptive}
+        --k 10 --queries 200 --policy {latency,throughput,adaptive} \
+        --collection passages
     PYTHONPATH=src python -m repro.launch.serve --mode lm --arch minicpm-2b
 
-The knn mode replays a bursty arrival stream (dense bursts alternating with
-a sparse trickle) through the AdaptiveScheduler and reports, per logical
-plan (fdsq / fqsd), the batch count, p50/p99 latency and queries/s — the
-paper's RQ3 trade-off surfaced as a runtime policy.
+The knn mode builds a named collection in an `api.Router`, replays a
+bursty arrival stream (dense bursts alternating with a sparse trickle) of
+`SearchRequest`s through the AdaptiveScheduler — every dispatch goes
+`Router.search -> ExactKNN.search(SearchRequest)` — and reports, per
+logical plan (fdsq / fqsd / fqsd-int8), the batch count, p50/p99 latency,
+queries/s, tier, and certified fraction — the paper's RQ3 trade-off
+surfaced as a runtime policy.
 """
 from __future__ import annotations
 
@@ -18,39 +22,49 @@ import numpy as np
 
 
 def serve_knn(args):
-    from repro.core import ExactKNN
+    from repro.api import Router
     from repro.data import query_stream, vector_dataset
     from repro.serving import AdaptiveScheduler, bursty_requests
 
     policy = "throughput" if args.fqsd else args.policy
     x = vector_dataset(args.n, args.d, seed=0)
     q = query_stream(x, args.queries, seed=1)
-    eng = ExactKNN(k=args.k, n_partitions=args.partitions).fit(x)
+    router = Router()
+    router.create(args.collection, x, k=args.k, n_partitions=args.partitions)
     if args.int8_depth is not None:
-        eng.enable_int8()
+        router.engine(args.collection).enable_int8()
     sched = AdaptiveScheduler(
-        eng, policy=policy,
+        policy=policy,
         fdsq_max_batch=args.fdsq_max_batch, fqsd_min_depth=args.fqsd_min_depth,
         int8_min_depth=args.int8_depth,
+        router=router, collection=args.collection,
     )
     reqs = bursty_requests(q, args.burst_size, args.trickle)
     t0 = time.perf_counter()
     n_served = sum(1 for _ in sched.serve(reqs))
     wall = time.perf_counter() - t0
     st = sched.stats()
-    print(f"policy={st['policy']}  served={st['served']} "
-          f"(wall {wall:.2f}s)  mode_switches={st['mode_switches']}  "
+    print(f"collection={st['collection']}  policy={st['policy']}  "
+          f"served={st['served']} (wall {wall:.2f}s)  "
+          f"mode_switches={st['mode_switches']}  "
           f"deadline_misses={st['deadline_misses']}")
     for mode, r in st["per_plan"].items():
-        cert = (f" certified={r['certified_exact']:.2f}"
-                if "certified_exact" in r else "")
         print(f"  plan={mode:<5} n={r['count']:<5} p50={r['p50_ms']:.2f}ms "
               f"p99={r['p99_ms']:.2f}ms q/s={r['qps']:.1f} "
-              f"executors={','.join(r['executors'])}{cert}")
+              f"executors={','.join(r['executors'])} "
+              f"tier={','.join(r['tier'])} "
+              f"certified={r['certified_exact']:.2f}")
     gib = {t: b / 2**30 for t, b in st["bytes_scanned"].items() if b}
     if gib:
         print("  bytes scanned per tier: "
               + "  ".join(f"{t}={v:.2f}GiB" for t, v in gib.items()))
+    rstats = router.stats()
+    cache = rstats["executable_cache"]
+    col = rstats["collections"][args.collection]
+    print(f"  router: {col['requests']} dispatches over "
+          f"{col['n_rows']} rows; shared executable cache "
+          f"hits={cache['hits']} misses={cache['misses']} "
+          f"evictions={cache['evictions']}")
     assert n_served == args.queries
 
 
@@ -85,6 +99,9 @@ def main(argv=None):
     ap.add_argument("--partitions", type=int, default=8)
     ap.add_argument("--policy", choices=["latency", "throughput", "adaptive"],
                     default="latency")
+    ap.add_argument("--collection", default="default",
+                    help="collection name the corpus is registered under "
+                         "in the api.Router (the serving front)")
     ap.add_argument("--fqsd", action="store_true",
                     help="deprecated alias for --policy throughput")
     ap.add_argument("--burst-size", type=int, default=64)

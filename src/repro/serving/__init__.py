@@ -1,4 +1,10 @@
-"""Online serving: adaptive FD-SQ/FQ-SD retrieval scheduler and LM decode."""
+"""Online serving: adaptive FD-SQ/FQ-SD retrieval scheduler and LM decode.
+
+The retrieval scheduler speaks the request-first API (``repro.api``):
+streams of ``SearchRequest`` in, per-request ``SearchResult`` out.
+``Request``/``Result`` are deprecated compatibility names.
+"""
+from repro.api.types import SearchRequest, SearchResult
 from repro.serving.retrieval import (
     AdaptiveScheduler,
     Request,
@@ -9,6 +15,8 @@ from repro.serving.retrieval import (
 from repro.serving.lm import DecodeServer
 
 __all__ = [
-    "AdaptiveScheduler", "RetrievalServer", "Request", "Result",
+    "AdaptiveScheduler", "RetrievalServer",
+    "SearchRequest", "SearchResult",
+    "Request", "Result",
     "DecodeServer", "bursty_requests",
 ]

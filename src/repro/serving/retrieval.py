@@ -12,11 +12,22 @@ the engine's planner:
                                scan, 4x less memory traffic, certified
                                exact rescore) when the engine has one
 
+The scheduler speaks the request-first API (``repro.api``): it consumes
+:class:`SearchRequest` objects and yields per-request
+:class:`SearchResult` objects — the same types ``ExactKNN.search`` takes
+and returns — so routing policy, tier choice, and deadline budget all read
+from one object. Per-request pins are honored: an explicit ``mode_hint``
+overrides the policy decision, an explicit ``tier`` overrides the
+bandwidth hook, and per-request ``k``/``metric``/``filter_mask`` group
+batches by compatibility (a dispatch never mixes options that would plan
+differently).
+
 The tier decision is the *bandwidth-aware policy hook* (:meth:`choose_tier`):
 the scan is memory-bandwidth-bound, so at sufficient batch depth the
 dominant cost is bytes moved per dataset pass, and the int8 tier moves a
 quarter of them. Subclasses can override the hook with measured-GB/s
-policies; stats() reports bytes scanned per tier so the trade is visible.
+policies; stats() reports tier, certified fraction, and bytes scanned for
+every served plan so the trade is visible uniformly.
 
 Because the executor layer caches compiled executables per plan (see
 ``repro.core.executors``), flipping between the two logical configurations
@@ -29,45 +40,48 @@ arrival time, one scheduling decision per dispatch, real measured service
 times. A real cluster fronts this with an RPC layer, but admission,
 scheduling, deadline accounting, and the engine calls are exactly these.
 
+Multi-collection serving goes through ``repro.api.Router``: construct the
+scheduler with ``router=`` + ``collection=`` and every dispatch routes
+through ``Router.search`` (shared executable cache, per-collection stats).
+
 :class:`RetrievalServer` (the previous FD-SQ-only micro-batching server)
 remains as the latency-policy specialization with its historical
-window/max-batch semantics.
+window/max-batch semantics. The old ``serving.Request``/``Result`` pair is
+deprecated: ``Request(...)`` builds a SearchRequest, ``Result`` *is*
+SearchResult.
 """
 from __future__ import annotations
 
-import dataclasses
 import time
+import warnings
 from collections import deque
 from typing import Iterable, Iterator, Literal
 
 import numpy as np
 
+from repro.api.types import SearchRequest, SearchResult
 from repro.core.engine import ExactKNN
 from repro.core.partition import next_pow2
+from repro.core.topk import TopK
 
 Policy = Literal["latency", "throughput", "adaptive"]
 
-
-@dataclasses.dataclass
-class Request:
-    rid: int
-    vector: np.ndarray
-    arrival_s: float = 0.0
-    deadline_ms: float | None = None
+#: Deprecated alias — the serving layer produces plain SearchResults.
+Result = SearchResult
 
 
-@dataclasses.dataclass
-class Result:
-    rid: int
-    indices: np.ndarray
-    scores: np.ndarray
-    latency_ms: float
-    batched: int  # how many requests shared the execution
-    mode: str = "fdsq"  # logical configuration that served it
-    executor: str = ""  # physical executor the plan selected
-    exact: bool = True  # int8 tier: the per-query exactness certificate
-    #                     (results are exact regardless — uncertified rows
-    #                     are recomputed in f32 by the executor)
+def Request(rid: int, vector, arrival_s: float = 0.0,
+            deadline_ms: float | None = None) -> SearchRequest:
+    """Deprecated constructor for the scheduler's old private request type;
+    builds the equivalent :class:`repro.api.SearchRequest`."""
+    warnings.warn(
+        "repro.serving.Request is deprecated; construct "
+        "repro.api.SearchRequest(queries=vector, rid=..., arrival_s=..., "
+        "deadline_ms=...) directly",
+        DeprecationWarning, stacklevel=2,
+    )
+    return SearchRequest(queries=vector, rid=rid, arrival_s=arrival_s,
+                         deadline_ms=deadline_ms)
 
 
 def bursty_requests(
@@ -76,31 +90,33 @@ def bursty_requests(
     trickle: int = 8,
     burst_gap_s: float = 0.25,
     trickle_gap_s: float = 0.02,
+    **request_options,
 ):
-    """Deterministic bursty arrival trace over `vectors` (one Request per
-    row): a dense burst (all requests stamped with one arrival time), then
-    `trickle` sparse arrivals, repeated — the workload shape the adaptive
-    policy exists for."""
+    """Deterministic bursty arrival trace over `vectors` (one SearchRequest
+    per row): a dense burst (all requests stamped with one arrival time),
+    then `trickle` sparse arrivals, repeated — the workload shape the
+    adaptive policy exists for. Extra kwargs (k, metric, tier, deadline_ms,
+    ...) are stamped onto every request."""
     if burst_size < 1 and trickle < 1:
         raise ValueError("burst_size and trickle cannot both be < 1")
     m = len(vectors)
     t, i = 0.0, 0
     while i < m:
         for _ in range(min(burst_size, m - i)):
-            yield Request(i, vectors[i], arrival_s=t)
+            yield SearchRequest(queries=vectors[i], rid=i, arrival_s=t,
+                                **request_options)
             i += 1
         t += burst_gap_s
         for _ in range(min(trickle, m - i)):
-            yield Request(i, vectors[i], arrival_s=t)
+            yield SearchRequest(queries=vectors[i], rid=i, arrival_s=t,
+                                **request_options)
             i += 1
             t += trickle_gap_s
         t += trickle_gap_s
 
 
-
-
 class AdaptiveScheduler:
-    """Route batches through FD-SQ or FQ-SD plans by queue state.
+    """Route batches of SearchRequests through FD-SQ or FQ-SD plans.
 
     policy:
         "latency"     every dispatch is an FD-SQ plan (micro-batches of at
@@ -111,6 +127,13 @@ class AdaptiveScheduler:
                       deep AND no pending request's remaining deadline
                       budget is tighter than the expected FQ-SD service
                       time x `deadline_slack`; FD-SQ otherwise.
+
+    Per-request pins always win: ``mode_hint`` overrides the policy for its
+    dispatch, ``tier`` overrides :meth:`choose_tier`.
+
+    Construct with either ``engine=...`` (single collection) or
+    ``router=...`` + ``collection=...`` (multi-collection; dispatches go
+    through ``Router.search`` so per-collection stats accumulate).
     """
 
     #: dispatch labels stats are bucketed by ("fqsd-int8" = the FQ-SD
@@ -119,19 +142,29 @@ class AdaptiveScheduler:
 
     def __init__(
         self,
-        engine: ExactKNN,
+        engine: ExactKNN | None = None,
         policy: Policy = "adaptive",
         fdsq_max_batch: int = 4,
         fqsd_min_depth: int = 32,
         max_batch: int = 256,
         deadline_slack: float = 2.0,
         int8_min_depth: int | None = None,
+        router=None,
+        collection: str | None = None,
     ):
+        if router is not None:
+            if collection is None:
+                raise ValueError("router serving requires a collection name")
+            engine = router.engine(collection)
+        elif engine is None:
+            raise ValueError("pass an engine, or router= with collection=")
         if not engine.is_fitted:
             raise ValueError("engine must be fit() before serving")
         if policy not in ("latency", "throughput", "adaptive"):
             raise ValueError(f"unknown policy {policy!r}")
         self.engine = engine
+        self.router = router
+        self.collection = collection
         self.policy: Policy = policy
         self.fdsq_max_batch = int(fdsq_max_batch)
         self.fqsd_min_depth = int(fqsd_min_depth)
@@ -147,10 +180,16 @@ class AdaptiveScheduler:
         self._switches = 0
         self._last_mode: str | None = None
         self._executors: dict[str, set] = {m: set() for m in self.MODES}
+        # uniform per-dispatch-label accounting: every served request has a
+        # tier, a certificate status, and a bytes-scanned cost — not just
+        # the int8 path (tier/certified used to be int8-only)
+        self._tiers: dict[str, set] = {m: set() for m in self.MODES}
+        self._mode_bytes: dict[str, int] = {m: 0 for m in self.MODES}
+        self._cert: dict[str, dict] = {m: {"total": 0, "true": 0}
+                                       for m in self.MODES}
         self._bytes_scanned: dict[str, int] = {"f32": 0, "int8": 0}
-        self._certified = {"total": 0, "true": 0}
         # fused-kernel pruning skip rates: running sum + count (O(1) memory
-        # for long-lived servers, like the _certified counters)
+        # for long-lived servers, like the certificate counters)
         self._skip_rate_sum = 0.0
         self._skip_rate_n = 0
 
@@ -159,7 +198,7 @@ class AdaptiveScheduler:
         est = self._ema_s[mode]
         return est if est is not None else 1e-3
 
-    def choose_mode(self, pending: "deque[Request]", clock_s: float) -> str:
+    def choose_mode(self, pending: "deque[SearchRequest]", clock_s: float) -> str:
         """One scheduling decision — pure function of queue state + policy."""
         if self.policy == "latency":
             return "fdsq"
@@ -183,7 +222,8 @@ class AdaptiveScheduler:
         memory-bound and the int8 tier (1 B/element, 4x less traffic than
         f32, certified exact rescore) wins. Override with a measured-GB/s
         policy for smarter routing; `stats()["bytes_scanned"]` exposes the
-        traffic either way.
+        traffic either way. Requests with an explicit ``tier`` never reach
+        this hook — per-request pins always win.
         """
         if (
             mode == "fqsd"
@@ -194,10 +234,30 @@ class AdaptiveScheduler:
             return "int8"
         return "f32"
 
+    @staticmethod
+    def _signature(r: SearchRequest) -> tuple:
+        """Batch-compatibility key: a dispatch never mixes requests whose
+        options would plan differently (k, metric, tier/mode pins) or whose
+        filter masks differ (masks fold into the scanned norms)."""
+        return (
+            r.k, r.metric, r.tier,
+            r.mode_hint if r.mode_hint != "auto" else None,
+            id(r.filter_mask) if r.filter_mask is not None else None,
+        )
+
     # ------------------------------------------------------------ execution
+    def _search(self, request: SearchRequest) -> SearchResult:
+        if self.router is not None:
+            return self.router.search(self.collection, request)
+        return self.engine.search(request)
+
     def _execute(
-        self, reqs: list[Request], mode: str, clock_s: float | None
-    ) -> tuple[list[Result], float]:
+        self,
+        reqs: list[SearchRequest],
+        mode: str,
+        clock_s: float | None,
+        tier: str = "f32",
+    ) -> tuple[list[SearchResult], float]:
         """Run one batch through the chosen plan; returns results + svc time.
 
         `clock_s=None` means wall-clock mode (no simulated arrival times):
@@ -211,47 +271,64 @@ class AdaptiveScheduler:
         no-reflashing property the scheduler exists to exploit.
         """
         t0 = time.perf_counter()
-        q = np.stack([r.vector for r in reqs])
+        rows = []
+        for r in reqs:
+            v = np.asarray(r.queries, dtype=np.float32)
+            if v.ndim == 2 and v.shape[0] == 1:
+                v = v[0]
+            if v.ndim != 1:
+                raise ValueError(
+                    "the scheduler serves single-query requests (batching is "
+                    "its job); send one SearchRequest per query, got queries "
+                    f"of shape {v.shape}"
+                )
+            rows.append(v)
+        q = np.stack(rows)
         b = len(reqs)
         b_pad = next_pow2(b)
         if b_pad > b:  # zero rows: row-independent scoring, results sliced off
             q = np.concatenate([q, np.zeros((b_pad - b, q.shape[1]), q.dtype)])
-        if mode == "fdsq":
-            out = self.engine.query(q)
-        elif mode == "fqsd-int8":
-            out = self.engine.query_batch_int8(q)
-        else:
-            out = self.engine.query_batch(q)
-        scores = np.asarray(out.scores)[:b]  # forces execution (device sync)
-        indices = np.asarray(out.indices)[:b]
+        head = reqs[0]
+        label = "fqsd-int8" if tier == "int8" else mode
+        batch = self._search(SearchRequest(
+            queries=q, k=head.k, metric=head.metric,
+            tier="int8" if tier == "int8" else "f32",
+            mode_hint="fqsd" if tier == "int8" else mode,
+            filter_mask=head.filter_mask,
+        ))
+        scores = np.asarray(batch.scores)[:b]  # forces execution (device sync)
+        indices = np.asarray(batch.indices)[:b]
         dt_s = time.perf_counter() - t0
 
-        plan = self.engine.plans[-1]
-        self._executors[mode].add(plan.executor)
+        plan = batch.plan
+        self._executors[label].add(plan.executor)
         # dataset bytes one scan of this plan moved (the bandwidth account
-        # choose_tier optimizes): rows x dim x bytes/element for the tier
-        per_elem = 1 if plan.tier == "int8" else 4
-        self._bytes_scanned[plan.tier if plan.tier == "int8" else "f32"] += (
-            plan.padded_rows * plan.padded_dim * per_elem
+        # choose_tier optimizes), reported per tier AND per dispatch label
+        self._bytes_scanned[batch.tier if batch.tier == "int8" else "f32"] += (
+            batch.stats["bytes_scanned"]
         )
-        if mode == "fqsd-int8":
-            cert = np.asarray(self.engine.last_certificate)[:b]
-            self._certified["total"] += b
-            self._certified["true"] += int(cert.sum())
+        self._tiers[label].add(batch.tier)
+        self._mode_bytes[label] += batch.stats["bytes_scanned"]
+        if batch.tier == "int8":
+            cert = np.asarray(batch.certified)[:b]
+            n_true = int(cert.sum())
         else:
-            cert = None
-        ks = self.engine.last_kernel_stats
+            cert = None  # exact path: trivially certified
+            n_true = b
+        self._cert[label]["total"] += b
+        self._cert[label]["true"] += n_true
+        ks = batch.kernel_stats
         if ks is not None and "prune_skip_rate" in ks:
             # float() is a free sync here: results were materialized above
             self._skip_rate_sum += float(ks["prune_skip_rate"])
             self._skip_rate_n += 1
-        if self._last_mode is not None and mode != self._last_mode:
+        if self._last_mode is not None and label != self._last_mode:
             self._switches += 1
-        self._last_mode = mode
-        ema = self._ema_s[mode]
-        self._ema_s[mode] = dt_s if ema is None else 0.7 * ema + 0.3 * dt_s
-        self._svc_s[mode] += dt_s
-        self._count[mode] += len(reqs)
+        self._last_mode = label
+        ema = self._ema_s[label]
+        self._ema_s[label] = dt_s if ema is None else 0.7 * ema + 0.3 * dt_s
+        self._svc_s[label] += dt_s
+        self._count[label] += len(reqs)
 
         results = []
         for i, r in enumerate(reqs):
@@ -261,63 +338,91 @@ class AdaptiveScheduler:
                 lat_ms = (clock_s + dt_s - r.arrival_s) * 1e3  # queueing + service
             if r.deadline_ms is not None and lat_ms > r.deadline_ms:
                 self.deadline_misses += 1
-            self._lat_ms[mode].append(lat_ms)
-            results.append(
-                Result(r.rid, indices[i], scores[i], lat_ms, len(reqs),
-                       mode=mode, executor=plan.executor,
-                       exact=bool(cert[i]) if cert is not None else True)
-            )
+            self._lat_ms[label].append(lat_ms)
+            results.append(SearchResult(
+                topk=TopK(scores[i], indices[i]),
+                plan=plan,
+                tier=batch.tier,
+                certified=bool(cert[i]) if cert is not None else True,
+                kernel_stats=batch.kernel_stats,
+                stats={"latency_ms": lat_ms, "batched": len(reqs),
+                       "mode": label, "deadline_ms": r.deadline_ms},
+                rid=r.rid,
+            ))
         self.served += len(reqs)
         return results, dt_s
 
     # -------------------------------------------------------------- serving
-    def serve(self, requests: Iterable[Request]) -> Iterator[Result]:
+    def serve(self, requests: Iterable[SearchRequest]) -> Iterator[SearchResult]:
         """Discrete-event loop over an arrival stream (sorted by arrival_s).
 
         The clock starts at the first arrival, advances by measured service
         time per dispatch, and jumps forward over idle gaps. Each iteration
-        admits everything that has arrived, makes ONE mode decision, and
-        dispatches one batch.
+        admits everything that has arrived, makes ONE mode decision
+        (per-request pins override it), and dispatches one batch of
+        option-compatible requests.
         """
         stream = iter(requests)
-        pending: deque[Request] = deque()
+        pending: deque[SearchRequest] = deque()
         nxt = next(stream, None)
         clock = nxt.arrival_s if nxt is not None else 0.0
         while nxt is not None or pending:
             while nxt is not None and nxt.arrival_s <= clock + 1e-12:
+                if nxt.tier == "int8" and nxt.mode_hint == "fdsq":
+                    # same contract as ExactKNN.search: refuse the invalid
+                    # pin combination instead of silently rewriting it
+                    raise ValueError(
+                        "tier='int8' is a throughput (FQ-SD) tier and cannot "
+                        f"serve mode_hint='fdsq' (request rid={nxt.rid})"
+                    )
                 pending.append(nxt)
                 nxt = next(stream, None)
             if not pending:
                 clock = nxt.arrival_s  # idle until the next arrival
                 continue
             mode = self.choose_mode(pending, clock)
-            if self.choose_tier(mode, len(pending)) == "int8":
-                mode = "fqsd-int8"
+            head = pending[0]
+            if head.mode_hint != "auto":
+                mode = head.mode_hint  # per-request pin beats policy
+            tier = head.tier
+            if tier == "auto":
+                tier = self.choose_tier(mode, len(pending))
+            if tier == "int8":
+                mode = "fqsd"
             take = self.fdsq_max_batch if mode == "fdsq" else self.max_batch
-            reqs = [pending.popleft() for _ in range(min(take, len(pending)))]
-            results, dt_s = self._execute(reqs, mode, clock)
+            sig = self._signature(head)
+            reqs = [pending.popleft()]
+            while (pending and len(reqs) < take
+                   and self._signature(pending[0]) == sig):
+                reqs.append(pending.popleft())
+            results, dt_s = self._execute(reqs, mode, clock, tier=tier)
             clock += dt_s
             yield from results
 
     # ---------------------------------------------------------------- stats
     def stats(self) -> dict:
+        """Uniform per-plan accounting: every served dispatch label reports
+        count, latency percentiles, qps, executors, tier(s), certified
+        fraction, and bytes scanned — the f32 paths included (exact scans
+        are trivially certified)."""
         per_plan = {}
         for mode in self.MODES:
             lat = np.asarray(self._lat_ms[mode])
             if len(lat) == 0:
                 continue
             svc = self._svc_s[mode]
+            cert = self._cert[mode]
             per_plan[mode] = {
                 "count": int(self._count[mode]),
                 "p50_ms": float(np.percentile(lat, 50)),
                 "p99_ms": float(np.percentile(lat, 99)),
                 "qps": float(self._count[mode] / svc) if svc > 0 else float("inf"),
                 "executors": sorted(self._executors[mode]),
+                "tier": sorted(self._tiers[mode]),
+                "certified_exact": (cert["true"] / cert["total"]
+                                    if cert["total"] else 1.0),
+                "bytes_scanned": int(self._mode_bytes[mode]),
             }
-        if self._certified["total"]:
-            per_plan["fqsd-int8"]["certified_exact"] = (
-                self._certified["true"] / self._certified["total"]
-            )
         out = {
             "served": self.served,
             "deadline_misses": self.deadline_misses,
@@ -326,6 +431,8 @@ class AdaptiveScheduler:
             "per_plan": per_plan,
             "bytes_scanned": dict(self._bytes_scanned),
         }
+        if self.collection is not None:
+            out["collection"] = self.collection
         if self._skip_rate_n:  # fused Pallas plans only
             out["prune_skip_rate"] = self._skip_rate_sum / self._skip_rate_n
         return out
@@ -352,11 +459,37 @@ class RetrievalServer(AdaptiveScheduler):
         )
         self.batch_window_s = batch_window_s
 
-    def serve(self, requests: Iterable[Request]) -> Iterator[Result]:
+    def _flush(self, pending: list[SearchRequest]) -> list[SearchResult]:
+        """Flush one window in option-compatible runs: the legacy server
+        predates per-request options, so a window may now mix requests
+        whose k/metric/tier/mask would plan differently — each run
+        dispatches separately rather than silently taking the head's."""
+        results: list[SearchResult] = []
+        i = 0
+        while i < len(pending):
+            sig = self._signature(pending[i])
+            j = i + 1
+            while j < len(pending) and self._signature(pending[j]) == sig:
+                j += 1
+            batch, _ = self._execute(pending[i:j], "fdsq", clock_s=None)
+            results.extend(batch)
+            i = j
+        return results
+
+    def serve(self, requests: Iterable[SearchRequest]) -> Iterator[SearchResult]:
         """Consume an arrival stream; flush on window expiry or max_batch."""
-        pending: list[Request] = []
+        pending: list[SearchRequest] = []
         window_open = None
         for r in requests:
+            if r.tier == "int8" or r.mode_hint == "fqsd":
+                # this server's contract IS the FD-SQ/f32 latency path; a
+                # request pinning anything else must fail loudly, not be
+                # silently served on the wrong tier/plan
+                raise ValueError(
+                    "RetrievalServer serves the FD-SQ f32 latency path only; "
+                    f"request rid={r.rid} pins tier={r.tier!r} / "
+                    f"mode_hint={r.mode_hint!r} — use AdaptiveScheduler"
+                )
             pending.append(r)
             window_open = window_open or time.perf_counter()
             window_expired = (
@@ -364,9 +497,7 @@ class RetrievalServer(AdaptiveScheduler):
                 or (time.perf_counter() - window_open) >= self.batch_window_s
             )
             if len(pending) >= self.max_batch or window_expired:
-                results, _ = self._execute(pending, "fdsq", clock_s=None)
-                yield from results
+                yield from self._flush(pending)
                 pending, window_open = [], None
         if pending:
-            results, _ = self._execute(pending, "fdsq", clock_s=None)
-            yield from results
+            yield from self._flush(pending)

@@ -1,0 +1,92 @@
+"""Public-API surface snapshot (ISSUE 4 satellite).
+
+``repro.api`` is the contract the serving/sharding/async PRs build on:
+surface drift (a renamed field, a silently-removed export, a shim that
+stops warning) must fail tier-1 here instead of landing unnoticed.
+"""
+import dataclasses
+import warnings
+
+import numpy as np
+import pytest
+
+import repro.api as api
+from repro.api import SearchRequest, SearchResult
+from repro.core import ExactKNN
+
+
+#: The exported surface. Changing this tuple IS an API change: update the
+#: docs/api.md migration table and the downstream callers in the same PR.
+API_ALL = ("SearchRequest", "SearchResult", "Router")
+
+SEARCH_REQUEST_FIELDS = (
+    "queries", "k", "metric", "tier", "mode_hint", "deadline_ms",
+    "filter_mask", "rid", "arrival_s",
+)
+
+SEARCH_RESULT_FIELDS = (
+    "topk", "plan", "tier", "certified", "kernel_stats", "stats", "rid",
+)
+
+
+def test_api_all_snapshot():
+    assert tuple(api.__all__) == API_ALL
+    for name in API_ALL:
+        assert hasattr(api, name)
+
+
+def test_request_and_result_field_snapshot():
+    assert tuple(f.name for f in dataclasses.fields(SearchRequest)) == \
+        SEARCH_REQUEST_FIELDS
+    assert tuple(f.name for f in dataclasses.fields(SearchResult)) == \
+        SEARCH_RESULT_FIELDS
+    # requests/results are frozen facts, not mutable builders
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        SearchRequest(queries=np.zeros(4)).k = 3
+
+
+def test_request_defaults_snapshot():
+    r = SearchRequest(queries=np.zeros(4, np.float32))
+    assert (r.k, r.metric, r.tier, r.mode_hint) == (None, None, "auto", "auto")
+    assert (r.deadline_ms, r.filter_mask, r.rid, r.arrival_s) == \
+        (None, None, None, 0.0)
+
+
+class TestShimDeprecations:
+    """Every legacy entry point must warn AND keep working (the warning is
+    the migration nudge; behavior parity is covered in test_search_api)."""
+
+    @pytest.fixture
+    def engine(self):
+        rng = np.random.default_rng(0)
+        x = rng.standard_normal((640, 16)).astype(np.float32)
+        return ExactKNN(k=3, n_partitions=2).fit(x).enable_int8()
+
+    @pytest.mark.parametrize("call", [
+        lambda e, q: e.query(q[0]),
+        lambda e, q: e.query_batch(q),
+        lambda e, q: e.query_batch_int8(q),
+        lambda e, q: list(e.query_stream([q[0]])),
+        lambda e, q: e.search_streamed(q, np.zeros((256, 16), np.float32),
+                                       rows_per_partition=128),
+    ])
+    def test_engine_shims_warn(self, engine, call):
+        q = np.zeros((5, 16), np.float32)
+        with pytest.warns(DeprecationWarning, match="deprecated"):
+            call(engine, q)
+
+    def test_serving_request_shim_warns(self):
+        from repro.serving import Request, Result
+
+        with pytest.warns(DeprecationWarning, match="SearchRequest"):
+            r = Request(1, np.zeros(8, np.float32), arrival_s=2.0)
+        assert isinstance(r, SearchRequest)
+        assert (r.rid, r.arrival_s) == (1, 2.0)
+        assert Result is SearchResult  # old name, same type
+
+    def test_search_itself_does_not_warn(self, engine):
+        q = np.zeros((5, 16), np.float32)
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", DeprecationWarning)
+            engine.search(SearchRequest(queries=q))
+            engine.search(SearchRequest(queries=q, tier="int8"))

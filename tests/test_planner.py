@@ -96,6 +96,50 @@ class TestPlan:
         assert p.n_partitions > 0 and meta.padded_rows % p.n_partitions == 0
 
 
+class TestPlanKwargValidation:
+    """Regression (ISSUE 4 satellite): plan()/plan_for() must reject
+    unknown kwargs loudly, naming the offending key — a typo'd option must
+    fail the call, not silently plan something else."""
+
+    def test_plan_rejects_unknown_kwargs_with_key_name(self):
+        with pytest.raises(TypeError, match="stream_rowz"):
+            plan((8, 128), META, CFG, "fqsd", stream_rowz=512)
+
+    def test_plan_names_every_offending_key(self):
+        with pytest.raises(TypeError, match="(?s)chunk.*tierz"):
+            plan((8, 128), META, CFG, "fqsd", tierz="int8", chunk=64)
+
+    def test_plan_for_rejects_unknown_kwargs(self, rng):
+        x = rng.standard_normal((300, 16)).astype(np.float32)
+        eng = ExactKNN(k=3).fit(x)
+        with pytest.raises(TypeError, match="deadline"):
+            eng.plan_for("fqsd", 8, deadline=5.0)
+
+
+class TestPerRequestPlanOverrides:
+    """The request-first API threads per-request k/metric through plan();
+    they land on the plan AND its cache_key, so per-request values hit
+    exactly the executables a dedicated engine would have compiled."""
+
+    def test_k_and_metric_override_config(self):
+        p = plan((8, 128), META, CFG, "fqsd", k=3, metric="ip")
+        assert (p.k, p.metric) == (3, "ip")
+        base = plan((8, 128), META, CFG, "fqsd")
+        assert (base.k, base.metric) == (10, "l2")
+        assert p.cache_key() != base.cache_key()
+
+    def test_override_equals_dedicated_config(self):
+        import dataclasses as dc
+
+        dedicated = plan((8, 128), META, dc.replace(CFG, k=3, metric="ip"),
+                         "fqsd")
+        assert plan((8, 128), META, CFG, "fqsd", k=3, metric="ip") == dedicated
+
+    def test_invalid_override_rejected(self):
+        with pytest.raises(ValueError, match="k must be >= 1"):
+            plan((8, 128), META, CFG, "fqsd", k=0)
+
+
 class TestLargestDivisor:
     @pytest.mark.parametrize("n,cap,want", [
         (16384, 3000, 2048),   # old loop would halve down to 1

@@ -1,0 +1,180 @@
+"""Multi-collection Router: named engines, one shared executable cache.
+
+Satellite of ISSUE 4: the executable cache is keyed by plan + shapes, not
+by collection, so identical-geometry collections share compiled
+executables, and interleaved mode switches + upserts across collections
+never recompile for seen shapes (the no-reflashing invariant, now at the
+multi-tenant level).
+"""
+import numpy as np
+import pytest
+
+from repro.api import Router, SearchRequest
+from repro.core import ExactKNN, cache_info, clear_executable_cache
+from repro.serving import AdaptiveScheduler, bursty_requests
+from repro.store import DatasetStore
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def _mk(rng, n=1280, d=32):
+    return rng.standard_normal((n, d)).astype(np.float32)
+
+
+class TestCollections:
+    def test_create_attach_drop(self, rng):
+        router = Router()
+        router.create("a", _mk(rng), k=5)
+        eng = ExactKNN(k=5).fit(_mk(rng))
+        router.attach("b", eng)
+        assert router.collections() == ("a", "b")
+        assert "a" in router and len(router) == 2
+        assert router.engine("b") is eng
+        router.drop("a")
+        assert router.collections() == ("b",)
+
+    def test_duplicate_and_unknown_names(self, rng):
+        router = Router()
+        router.create("a", _mk(rng), k=5)
+        with pytest.raises(ValueError, match="already exists"):
+            router.create("a", _mk(rng), k=5)
+        with pytest.raises(KeyError, match="unknown collection"):
+            router.search("zzz", SearchRequest(queries=np.zeros(32)))
+        with pytest.raises(ValueError, match="fitted"):
+            router.attach("c", ExactKNN(k=2))
+        with pytest.raises(ValueError):
+            router.create("d")  # neither vectors nor store
+
+    def test_store_backed_collection(self, rng, tmp_path):
+        x = _mk(rng)
+        store = DatasetStore.from_array(x, rows_per_shard=512,
+                                        directory=str(tmp_path))
+        router = Router()
+        router.create("ooc", store=store, k=4, device_budget_bytes=4096)
+        res = router.search("ooc", SearchRequest(queries=x[7]))
+        assert res.plan.executor == "fqsd-mmap-streamed"
+        assert int(res.indices[0, 0]) == 7
+
+    def test_per_collection_stats(self, rng):
+        router = Router()
+        router.create("a", _mk(rng), k=5)
+        router.create("b", _mk(rng), k=5)
+        q = _mk(rng, n=8)
+        router.search("a", SearchRequest(queries=q, mode_hint="fqsd"))
+        router.search("a", SearchRequest(queries=q[0]))
+        router.search("b", SearchRequest(queries=q, mode_hint="fqsd"))
+        st = router.stats()
+        assert st["collections"]["a"]["requests"] == 2
+        assert st["collections"]["a"]["queries"] == 9
+        assert st["collections"]["b"]["requests"] == 1
+        assert st["collections"]["a"]["bytes_scanned"]["f32"] > 0
+        assert st["collections"]["a"]["tiers"] == ["f32"]
+        assert st["executable_cache"] == cache_info()
+
+
+class TestSharedExecutableCache:
+    def test_identical_shapes_share_cache_entries(self, rng):
+        """Two collections with identical geometry: the second collection's
+        first query is a pure cache hit — zero additional compiles."""
+        router = Router()
+        router.create("a", _mk(rng), k=5)
+        router.create("b", _mk(rng), k=5)
+        q = _mk(rng, n=8)
+        clear_executable_cache()
+        router.search("a", SearchRequest(queries=q, mode_hint="fqsd"))
+        after_a = cache_info()
+        assert after_a["misses"] == 1
+        router.search("b", SearchRequest(queries=q, mode_hint="fqsd"))
+        after_b = cache_info()
+        assert after_b["misses"] == after_a["misses"]  # shared entry
+        assert after_b["hits"] == after_a["hits"] + 1
+
+    def test_interleaved_mode_switches_and_upserts_never_recompile(self, rng):
+        """Interleave FD-SQ/FQ-SD flips AND store mutations across two
+        collections: after the warmup pass, zero recompiles (mutations are
+        runtime data; mode switches reuse per-plan executables)."""
+        router = Router()
+        xa, xb = _mk(rng), _mk(rng)
+        router.create("a", xa, k=5)
+        router.create("b", xb, k=5)
+        q = _mk(rng, n=8)
+        delta = _mk(rng, n=3)
+
+        def traffic():
+            for name in ("a", "b"):
+                router.search(name, SearchRequest(queries=q, mode_hint="fqsd"))
+                router.search(name, SearchRequest(queries=q[0],
+                                                  mode_hint="fdsq"))
+
+        clear_executable_cache()
+        traffic()
+        ids = router.upsert("a", delta)  # warm the delta-merge step too
+        router.upsert("b", delta)
+        traffic()
+        warm = cache_info()
+        assert warm["misses"] >= 3  # fdsq + fqsd + delta-merge step
+
+        # interleaved switches + mutations on seen shapes: pure hits
+        for i in range(3):
+            traffic()
+            router.upsert("a", delta[i % 3])
+            router.delete("b", [int(ids[0]) + 0])  # ids exist in b too
+            traffic()
+            router.upsert("b", delta[i % 3])
+            ids = [int(ids[0]) + 1]
+        after = cache_info()
+        assert after["misses"] == warm["misses"]  # never recompiled
+        assert after["hits"] > warm["hits"]
+
+    def test_cross_collection_upsert_visibility(self, rng):
+        """Mutations stay collection-local and the delta-merge step is
+        shared: each collection sees only its own upserts."""
+        router = Router()
+        router.create("a", _mk(rng), k=3)
+        router.create("b", _mk(rng), k=3)
+        probe = _mk(rng, n=1)[0]
+        ids_a = router.upsert("a", probe)
+        res_a = router.search("a", SearchRequest(queries=probe))
+        res_b = router.search("b", SearchRequest(queries=probe))
+        assert int(res_a.indices[0, 0]) == int(ids_a[0])
+        assert float(res_b.scores[0, 0]) > float(res_a.scores[0, 0])
+
+    def test_cache_limit_constructor(self, rng):
+        from repro.core import set_executable_cache_limit
+
+        try:
+            router = Router(executable_cache_entries=7)
+            assert cache_info()["max_entries"] == 7
+        finally:
+            set_executable_cache_limit(256)  # restore the process default
+
+
+class TestRouterServing:
+    def test_scheduler_routes_through_router(self, rng):
+        """AdaptiveScheduler(router=..., collection=...) serves through
+        Router.search: per-collection stats accumulate and the stats dict
+        names the collection."""
+        router = Router()
+        x = _mk(rng, n=2048)
+        router.create("passages", x, k=5)
+        s = AdaptiveScheduler(policy="throughput", router=router,
+                              collection="passages")
+        results = list(s.serve(bursty_requests(x[:40], burst_size=40,
+                                               trickle=0)))
+        assert len(results) == 40
+        assert all(int(r.indices[0]) == r.rid for r in results)
+        assert s.stats()["collection"] == "passages"
+        rs = router.stats()["collections"]["passages"]
+        # router counts engine rows: the scheduler bucket-pads 40 -> 64
+        assert rs["requests"] >= 1 and rs["queries"] == 64
+
+    def test_scheduler_requires_collection_with_router(self, rng):
+        router = Router()
+        router.create("a", _mk(rng), k=5)
+        with pytest.raises(ValueError, match="collection"):
+            AdaptiveScheduler(router=router)
+        with pytest.raises(ValueError):
+            AdaptiveScheduler()  # neither engine nor router

@@ -197,6 +197,130 @@ class TestInt8TierRouting:
         assert {r.mode for r in results} == {"fqsd"}  # no opt-in, no int8
 
 
+class TestUniformStats:
+    def test_f32_paths_report_tier_certified_and_bytes(self, engine):
+        """Satellite (ISSUE 4): tier, certified fraction, and bytes scanned
+        are reported for EVERY served plan, not just the int8 path."""
+        rng = np.random.default_rng(30)
+        s = AdaptiveScheduler(engine, policy="adaptive", fqsd_min_depth=32)
+        list(s.serve(bursty_trace(rng)))
+        st = s.stats()
+        assert set(st["per_plan"]) == {"fdsq", "fqsd"}
+        for mode, r in st["per_plan"].items():
+            assert r["tier"] == ["f32"]
+            assert r["certified_exact"] == 1.0  # exact paths: trivially so
+            assert r["bytes_scanned"] > 0
+        # per-mode bytes reconcile with the per-tier account
+        total = sum(r["bytes_scanned"] for r in st["per_plan"].values())
+        assert total == st["bytes_scanned"]["f32"]
+        assert st["bytes_scanned"]["int8"] == 0
+
+    def test_int8_path_reports_same_keys(self, engine):
+        engine.enable_int8()
+        rng = np.random.default_rng(31)
+        s = AdaptiveScheduler(engine, policy="throughput", int8_min_depth=8)
+        list(s.serve(bursty_trace(rng, burst=24, trickle=0)))
+        r = s.stats()["per_plan"]["fqsd-int8"]
+        assert r["tier"] == ["int8"]
+        assert 0.0 <= r["certified_exact"] <= 1.0
+        assert r["bytes_scanned"] == s.stats()["bytes_scanned"]["int8"] > 0
+
+
+class TestPerRequestPins:
+    def test_mode_hint_pin_beats_policy(self, engine):
+        """A deep backlog would go FQ-SD, but requests pinning
+        mode_hint='fdsq' must be served FD-SQ."""
+        from repro.api import SearchRequest
+
+        rng = np.random.default_rng(32)
+        reqs = [SearchRequest(queries=_vec(rng), rid=i, arrival_s=0.0,
+                              mode_hint="fdsq") for i in range(40)]
+        s = AdaptiveScheduler(engine, policy="throughput")
+        results = list(s.serve(iter(reqs)))
+        assert {r.mode for r in results} == {"fdsq"}
+        assert all(r.batched <= s.fdsq_max_batch for r in results)
+
+    def test_tier_pin_forces_int8(self, engine):
+        """tier='int8' on the request serves the quantized tier even though
+        the bandwidth hook is disabled (int8_min_depth=None)."""
+        from repro.api import SearchRequest
+
+        engine.enable_int8()
+        rng = np.random.default_rng(33)
+        reqs = [SearchRequest(queries=_vec(rng), rid=i, arrival_s=0.0,
+                              tier="int8") for i in range(16)]
+        s = AdaptiveScheduler(engine, policy="throughput")
+        results = list(s.serve(iter(reqs)))
+        assert {r.mode for r in results} == {"fqsd-int8"}
+        assert {r.tier for r in results} == {"int8"}
+
+    def test_conflicting_pins_rejected(self, engine):
+        """tier='int8' + mode_hint='fdsq' is invalid in ExactKNN.search;
+        the scheduler must refuse it too, not silently rewrite the pin."""
+        from repro.api import SearchRequest
+
+        engine.enable_int8()
+        bad = SearchRequest(queries=np.zeros(32, np.float32), rid=0,
+                            tier="int8", mode_hint="fdsq")
+        s = AdaptiveScheduler(engine, policy="throughput")
+        with pytest.raises(ValueError, match="fdsq"):
+            list(s.serve(iter([bad])))
+
+    def test_multi_row_requests_rejected(self, engine):
+        """The scheduler stacks one row per request; a multi-row request
+        must fail loudly instead of being flattened into a garbage query."""
+        from repro.api import SearchRequest
+
+        bad = SearchRequest(queries=np.zeros((2, 32), np.float32), rid=0)
+        s = AdaptiveScheduler(engine, policy="throughput")
+        with pytest.raises(ValueError, match="single-query"):
+            list(s.serve(iter([bad])))
+
+    def test_retrieval_server_rejects_unservable_pins(self, engine):
+        """The legacy server IS the FD-SQ/f32 path; pins it cannot honor
+        (int8 tier, fqsd mode) must raise, not silently serve f32/fdsq."""
+        from repro.api import SearchRequest
+        from repro.serving import RetrievalServer
+
+        engine.enable_int8()
+        srv = RetrievalServer(engine, max_batch=1)
+        v = np.zeros(32, np.float32)
+        with pytest.raises(ValueError, match="AdaptiveScheduler"):
+            list(srv.serve(iter([SearchRequest(queries=v, tier="int8")])))
+        with pytest.raises(ValueError, match="AdaptiveScheduler"):
+            list(srv.serve(iter([SearchRequest(queries=v,
+                                               mode_hint="fqsd")])))
+
+    def test_retrieval_server_groups_mixed_options(self, engine):
+        """Legacy-server regression: a flush window mixing per-request k
+        must serve each request with ITS k, not the head's."""
+        from repro.api import SearchRequest
+        from repro.serving import RetrievalServer
+
+        rng = np.random.default_rng(35)
+        srv = RetrievalServer(engine, batch_window_s=60.0, max_batch=8)
+        reqs = [SearchRequest(queries=_vec(rng), rid=i, k=3 if i % 2 else 5)
+                for i in range(8)]
+        results = {r.rid: r for r in srv.serve(iter(reqs))}
+        assert len(results) == 8
+        for rid, r in results.items():
+            assert len(np.asarray(r.indices)) == (3 if rid % 2 else 5)
+
+    def test_mixed_options_never_batch_together(self, engine):
+        """Requests whose options would plan differently (here: k) are
+        dispatched in separate compatible batches."""
+        from repro.api import SearchRequest
+
+        rng = np.random.default_rng(34)
+        reqs = [SearchRequest(queries=_vec(rng), rid=i, arrival_s=0.0,
+                              k=3 if i % 2 else 5) for i in range(8)]
+        s = AdaptiveScheduler(engine, policy="throughput")
+        results = {r.rid: r for r in s.serve(iter(reqs))}
+        assert len(results) == 8
+        for rid, r in results.items():
+            assert len(np.asarray(r.indices)) == (3 if rid % 2 else 5)
+
+
 class TestNoReflashingUnderScheduling:
     def test_mode_switches_hit_executable_cache(self, engine):
         """Serving the same bursty trace twice: the second pass switches

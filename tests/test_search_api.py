@@ -1,0 +1,276 @@
+"""Request-first API: ExactKNN.search(SearchRequest) -> SearchResult.
+
+The tentpole invariants of the API redesign (ISSUE 4): one entry point
+normalizes every per-request option; per-request k/metric return results
+bit-identical to a fresh engine configured with those values; the filter
+mask rides the executors' +inf-norm masking path (runtime data, no
+recompiles); the legacy query_* zoo delegates to search and warns.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.api import SearchRequest, SearchResult
+from repro.core import ExactKNN, cache_info, clear_executable_cache
+from repro.store import DatasetStore
+
+
+@pytest.fixture
+def data():
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((1500, 48)).astype(np.float32)
+    q = rng.standard_normal((8, 48)).astype(np.float32)
+    return x, q
+
+
+@pytest.fixture
+def engine(data):
+    x, _ = data
+    return ExactKNN(k=7, n_partitions=4).fit(x)
+
+
+class TestSearchEntryPoint:
+    def test_returns_search_result(self, engine, data):
+        _, q = data
+        res = engine.search(SearchRequest(queries=q))
+        assert isinstance(res, SearchResult)
+        assert res.scores.shape == (8, 7)
+        assert res.plan.executor in ("fdsq-xla", "fqsd-xla")
+        assert res.tier == "f32" and res.exact
+        assert res.stats["bytes_scanned"] > 0
+        assert res.stats["k"] == 7 and res.stats["metric"] == "l2"
+
+    def test_mode_hint_auto_fdsq_for_micro_batches(self, engine, data):
+        _, q = data
+        one = engine.search(SearchRequest(queries=q[0]))
+        deep = engine.search(SearchRequest(queries=q))
+        assert one.plan.mode == "fdsq"
+        assert deep.plan.mode == "fqsd"
+
+    def test_mode_hint_pins_override_auto(self, engine, data):
+        _, q = data
+        assert engine.search(
+            SearchRequest(queries=q, mode_hint="fdsq")).plan.mode == "fdsq"
+        assert engine.search(
+            SearchRequest(queries=q[0], mode_hint="fqsd")).plan.mode == "fqsd"
+
+    def test_rejects_non_request(self, engine, data):
+        _, q = data
+        with pytest.raises(TypeError, match="SearchRequest"):
+            engine.search(q)
+
+    def test_request_validates_options(self):
+        with pytest.raises(ValueError):
+            SearchRequest(queries=np.zeros(4), k=0)
+        with pytest.raises(ValueError):
+            SearchRequest(queries=np.zeros(4), tier="int4")
+        with pytest.raises(ValueError):
+            SearchRequest(queries=np.zeros(4), mode_hint="streamed")
+
+    def test_rid_and_deadline_echoed(self, engine, data):
+        _, q = data
+        res = engine.search(
+            SearchRequest(queries=q[0], rid=42, deadline_ms=5.0))
+        assert res.rid == 42
+        assert res.stats["deadline_ms"] == 5.0
+
+
+class TestPerRequestOptions:
+    def test_k_bit_identical_to_fresh_engine(self, engine, data):
+        """Acceptance: per-request k != config k returns results
+        bit-identical to a fresh engine built with that k."""
+        x, q = data
+        got = engine.search(SearchRequest(queries=q, k=3, mode_hint="fqsd"))
+        fresh = ExactKNN(k=3, n_partitions=4).fit(x).search(
+            SearchRequest(queries=q, mode_hint="fqsd"))
+        np.testing.assert_array_equal(np.asarray(got.scores),
+                                      np.asarray(fresh.scores))
+        np.testing.assert_array_equal(np.asarray(got.indices),
+                                      np.asarray(fresh.indices))
+        assert got.plan == fresh.plan  # identical plan => identical executable
+
+    def test_k_bit_identical_fdsq_and_int8(self, data):
+        x, q = data
+        eng = ExactKNN(k=9, n_partitions=4).fit(x).enable_int8()
+        for req in (SearchRequest(queries=q[0], k=2, mode_hint="fdsq"),
+                    SearchRequest(queries=q, k=2, tier="int8")):
+            got = eng.search(req)
+            fresh = ExactKNN(k=2, n_partitions=4).fit(x)
+            if req.tier == "int8":
+                fresh.enable_int8()
+            ref = fresh.search(SearchRequest(
+                queries=req.queries, tier=req.tier, mode_hint=req.mode_hint))
+            np.testing.assert_array_equal(np.asarray(got.scores),
+                                          np.asarray(ref.scores))
+            np.testing.assert_array_equal(np.asarray(got.indices),
+                                          np.asarray(ref.indices))
+
+    def test_metric_override_matches_fresh_engine(self, engine, data):
+        x, q = data
+        got = engine.search(SearchRequest(queries=q, metric="ip",
+                                          mode_hint="fqsd"))
+        assert got.plan.metric == "ip"
+        ref = ExactKNN(k=7, n_partitions=4, metric="ip").fit(x).search(
+            SearchRequest(queries=q, mode_hint="fqsd"))
+        np.testing.assert_array_equal(np.asarray(got.scores),
+                                      np.asarray(ref.scores))
+
+    def test_bad_metric_rejected(self, engine, data):
+        _, q = data
+        with pytest.raises(ValueError):
+            engine.search(SearchRequest(queries=q, metric="hamming"))
+
+    def test_per_request_k_never_recompiles_on_repeat(self, engine, data):
+        _, q = data
+        clear_executable_cache()
+        engine.search(SearchRequest(queries=q, k=3, mode_hint="fqsd"))
+        misses = cache_info()["misses"]
+        engine.search(SearchRequest(queries=q, k=3, mode_hint="fqsd"))
+        engine.search(SearchRequest(queries=q, mode_hint="fqsd"))  # k=7: new key
+        info = cache_info()
+        assert info["misses"] == misses + 1
+        engine.search(SearchRequest(queries=q, k=3, mode_hint="fqsd"))
+        assert cache_info()["misses"] == misses + 1  # both keys warm now
+
+
+class TestInt8Tier:
+    def test_explicit_tier_serves_int8(self, data):
+        x, q = data
+        eng = ExactKNN(k=5).fit(x).enable_int8()
+        res = eng.search(SearchRequest(queries=q, tier="int8"))
+        assert res.plan.executor == "fqsd-int8" and res.tier == "int8"
+        ref = eng.search(SearchRequest(queries=q, mode_hint="fqsd"))
+        np.testing.assert_allclose(np.asarray(res.scores),
+                                   np.asarray(ref.scores), rtol=1e-4, atol=1e-3)
+        assert np.asarray(res.certified).shape[0] >= len(q)
+
+    def test_tier_requires_enable(self, engine, data):
+        _, q = data
+        with pytest.raises(RuntimeError, match="enable_int8"):
+            engine.search(SearchRequest(queries=q, tier="int8"))
+
+    def test_tier_rejects_non_l2(self, data):
+        x, q = data
+        eng = ExactKNN(k=5).fit(x).enable_int8()
+        with pytest.raises(ValueError, match="l2"):
+            eng.search(SearchRequest(queries=q, tier="int8", metric="ip"))
+
+    def test_tier_rejects_fdsq_pin(self, data):
+        x, q = data
+        eng = ExactKNN(k=5).fit(x).enable_int8()
+        with pytest.raises(ValueError, match="fdsq"):
+            eng.search(SearchRequest(queries=q, tier="int8", mode_hint="fdsq"))
+
+
+class TestFilterMask:
+    def test_banned_rows_never_returned(self, engine, data):
+        x, q = data
+        base = engine.search(SearchRequest(queries=q, mode_hint="fqsd"))
+        banned = set(np.asarray(base.indices)[:, 0].tolist())
+        mask = np.ones(engine.n_ids, dtype=bool)
+        mask[list(banned)] = False
+        res = engine.search(SearchRequest(queries=q, mode_hint="fqsd",
+                                          filter_mask=mask))
+        assert not (set(np.asarray(res.indices).ravel().tolist()) & banned)
+        # equivalent to brute force over the kept rows
+        keep_ids = np.flatnonzero(mask)
+        d = ((q[:, None, :] - x[None, keep_ids, :]) ** 2).sum(-1)
+        ref = keep_ids[np.argsort(d, axis=1)[:, :7]]
+        got_sets = [set(r) for r in np.asarray(res.indices).tolist()]
+        ref_sets = [set(r) for r in ref.tolist()]
+        assert got_sets == ref_sets
+
+    def test_mask_is_per_request(self, engine, data):
+        """The mask is runtime data: the next unmasked request sees
+        everything again and nothing recompiled."""
+        x, q = data
+        base = engine.search(SearchRequest(queries=q, mode_hint="fqsd"))
+        mask = np.ones(engine.n_ids, dtype=bool)
+        mask[np.asarray(base.indices)[0, 0]] = False
+        clear_executable_cache()
+        engine.search(SearchRequest(queries=q, mode_hint="fqsd"))
+        misses = cache_info()["misses"]
+        engine.search(SearchRequest(queries=q, mode_hint="fqsd",
+                                    filter_mask=mask))
+        again = engine.search(SearchRequest(queries=q, mode_hint="fqsd"))
+        assert cache_info()["misses"] == misses  # masking never recompiles
+        np.testing.assert_array_equal(np.asarray(again.indices),
+                                      np.asarray(base.indices))
+
+    def test_mask_covers_upserted_rows(self, engine, data):
+        x, q = data
+        ids = engine.upsert(q[0])  # q[0] becomes its own nearest neighbor
+        hit = engine.search(SearchRequest(queries=q[0]))
+        assert int(hit.indices[0, 0]) == int(ids[0])
+        mask = np.ones(engine.n_ids, dtype=bool)
+        mask[int(ids[0])] = False
+        res = engine.search(SearchRequest(queries=q[0], filter_mask=mask))
+        assert int(res.indices[0, 0]) != int(ids[0])
+
+    def test_mask_on_streamed_store(self, data):
+        x, q = data
+        store = DatasetStore.from_array(x, rows_per_shard=512)
+        eng = ExactKNN(k=7).fit_store(store, resident=False)
+        base = eng.search(SearchRequest(queries=q))
+        assert base.plan.executor == "fqsd-mmap-streamed"
+        mask = np.ones(eng.n_ids, dtype=bool)
+        top = np.asarray(base.indices)[:, 0]
+        mask[top] = False
+        res = eng.search(SearchRequest(queries=q, filter_mask=mask))
+        got = set(np.asarray(res.indices).ravel().tolist())
+        assert not (got & set(top.tolist()))
+
+    def test_wrong_length_rejected(self, engine, data):
+        _, q = data
+        with pytest.raises(ValueError, match="global id space"):
+            engine.search(SearchRequest(queries=q[0],
+                                        filter_mask=np.ones(3, bool)))
+
+    def test_int8_tier_honors_mask(self, data):
+        x, q = data
+        eng = ExactKNN(k=5).fit(x).enable_int8()
+        base = eng.search(SearchRequest(queries=q, tier="int8"))
+        mask = np.ones(eng.n_ids, dtype=bool)
+        top = np.asarray(base.indices)[:, 0]
+        mask[top] = False
+        res = eng.search(SearchRequest(queries=q, tier="int8",
+                                       filter_mask=mask))
+        got = set(np.asarray(res.indices).ravel().tolist())
+        assert not (got & set(top.tolist()))
+
+
+class TestShims:
+    def test_each_shim_warns_and_matches_search(self, data):
+        x, q = data
+        eng = ExactKNN(k=6, n_partitions=4).fit(x).enable_int8()
+        pairs = [
+            (lambda: eng.query(q[0]),
+             SearchRequest(queries=q[0], mode_hint="fdsq")),
+            (lambda: eng.query_batch(q),
+             SearchRequest(queries=q, mode_hint="fqsd")),
+            (lambda: eng.query_batch_int8(q),
+             SearchRequest(queries=q, tier="int8")),
+        ]
+        for legacy, req in pairs:
+            with pytest.warns(DeprecationWarning):
+                old = legacy()
+            new = eng.search(req).topk
+            np.testing.assert_array_equal(np.asarray(old.scores),
+                                          np.asarray(new.scores))
+            np.testing.assert_array_equal(np.asarray(old.indices),
+                                          np.asarray(new.indices))
+
+    def test_query_stream_shim(self, engine, data):
+        _, q = data
+        with pytest.warns(DeprecationWarning):
+            out = list(engine.query_stream([q[0], q[1]]))
+        assert len(out) == 2 and out[0].scores.ndim == 1
+
+    def test_search_streamed_shim_warns(self, engine, data):
+        x, q = data
+        with pytest.warns(DeprecationWarning):
+            out = engine.search_streamed(q, x, rows_per_partition=512)
+        ref = engine.search(SearchRequest(queries=q, mode_hint="fqsd"))
+        np.testing.assert_allclose(np.asarray(out.scores),
+                                   np.asarray(ref.scores), rtol=1e-5, atol=1e-4)
