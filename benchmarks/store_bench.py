@@ -1,10 +1,17 @@
-"""Storage-tier benchmark: f32 resident vs int8 resident vs mmap-streamed.
+"""Storage-tier benchmark: f32 vs int8, resident vs mmap-streamed.
 
 The paper's section 5 names quantization as the FQ-SD throughput lever and
 section 3.3 streams partitions when the dataset outgrows device memory;
-this section measures both levers of the DatasetStore against the exact
-f32 baseline on one batch shape, reporting the serving-relevant numbers
-(qps, p50/p99 per call, dataset bytes moved per scan) into BENCH_store.json.
+ISSUE 5 combines them: the out-of-core scan streams the int8 tier at
+1 B/element and rescores only candidate rows of the f32 tier. This section
+measures the full 2x2 (tier x residency) against the exact f32 baseline on
+one batch shape, reporting the serving-relevant numbers — qps, p50/p99 per
+call, dataset bytes moved per scan (the honest per-request account from
+``SearchResult.stats``, i.e. codes + per-row channels + candidate reads on
+the streamed int8 path), and the certified-exact fraction — into
+BENCH_store.json. The acceptance ratio (streamed int8 bytes / streamed f32
+bytes, expected <= ~0.3 at these sizes) rides the int8 row's
+``bytes_ratio_vs_f32`` field.
 """
 from __future__ import annotations
 
@@ -13,53 +20,69 @@ import tempfile
 import numpy as np
 
 from benchmarks.common import emit, time_samples
+from repro.api import SearchRequest
 from repro.core import ExactKNN
 from repro.store import DatasetStore
 
 K = 10
-M = 64  # query batch (amortizes each dataset pass, the FQ-SD regime)
 REPEATS = 7
 
 
-def _pcts(times: list[float]) -> tuple[float, float, float]:
+def _pcts(times: list[float], m: int) -> tuple[float, float, float]:
     arr = np.asarray(times)
     return (float(np.percentile(arr, 50) * 1e6),
             float(np.percentile(arr, 99) * 1e6),
-            float(M / np.median(arr)))
+            float(m / np.median(arr)))
+
+
+def _bench(eng: ExactKNN, q: np.ndarray, tier: str, repeats: int):
+    req = SearchRequest(queries=q, tier=tier)
+    call = lambda: eng.search(req).topk
+    t = time_samples(call, repeats=repeats)
+    res = eng.search(req)  # one counted call for stats/certificate
+    p50, p99, qps = _pcts(t, q.shape[0])
+    cert = float(np.mean(np.asarray(res.certified)))
+    return p50, p99, qps, int(res.stats["bytes_scanned"]), cert
 
 
 def run(quick: bool = False) -> None:
-    n, d = (8192, 128) if quick else (65536, 128)
+    n, d, m = (32768, 128, 16) if quick else (131072, 128, 64)
     rng = np.random.default_rng(0)
     x = rng.standard_normal((n, d)).astype(np.float32)
-    q = rng.standard_normal((M, d)).astype(np.float32)
+    q = rng.standard_normal((m, d)).astype(np.float32)
 
-    # --- exact f32 resident baseline ------------------------------------
+    # --- resident: exact f32 baseline vs the certified int8 tier ---------
     eng = ExactKNN(k=K).fit(x)
-    t = time_samples(eng.query_batch, q, repeats=REPEATS)
-    p50, p99, qps = _pcts(t)
-    f32_bytes = eng.store.nbytes("f32")
+    p50, p99, qps, nbytes, cert = _bench(eng, q, "f32", REPEATS)
     emit("store/f32_resident", p50, f"qps={qps:.0f}",
-         tier="f32", qps=qps, p50_us=p50, p99_us=p99,
-         bytes_scanned=f32_bytes, n=n, d=d, m=M, k=K)
+         tier="f32", residency="resident", qps=qps, p50_us=p50, p99_us=p99,
+         bytes_scanned=nbytes, certified_exact=cert, n=n, d=d, m=m, k=K)
 
-    # --- int8 resident tier (certified exact rescore) -------------------
     eng.enable_int8()
-    t = time_samples(eng.query_batch_int8, q, repeats=REPEATS)
-    p50, p99, qps = _pcts(t)
-    cert = float(np.asarray(eng.last_certificate).mean())
+    p50, p99, qps, nbytes, cert = _bench(eng, q, "int8", REPEATS)
     emit("store/int8_resident", p50, f"qps={qps:.0f};certified={cert:.3f}",
-         tier="int8", qps=qps, p50_us=p50, p99_us=p99,
-         bytes_scanned=eng.store.nbytes("int8"), certified_exact=cert,
-         n=n, d=d, m=M, k=K)
+         tier="int8", residency="resident", qps=qps, p50_us=p50, p99_us=p99,
+         bytes_scanned=nbytes, certified_exact=cert, n=n, d=d, m=m, k=K)
 
-    # --- out-of-core mmap-streamed scan ---------------------------------
+    # --- out-of-core: the same tier pair through the mmap shard stream ---
     with tempfile.TemporaryDirectory() as tmp:
-        store = DatasetStore.from_array(x, rows_per_shard=n // 8, directory=tmp)
+        store = DatasetStore.from_array(x, rows_per_shard=n // 8,
+                                        directory=tmp)
         oeng = ExactKNN(k=K, device_budget_bytes=1).fit_store(store)
-        t = time_samples(oeng.query_batch, q, repeats=max(2, REPEATS // 2))
-        p50, p99, qps = _pcts(t)
-        emit("store/mmap_streamed", p50, f"qps={qps:.0f};shards={store.n_shards}",
-             tier="f32", qps=qps, p50_us=p50, p99_us=p99,
-             bytes_scanned=store.nbytes("f32"), n_shards=store.n_shards,
-             n=n, d=d, m=M, k=K)
+        repeats = max(2, REPEATS // 2)
+        p50, p99, qps, f32_bytes, cert = _bench(oeng, q, "f32", repeats)
+        emit("store/f32_mmap_streamed", p50,
+             f"qps={qps:.0f};shards={store.n_shards}",
+             tier="f32", residency="mmap-streamed", qps=qps, p50_us=p50,
+             p99_us=p99, bytes_scanned=f32_bytes, certified_exact=cert,
+             n_shards=store.n_shards, n=n, d=d, m=m, k=K)
+
+        oeng.enable_int8()
+        p50, p99, qps, i8_bytes, cert = _bench(oeng, q, "int8", repeats)
+        ratio = i8_bytes / f32_bytes
+        emit("store/int8_mmap_streamed", p50,
+             f"qps={qps:.0f};certified={cert:.3f};bytes={ratio:.2f}x_f32",
+             tier="int8", residency="mmap-streamed", qps=qps, p50_us=p50,
+             p99_us=p99, bytes_scanned=i8_bytes, certified_exact=cert,
+             bytes_ratio_vs_f32=ratio, n_shards=store.n_shards,
+             n=n, d=d, m=m, k=K)

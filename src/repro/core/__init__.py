@@ -41,16 +41,21 @@ from repro.core.planner import (
     largest_divisor_at_most,
     plan,
 )
-from repro.core.fqsd import fqsd_scan, fqsd_streamed
+from repro.core.fqsd import fqsd_scan, fqsd_streamed, streamed_direct_scan
 from repro.core.partition import PaddedDataset, iter_partitions, make_padded
 from repro.core.quantized import (
+    Int8Partition,
     QuantizedDataset,
     knn_quantized,
     quantize_dataset,
     quantized_norm_sq,
 )
 from repro.core.sharded import fdsq_sharded, fqsd_ring, fqsd_sharded, shard_dataset
-from repro.core.streaming import DoubleBufferedStream, prefetch_to_device
+from repro.core.streaming import (
+    DoubleBufferedStream,
+    device_put_partition,
+    prefetch_to_device,
+)
 from repro.core.topk import (
     TopK,
     empty_topk,
@@ -69,13 +74,14 @@ __all__ = [
     "cache_info", "clear_executable_cache", "set_executable_cache_limit",
     "ExecContext",
     "TieredResident", "cached_partition_step",
-    "fqsd_scan", "fqsd_streamed", "fdsq_search", "fdsq_query_stream",
+    "fqsd_scan", "fqsd_streamed", "streamed_direct_scan",
+    "fdsq_search", "fdsq_query_stream",
     "fdsq_sharded", "fqsd_sharded", "fqsd_ring", "shard_dataset",
     "pairwise_scores", "l2_sq", "inner_product", "cosine_distance",
     "row_norms_sq", "topk_smallest", "merge_topk", "merge_two_sorted",
     "tree_merge_sorted", "empty_topk", "knn_oracle",
     "PaddedDataset", "make_padded", "iter_partitions",
-    "DoubleBufferedStream", "prefetch_to_device",
-    "QuantizedDataset", "quantize_dataset", "knn_quantized",
-    "quantized_norm_sq",
+    "DoubleBufferedStream", "prefetch_to_device", "device_put_partition",
+    "QuantizedDataset", "Int8Partition", "quantize_dataset",
+    "knn_quantized", "quantized_norm_sq",
 ]

@@ -9,7 +9,9 @@ Architecture (one PR of the paper's fig. 1 / fig. 2 made explicit):
         -> planner.plan(...)        PURE: shapes + store meta -> ExecutionPlan
         -> executors.execute(...)   registry: plan -> compiled executable
              fdsq-xla / fqsd-xla / fdsq-pallas / fqsd-streamed /
-             fqsd-mmap-streamed / fqsd-int8 / fdsq-sharded / fqsd-sharded
+             fqsd-mmap-streamed / fqsd-int8 / fqsd-int8-pallas /
+             fqsd-int8-streamed / fqsd-int8-mmap-streamed /
+             fdsq-sharded / fqsd-sharded
         -> serving.AdaptiveScheduler   picks FD-SQ vs FQ-SD plans per batch,
                                        routes deep backlogs to the int8 tier
 
@@ -73,7 +75,7 @@ from repro.core.planner import (
     ExecutionPlan,
     plan as plan_fn,
 )
-from repro.core.quantized import QuantizedDataset, quantized_norm_sq
+from repro.core.quantized import QuantizedDataset
 from repro.core.topk import TopK
 from repro.api.types import AUTO_FDSQ_MAX_BATCH, SearchRequest, SearchResult
 
@@ -100,23 +102,67 @@ def _keep_rows(mask: np.ndarray, base_index: int, n_valid: int,
 
 class _MaskedShardSource:
     """A DatasetStore view with a per-request filter mask folded onto each
-    shard's norms channel (+inf = excluded) as it streams — duck-types the
-    one method the streamed executor reads (`iter_shards`)."""
+    shard's validity channel as it streams (+inf norm on f32 shards, +inf
+    quantized norm on int8 partitions, +inf norm on delta shards) —
+    duck-types the store surface the streamed executors read
+    (``iter_shards`` / ``shard_source`` / ``delta_shards`` /
+    ``gather_rows``)."""
 
     def __init__(self, store, mask: np.ndarray):
         self._store = store
         self._mask = mask
 
-    def iter_shards(self):
-        for p in self._store.iter_shards():
+    def iter_shards(self, tier: str = "f32"):
+        if tier == "f32":
+            for p in self._store.iter_shards():
+                keep = _keep_rows(self._mask, p.base_index, p.n_valid,
+                                  int(p.vectors.shape[0]))
+                if keep.all():
+                    yield p
+                    continue
+                norms = np.where(keep, np.asarray(p.norms), np.float32(np.inf))
+                yield part.PaddedDataset(p.vectors, norms.astype(np.float32),
+                                         p.n_valid, p.base_index)
+            return
+        for p in self._store.iter_shards(tier):
             keep = _keep_rows(self._mask, p.base_index, p.n_valid,
-                              int(p.vectors.shape[0]))
+                              int(p.qnorm.shape[0]))
             if keep.all():
                 yield p
                 continue
-            norms = np.where(keep, np.asarray(p.norms), np.float32(np.inf))
-            yield part.PaddedDataset(p.vectors, norms.astype(np.float32),
-                                     p.n_valid, p.base_index)
+            qnorm = np.where(keep, np.asarray(p.qnorm), np.float32(np.inf))
+            yield p._replace(qnorm=qnorm.astype(np.float32))
+
+    def shard_source(self, tier: str = "f32"):
+        return _MaskedTierSource(self, tier)
+
+    def delta_shards(self):
+        out = []
+        for p in self._store.delta_shards():
+            keep = _keep_rows(self._mask, p.base_index, p.n_valid,
+                              int(p.vectors.shape[0]))
+            norms = (np.asarray(p.norms) if keep.all()
+                     else np.where(keep, np.asarray(p.norms),
+                                   np.float32(np.inf)).astype(np.float32))
+            out.append(part.PaddedDataset(p.vectors, norms,
+                                          p.n_valid, p.base_index))
+        return out
+
+    def gather_rows(self, ids) -> np.ndarray:
+        # candidate indices already passed the masked scan: excluded rows
+        # carry +inf bounds / index -1, so no mask re-check is needed here
+        return self._store.gather_rows(ids)
+
+
+class _MaskedTierSource:
+    """Restartable iterable over one tier of a masked shard source."""
+
+    def __init__(self, source: _MaskedShardSource, tier: str):
+        self._source = source
+        self._tier = tier
+
+    def __iter__(self):
+        return self._source.iter_shards(self._tier)
 
 
 class ExactKNN:
@@ -132,10 +178,13 @@ class ExactKNN:
         dtype=jnp.float32,
         rescore_factor: int = 4,
         device_budget_bytes: int | None = None,
+        prefetch_depth: int = 2,
     ):
         validate_metric(metric)
         if k < 1:
             raise ValueError("k must be >= 1")
+        if prefetch_depth < 1:
+            raise ValueError(f"prefetch_depth must be >= 1, got {prefetch_depth}")
         self.k = int(k)
         self.metric = metric
         self.backend: Backend = backend
@@ -146,6 +195,10 @@ class ExactKNN:
         self.dtype = dtype
         self.rescore_factor = int(rescore_factor)
         self.device_budget_bytes = device_budget_bytes
+        #: streamed-scan double-buffer depth (2 = the paper's two memory
+        #: banks; deeper trades host memory for jitter tolerance). Threaded
+        #: into every ExecContext — launch/serve.py exposes --prefetch-depth
+        self.prefetch_depth = int(prefetch_depth)
         self._store = None  # repro.store.DatasetStore
         self._resident = True
         # cos + fused backend: the resident view is normalized at fit time
@@ -373,8 +426,12 @@ class ExactKNN:
 
     # ---------------------------------------------------------- int8 tier
     def enable_int8(self) -> "ExactKNN":
-        """Materialize the store's int8 tier and its device view (the
-        1 B/element scan tier the bandwidth-aware scheduler routes to)."""
+        """Materialize the store's int8 tier (the 1 B/element scan tier the
+        bandwidth-aware scheduler routes to). Resident engines also build
+        the device view; non-resident engines serve the tier by streaming
+        the per-shard codes through the fqsd-int8-*streamed executors —
+        no device view, and (for disk-backed stores) no f32 reads beyond
+        the certified rescore's candidate rows."""
         self._require_fit()
         if self._store is None:
             raise RuntimeError("int8 tier requires a DatasetStore-backed fit")
@@ -385,28 +442,29 @@ class ExactKNN:
                 "int8 tier on a mesh-sharded engine is not supported yet "
                 "(the planner's sharded executors read the f32 view)"
             )
-        if not self._resident:
-            raise NotImplementedError(
-                "int8 is a resident-scan tier; streamed int8 shards are "
-                "future work"
-            )
         self._store.ensure_tier("int8")
-        self._refresh_int8_view()
+        if self._resident:
+            self._refresh_int8_view()
         return self
 
     def _refresh_int8_view(self) -> None:
         i8 = self._store.int8_resident()
-        codes, scales = jnp.asarray(i8.q), jnp.asarray(i8.scales)
-        # qnorm_sq is derived from the immutable codes/scales with the same
-        # formula quantize_dataset uses, so engine-path bounds match the
-        # raw path bitwise; mutations only ever refresh norms_sq
+        # qnorm_sq was computed at quantize time by the same shared formula
+        # (quantized_norm_sq) every QuantizedDataset producer uses, and is
+        # persisted with the shard, so engine-path bounds match the raw
+        # path bitwise; mutations only ever refresh norms_sq
         self._int8 = QuantizedDataset(
-            codes, scales, jnp.asarray(i8.err), jnp.asarray(i8.norms_sq),
-            quantized_norm_sq(codes, scales),
+            jnp.asarray(i8.q), jnp.asarray(i8.scales), jnp.asarray(i8.err),
+            jnp.asarray(i8.norms_sq), jnp.asarray(i8.qnorm_sq),
         )
 
     @property
     def has_int8(self) -> bool:
+        """The engine can serve tier="int8": a resident device view exists,
+        or (out-of-core) the attached store has the tier materialized for
+        the streamed quantized scan."""
+        if self._store is not None and not self._resident:
+            return self._store.has_tier("int8")
         return self._int8 is not None
 
     @property
@@ -463,10 +521,11 @@ class ExactKNN:
         d = self._padded_dim()
         return plan_fn((m, d), self.dataset_meta(tier=tier), self.config(), mode, **kw)
 
-    def _ctx(self, prefetch_depth: int = 2) -> ExecContext:
+    def _ctx(self, prefetch_depth: int | None = None) -> ExecContext:
         return ExecContext(
             mesh=self.mesh, mesh_axes=self.mesh_axes,
-            prefetch_depth=prefetch_depth,
+            prefetch_depth=(self.prefetch_depth if prefetch_depth is None
+                            else prefetch_depth),
             cos_prenormalized=self._cos_prenormalized,
         )
 
@@ -554,7 +613,7 @@ class ExactKNN:
                     "tier='int8' is a throughput (FQ-SD) tier and cannot "
                     "serve an explicit mode_hint='fdsq' request"
                 )
-            if self._int8 is None:
+            if not self.has_int8:
                 raise RuntimeError("int8 tier not enabled; call enable_int8() first")
             if metric != "l2":
                 raise ValueError("int8 tier supports the l2 metric only")
@@ -581,8 +640,11 @@ class ExactKNN:
                 )
         t0 = time.perf_counter()
         if not self._resident:
+            # tier="int8" survives planning here: the out-of-core scan
+            # streams 1 B/element codes and rescores candidate rows only
             p = plan_fn(
-                qv.shape, self.dataset_meta(), self.config(), "fqsd-streamed",
+                qv.shape, self.dataset_meta(tier=tier), self.config(),
+                "fqsd-streamed",
                 stream_rows=self._store.rows_per_shard, k=k, metric=metric,
             )
             source = (self._store if mask is None
@@ -606,10 +668,20 @@ class ExactKNN:
         cert = ctx.certificate if (ctx is not None and p.tier == "int8") else None
         stats = {
             "k": k, "metric": metric, "m": m, "batched": m,
-            "bytes_scanned": p.padded_rows * p.padded_dim
-            * (1 if p.tier == "int8" else 4),
+            # executors whose traffic the plan geometry cannot predict
+            # (streamed int8: codes + side channels + candidate-row reads)
+            # report honest bytes on the ctx; plans predict the rest
+            "bytes_scanned": (
+                ctx.bytes_scanned
+                if ctx is not None and ctx.bytes_scanned is not None
+                else p.padded_rows * p.padded_dim
+                * (1 if p.tier == "int8" else 4)
+            ),
             "dispatch_ms": dispatch_ms,
         }
+        if ctx is not None and ctx.stream_stats is not None:
+            stats["transfers"] = ctx.stream_stats.get("transfers", 0)
+            stats["restarts"] = ctx.stream_stats.get("restarts", 0)
         if request.deadline_ms is not None:
             stats["deadline_ms"] = request.deadline_ms
         return SearchResult(

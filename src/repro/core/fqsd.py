@@ -27,7 +27,7 @@ import jax.numpy as jnp
 
 from repro.core import partition as part
 from repro.core.distance import Metric, pairwise_scores, validate_metric
-from repro.core.topk import TopK, empty_topk, merge_topk
+from repro.core.topk import TopK, empty_topk, merge_topk, sort_pairs
 
 
 def _masked_scores(
@@ -124,6 +124,7 @@ def fqsd_streamed(
     prefetch_depth: int = 2,
     put_fn=None,
     step_fn=None,
+    stream_stats: dict | None = None,
 ) -> TopK:
     """Exact kNN over a host-resident dataset streamed with double buffering.
 
@@ -132,20 +133,18 @@ def fqsd_streamed(
     flight (two banks); the step executable is reused across partitions.
     `step_fn` lets callers inject an already-built step (the executor layer
     caches it per plan so repeated streamed searches share one executable).
+    A `stream_stats` dict receives the streamer's transfers/restarts
+    counters (serving observability).
     """
-    from repro.core.streaming import DoubleBufferedStream
+    from repro.core.streaming import DoubleBufferedStream, device_put_partition
 
     step = step_fn if step_fn is not None else make_partition_step(k, metric)
     state = empty_topk((queries.shape[0],), k)
 
-    def put(p: part.PaddedDataset):
-        if put_fn is not None:
-            return put_fn(p)
-        return part.PaddedDataset(
-            jax.device_put(p.vectors), jax.device_put(p.norms), p.n_valid, p.base_index
-        )
-
-    stream = DoubleBufferedStream(partitions, depth=prefetch_depth, put_fn=put)
+    stream = DoubleBufferedStream(
+        partitions, depth=prefetch_depth,
+        put_fn=put_fn if put_fn is not None else device_put_partition,
+    )
     for p in stream:
         state = step(
             state,
@@ -155,4 +154,75 @@ def fqsd_streamed(
             jnp.int32(p.base_index),
             jnp.int32(p.n_valid),
         )
+    if stream_stats is not None:
+        stream_stats["transfers"] = stream.transfers
+        stream_stats["restarts"] = stream.restarts
     return state
+
+
+def make_direct_partition_step(k: int):
+    """Compile-once streamed step in the DIRECT ``(q - x)^2`` form.
+
+    The streamed analogue of ``kernels.knn.ops.knn_exact_direct``: one
+    partition's literal f32 sums of squared differences merged into the
+    running (m, k) state by a full lexicographic (value, index) sort —
+    chunk- and order-invariant, so a shard-by-shard scan equals a full-sort
+    oracle bit for bit. This is the exactness oracle AND uncertified-row
+    fallback for the streamed int8 executors (their candidate rescore uses
+    the identical formula, which is what makes certified rows bitwise equal
+    to this oracle). Validity (padding / tombstones / filter masks) rides
+    the norms channel: non-finite norm => +inf score and index -1.
+
+    Returns a jit'd fn(s, i, queries, vectors, norms, base) -> (s, i).
+    """
+
+    @jax.jit
+    def step(s, i, queries, vectors, norms, base):
+        n = vectors.shape[0]
+        q32 = queries.astype(jnp.float32)
+        diff = q32[:, None, :] - vectors[None, :, :].astype(jnp.float32)
+        d = jnp.sum(diff * diff, axis=-1)
+        valid = jnp.isfinite(norms)
+        d = jnp.where(valid[None, :], d, jnp.inf)
+        idx = jnp.where(valid, base + jnp.arange(n, dtype=jnp.int32),
+                        jnp.int32(-1))
+        s_all = jnp.concatenate([s, d], axis=-1)
+        i_all = jnp.concatenate(
+            [i, jnp.broadcast_to(idx[None, :], d.shape)], axis=-1
+        )
+        s2, i2 = sort_pairs(s_all, i_all)
+        return s2[:, :k], i2[:, :k]
+
+    return step
+
+
+def streamed_direct_scan(
+    queries: jax.Array,
+    partitions: Iterable[part.PaddedDataset],
+    k: int,
+    prefetch_depth: int = 2,
+    step_fn=None,
+    stream_stats: dict | None = None,
+) -> TopK:
+    """Exact direct-form kNN over streamed partitions (l2 only).
+
+    The streamed f32 oracle: double-buffered like :func:`fqsd_streamed`,
+    but scoring through :func:`make_direct_partition_step`, so the result
+    is bit-identical to a full lexicographic sort of every (q - x)^2
+    distance — the reference the streamed int8 executors are tested
+    against and fall back to for uncertified queries.
+    """
+    from repro.core.streaming import DoubleBufferedStream, device_put_partition
+
+    step = step_fn if step_fn is not None else make_direct_partition_step(k)
+    m = queries.shape[0]
+    s = jnp.full((m, k), jnp.inf, jnp.float32)
+    i = jnp.full((m, k), -1, jnp.int32)
+    stream = DoubleBufferedStream(partitions, depth=prefetch_depth,
+                                  put_fn=device_put_partition)
+    for p in stream:
+        s, i = step(s, i, queries, p.vectors, p.norms, jnp.int32(p.base_index))
+    if stream_stats is not None:
+        stream_stats["transfers"] = stream.transfers
+        stream_stats["restarts"] = stream.restarts
+    return TopK(s, jnp.where(jnp.isfinite(s), i, -1))

@@ -44,6 +44,8 @@ PLANNABLE_EXECUTORS = (
     "fqsd-mmap-streamed",
     "fqsd-int8",
     "fqsd-int8-pallas",
+    "fqsd-int8-streamed",
+    "fqsd-int8-mmap-streamed",
     "fdsq-sharded",
     "fqsd-sharded",
 )
@@ -188,7 +190,11 @@ def plan(
     * non-resident dataset -> the streamed executors: manifest-driven
       "fqsd-mmap-streamed" when the meta is a DatasetStoreMeta (shards on
       disk or host, scanned through the double buffer), the legacy
-      host-iterator "fqsd-streamed" otherwise;
+      host-iterator "fqsd-streamed" otherwise. A store-backed non-resident
+      plan with tier="int8" (l2 only) KEEPS the quantized tier: the scan
+      streams 1 B/element codes and the certified rescore reads only
+      candidate rows of the f32 tier — "fqsd-int8-mmap-streamed" for mmap
+      shards, "fqsd-int8-streamed" for host-RAM shards;
     * sharded dataset  -> the mesh executors (mode picks fan-out vs ring);
     * tier="int8"      -> the 1 B/element quantized scan with certified
       exact rescore: the fused on-chip kernel "fqsd-int8-pallas" when
@@ -230,9 +236,16 @@ def plan(
     tier = dataset_meta.tier if store_backed else "f32"
 
     if mode == "fqsd-streamed" or not dataset_meta.resident:
-        executor = "fqsd-mmap-streamed" if store_backed else "fqsd-streamed"
-        mode_label = "fqsd-streamed"
-        tier = "f32"  # streamed scans read the exact base tier
+        if store_backed and tier == "int8" and metric == "l2":
+            # the paper's throughput deployment: out-of-core scan at
+            # 1 B/element with certified rescore reads of candidate rows
+            executor = ("fqsd-int8-mmap-streamed" if dataset_meta.mmap
+                        else "fqsd-int8-streamed")
+            mode_label = "fqsd-int8-streamed"
+        else:
+            executor = "fqsd-mmap-streamed" if store_backed else "fqsd-streamed"
+            mode_label = "fqsd-streamed"
+            tier = "f32"  # exact base tier (int8 needs a store + l2)
         if stream_rows is not None:
             chunk = int(stream_rows)
         elif store_backed and dataset_meta.rows_per_shard:

@@ -42,7 +42,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.topk import TopK, topk_smallest
+from repro.core.topk import TopK, sort_pairs, topk_smallest
 
 
 class QuantizedDataset(NamedTuple):
@@ -57,6 +57,88 @@ class QuantizedDataset(NamedTuple):
     #                      s_x^2 * ||q_x||^2. Must be this exact value (not
     #                      derived from norms_sq) or the distance bounds
     #                      lose soundness — see module docstring.
+
+
+class Int8Partition(NamedTuple):
+    """One streamed shard of the int8 tier — the multi-array partition the
+    double-buffered streamer ships in one prefetch slot (1 B/element codes
+    plus 12 B/row of f32 side channels instead of 4 B/element f32 rows).
+
+    ``qnorm`` is the EXACT quantized norm ``||x_hat||^2`` with validity
+    already folded in: +inf on padding / tombstones / filter-masked rows
+    (the producer folds its ``norms_sq`` mask here so the scan step needs a
+    single channel). ``n_valid``/``base_index`` stay host scalars.
+    """
+
+    q: jax.Array  # (padded_rows, padded_dim) int8 codes
+    scales: jax.Array  # (padded_rows,) f32
+    err: jax.Array  # (padded_rows,) f32 — certified ||e_x|| upper bound
+    qnorm: jax.Array  # (padded_rows,) f32 — exact ||x_hat||^2; +inf invalid
+    n_valid: int
+    base_index: int
+
+    def scan_bytes(self) -> int:
+        """Bytes one streamed pass moves for this shard: int8 codes plus
+        the three per-row f32 channels (scales, err, qnorm)."""
+        rows = int(self.q.shape[0])
+        return rows * int(self.q.shape[1]) + 12 * rows
+
+
+def make_int8_bound_step(r: int):
+    """Compile-once step for the *streamed* quantized scan: insert one int8
+    shard's certified lower bounds into the running (m, r+1) candidate queue.
+
+    The queue is one entry wider than the rescore budget ``r`` so the
+    epilogue can read the smallest lower bound OUTSIDE the candidate set
+    (entry r) for the exactness certificate. Invalid rows (+inf ``qnorm``)
+    get index -1, so a padded tail row of the final shard can never leak a
+    global id that collides with the delta-row id space.
+
+    Shard-local selection runs through ``topk_smallest`` (O(n) lax.top_k,
+    not a full sort — the per-shard sort would dominate the whole streamed
+    scan) and only the selected 2(r+1) entries merge lexicographically.
+    top_k's selection among EQUAL lower bounds straddling the queue
+    boundary is index-arbitrary, and that is sound here: dropping a tying
+    row can only replace a queue entry with an equal *value*, so the
+    certificate's threshold entry lb[r] is unchanged — and any query whose
+    true neighbor could hide behind such a tie necessarily fails the
+    strict ``lb[r] > kth-exact`` certificate and takes the exact streamed
+    fallback. Certified results therefore stay bit-identical to the
+    full-sort oracle.
+
+    Returns a jit'd fn(lb, li, queries, codes, scales, err, qnorm, base)
+    -> (lb, li); all shards share one padded shape, so this compiles once.
+    """
+    if r < 1:
+        raise ValueError(f"rescore budget r must be >= 1, got {r}")
+
+    @jax.jit
+    def step(lb, li, queries, codes, scales, err, qnorm, base):
+        n = codes.shape[0]
+        q32 = queries.astype(jnp.float32)
+        qn = jnp.sum(q32 * q32, axis=-1, keepdims=True)
+        # (M, d) f32 x (N, d) i8 -> f32: dataset-side HBM traffic stays
+        # 1 B/element (same contraction as _approx_l2)
+        cross = jax.lax.dot_general(
+            q32, codes.astype(jnp.bfloat16),
+            dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scales[None, :]
+        d_hat = jnp.maximum(qn - 2.0 * cross + qnorm[None, :], 0.0)
+        valid = jnp.isfinite(qnorm)
+        root = jnp.sqrt(d_hat)
+        lower = jnp.where(valid[None, :],
+                          jnp.maximum(root - err[None, :], 0.0) ** 2, jnp.inf)
+        idx = jnp.where(valid, base + jnp.arange(n, dtype=jnp.int32),
+                        jnp.int32(-1))
+        s_loc, i_loc = topk_smallest(
+            lower, jnp.broadcast_to(idx[None, :], lower.shape), r + 1
+        )
+        s, i = sort_pairs(jnp.concatenate([lb, s_loc], axis=-1),
+                          jnp.concatenate([li, i_loc], axis=-1))
+        return s[:, : r + 1], i[:, : r + 1]
+
+    return step
 
 
 def quantized_norm_sq(q: jax.Array, scales: jax.Array) -> jax.Array:

@@ -19,8 +19,33 @@ import collections
 from typing import Callable, Iterable, Iterator, TypeVar
 
 import jax
+import numpy as np
 
 T = TypeVar("T")
+
+
+def device_put_partition(p, put_fn: Callable | None = None):
+    """Ship every array field of a partition record to the device in one
+    async dispatch, leaving host scalar metadata (n_valid, base_index) alone.
+
+    Works for any NamedTuple partition — ``PaddedDataset`` (vectors +
+    norms) and the int8 tier's multi-array ``Int8Partition`` (codes +
+    scales + err + qnorm) — so one prefetch slot carries however many
+    arrays the tier needs, and for mmap-backed shards the ``device_put``
+    is the moment the bytes leave the disk. The arrays travel as one
+    pytree, so the streamer's "one partition in flight" schedule holds for
+    multi-array partitions exactly as it does for (vectors, norms) pairs.
+    """
+    put = put_fn or jax.device_put
+    arrays = {
+        name: v
+        for name, v in zip(type(p)._fields, p)
+        if isinstance(v, (np.ndarray, jax.Array))
+    }
+    if not arrays:
+        return p
+    moved = put(list(arrays.values()))
+    return p._replace(**dict(zip(arrays, moved)))
 
 
 class DoubleBufferedStream:

@@ -30,7 +30,8 @@ def serve_knn(args):
     x = vector_dataset(args.n, args.d, seed=0)
     q = query_stream(x, args.queries, seed=1)
     router = Router()
-    router.create(args.collection, x, k=args.k, n_partitions=args.partitions)
+    router.create(args.collection, x, k=args.k, n_partitions=args.partitions,
+                  prefetch_depth=args.prefetch_depth)
     if args.int8_depth is not None:
         router.engine(args.collection).enable_int8()
     sched = AdaptiveScheduler(
@@ -48,6 +49,10 @@ def serve_knn(args):
           f"served={st['served']} (wall {wall:.2f}s)  "
           f"mode_switches={st['mode_switches']}  "
           f"deadline_misses={st['deadline_misses']}")
+    if st["transfers"]:
+        print(f"  streamed: transfers={st['transfers']} "
+              f"restarts={st['restarts']} "
+              f"(prefetch depth {args.prefetch_depth})")
     for mode, r in st["per_plan"].items():
         print(f"  plan={mode:<5} n={r['count']:<5} p50={r['p50_ms']:.2f}ms "
               f"p99={r['p99_ms']:.2f}ms q/s={r['qps']:.1f} "
@@ -112,6 +117,12 @@ def main(argv=None):
                     help="backlog depth at which the bandwidth-aware hook "
                          "routes FQ-SD batches to the int8 storage tier "
                          "(enables the tier; default: disabled)")
+    ap.add_argument("--prefetch-depth", type=int, default=2,
+                    help="streamed-scan double-buffer depth (2 = the "
+                         "paper's two memory banks; deeper tolerates host "
+                         "jitter at the cost of pinned host memory) — "
+                         "threaded through ExecContext to every streamed "
+                         "executor")
     ap.add_argument("--arch", default="minicpm-2b")
     args = ap.parse_args(argv)
     if args.mode == "knn":

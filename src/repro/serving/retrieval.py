@@ -192,6 +192,10 @@ class AdaptiveScheduler:
         # for long-lived servers, like the certificate counters)
         self._skip_rate_sum = 0.0
         self._skip_rate_n = 0
+        # streamed-plan double-buffer counters (0 while every dispatch is
+        # resident): partitions shipped host->device and stream restarts
+        self._transfers = 0
+        self._restarts = 0
 
     # ------------------------------------------------------------ decisions
     def _expected_service_s(self, mode: str) -> float:
@@ -220,10 +224,14 @@ class AdaptiveScheduler:
         scans. Default: once the backlog is deep enough that a full dataset
         pass is amortized over >= `int8_min_depth` queries, the scan is
         memory-bound and the int8 tier (1 B/element, 4x less traffic than
-        f32, certified exact rescore) wins. Override with a measured-GB/s
-        policy for smarter routing; `stats()["bytes_scanned"]` exposes the
-        traffic either way. Requests with an explicit ``tier`` never reach
-        this hook — per-request pins always win.
+        f32, certified exact rescore) wins. This covers streamed plans too:
+        a non-resident engine whose store carries the int8 tier reports
+        ``has_int8``, so deep backlogs route out-of-core scans through the
+        fqsd-int8-*streamed executors (disk bytes are the bound there, and
+        the quantized pass moves ~1/4 of them). Override with a
+        measured-GB/s policy for smarter routing; `stats()["bytes_scanned"]`
+        exposes the traffic either way. Requests with an explicit ``tier``
+        never reach this hook — per-request pins always win.
         """
         if (
             mode == "fqsd"
@@ -322,6 +330,8 @@ class AdaptiveScheduler:
             # float() is a free sync here: results were materialized above
             self._skip_rate_sum += float(ks["prune_skip_rate"])
             self._skip_rate_n += 1
+        self._transfers += int(batch.stats.get("transfers", 0))
+        self._restarts += int(batch.stats.get("restarts", 0))
         if self._last_mode is not None and label != self._last_mode:
             self._switches += 1
         self._last_mode = label
@@ -430,6 +440,9 @@ class AdaptiveScheduler:
             "mode_switches": self._switches,
             "per_plan": per_plan,
             "bytes_scanned": dict(self._bytes_scanned),
+            # streamed-plan prefetcher counters (0 for resident serving)
+            "transfers": self._transfers,
+            "restarts": self._restarts,
         }
         if self.collection is not None:
             out["collection"] = self.collection

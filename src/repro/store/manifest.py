@@ -33,6 +33,19 @@ def crc32_of(arr: np.ndarray) -> int:
     return zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF
 
 
+def crc32_of_arrays(*arrays: np.ndarray) -> int:
+    """Running CRC32 over several arrays' raw bytes, in argument order.
+
+    Checksums the *contents* rather than the container file, so formats
+    whose byte layout is not reproducible (npz zip members carry
+    timestamps) still verify deterministically — used for the int8 shard
+    meta files (scales/err/norms/qnorm)."""
+    crc = 0
+    for a in arrays:
+        crc = zlib.crc32(np.ascontiguousarray(a).tobytes(), crc)
+    return crc & 0xFFFFFFFF
+
+
 @dataclasses.dataclass(frozen=True)
 class ShardMeta:
     """One shard's row range, geometry, and backing files.

@@ -12,8 +12,11 @@ up to two dtype tiers:
 * ``f32``  — exact base tier: padded float32 vectors + row norms (+inf on
              padding/tombstones, the mask channel every executor honors);
 * ``int8`` — 1 B/element scan tier (``repro.core.quantized``): symmetric
-             per-row int8 codes + scales + a certified per-row error bound,
-             enabling the exact-with-rescore fqsd-int8 executor.
+             per-row int8 codes + scales + a certified per-row error bound
+             + the exact quantized norm, enabling the exact-with-rescore
+             quantized executors — resident (fqsd-int8[-pallas]) and
+             streamed (fqsd-int8[-mmap]-streamed, which scan codes shard
+             by shard and rescore only candidate rows of the f32 tier).
 
 Shards live either in host memory or as ``np.memmap``-backed files in a
 directory (written with a JSON manifest; reopen with :meth:`open`).  Every
@@ -43,7 +46,8 @@ import numpy as np
 
 from repro.core.partition import LANE, PaddedDataset, round_up
 from repro.core.planner import DatasetStoreMeta
-from repro.store.manifest import Manifest, ShardMeta, crc32_of
+from repro.core.quantized import Int8Partition
+from repro.store.manifest import Manifest, ShardMeta, crc32_of, crc32_of_arrays
 
 F32_TIER = "f32"
 INT8_TIER = "int8"
@@ -55,18 +59,38 @@ DELTA_ROWS_DEFAULT = 4096
 
 
 class Int8Shard(NamedTuple):
-    """Host-side int8 tier of one shard (see repro.core.quantized)."""
+    """Host-side int8 tier of one shard (see repro.core.quantized).
 
-    q: np.ndarray  # (padded_rows, padded_dim) int8
+    For disk-backed stores ``q`` is a read-only ``np.memmap`` of the raw
+    codes file — a streamed quantized scan touches 1 B/element of disk
+    plus the small per-row f32 channels, never the f32 tier."""
+
+    q: np.ndarray  # (padded_rows, padded_dim) int8; ndarray or memmap
     scales: np.ndarray  # (padded_rows,) f32
     err: np.ndarray  # (padded_rows,) f32 — certified ||e_x|| upper bound
     norms_sq: np.ndarray  # (padded_rows,) f32 — exact norms; +inf on invalid
+    qnorm_sq: np.ndarray  # (padded_rows,) f32 — EXACT ||x_hat||^2 (bound
+    #                       soundness requires this exact value; persisted,
+    #                       not re-derived, so reopening never reads f32)
 
 
 class _Shard(NamedTuple):
     vectors: np.ndarray  # (padded_rows, padded_dim) f32; ndarray or memmap
     norms: np.ndarray  # (padded_rows,) f32; +inf beyond n_valid
     meta: ShardMeta
+
+
+class _ShardSource:
+    """Restartable view over one store tier: ``iter()`` opens a fresh
+    :meth:`DatasetStore.iter_shards` pass (what DoubleBufferedStream needs
+    to support multi-pass re-iteration of multi-array streams)."""
+
+    def __init__(self, store: "DatasetStore", tier: str):
+        self._store = store
+        self._tier = tier
+
+    def __iter__(self):
+        return self._store.iter_shards(self._tier)
 
 
 def _pad_block(rows: np.ndarray, padded_rows: int, padded_dim: int) -> np.ndarray:
@@ -98,8 +122,18 @@ def _norms_name(i: int) -> str:
     return f"shard_{i:05d}.norms.npy"
 
 
-def _int8_name(i: int) -> str:
+def _int8_codes_name(i: int) -> str:
+    return f"shard_{i:05d}.int8.bin"
+
+
+def _int8_meta_name(i: int) -> str:
     return f"shard_{i:05d}.int8.npz"
+
+
+#: npz member order of the int8 meta file — ALSO the checksum order
+#: (crc32_of_arrays runs over the arrays in this sequence).
+_INT8_META_FIELDS = ("scales", "err", "norms_sq", "qnorm_sq")
+INT8_META = "int8_meta"  # manifest files/checksums key for the meta npz
 
 
 class DatasetStore:
@@ -218,12 +252,62 @@ class DatasetStore:
             shards.append(_Shard(vec, norms, m))
         store = cls(manifest, shards, directory=directory, delta_rows=delta_rows)
         if INT8_TIER in manifest.tiers:
-            store._int8 = [
-                Int8Shard(**dict(np.load(os.path.join(directory,
-                                                      m.files[INT8_TIER]))))
-                for m in manifest.shards
-            ]
+            store._int8 = [cls._load_int8_shard(directory, m, verify)
+                           for m in manifest.shards]
         return store
+
+    @staticmethod
+    def _load_int8_shard(directory: str, m: ShardMeta,
+                         verify: bool) -> Int8Shard:
+        """Open one shard's persisted int8 tier: codes as a read-only memmap
+        plus the per-row meta npz (scales/err/norms/qnorm). Never touches
+        the f32 tier. ``verify=True`` recomputes both CRCs; an unreadable
+        meta file is reported as corruption either way.
+
+        Legacy stores (format written before the codes/meta split) carry a
+        single ``.int8.npz`` holding the codes too — loaded into host RAM,
+        with the exact quantized norm re-derived from codes + scales (the
+        same formula quantize time uses, so bounds agree bitwise)."""
+        codes_file = m.files[INT8_TIER]
+        legacy = codes_file.endswith(".npz")
+        meta_file = codes_file if legacy else m.files[INT8_META]
+        try:
+            with np.load(os.path.join(directory, meta_file)) as z:
+                meta = {name: z[name] for name in z.files}
+        except Exception as e:
+            raise ValueError(
+                f"int8 meta of shard {m.shard_id} ({meta_file}) is "
+                f"unreadable: file corrupt or truncated ({e})"
+            ) from e
+        if legacy:
+            from repro.core.quantized import quantized_norm_sq
+
+            codes = meta.pop("q")
+            if "qnorm_sq" not in meta:
+                meta["qnorm_sq"] = np.asarray(
+                    quantized_norm_sq(codes, meta["scales"]))
+            if verify and crc32_of(codes) != m.checksums[INT8_TIER]:
+                raise ValueError(
+                    f"checksum mismatch on int8 codes of shard {m.shard_id} "
+                    f"({codes_file}): file corrupt or truncated"
+                )
+            return Int8Shard(codes, **meta)
+        codes = np.memmap(os.path.join(directory, codes_file),
+                          dtype=np.int8, mode="r",
+                          shape=(m.padded_rows, m.padded_dim))
+        if verify:
+            if crc32_of(codes) != m.checksums[INT8_TIER]:
+                raise ValueError(
+                    f"checksum mismatch on int8 codes of shard {m.shard_id} "
+                    f"({codes_file}): file corrupt or truncated"
+                )
+            got = crc32_of_arrays(*(meta[f] for f in _INT8_META_FIELDS))
+            if got != m.checksums[INT8_META]:
+                raise ValueError(
+                    f"checksum mismatch on int8 meta of shard {m.shard_id} "
+                    f"({meta_file}): file corrupt or truncated"
+                )
+        return Int8Shard(codes, **meta)
 
     # ------------------------------------------------------------ geometry
     @property
@@ -371,21 +455,36 @@ class DatasetStore:
             norms = np.asarray(qd.norms_sq).copy()
             norms[s.meta.n_valid:] = np.inf
             i8 = Int8Shard(np.asarray(qd.q), np.asarray(qd.scales),
-                           np.asarray(qd.err), norms)
-            shards.append(i8)
+                           np.asarray(qd.err), norms, np.asarray(qd.qnorm_sq))
             m = s.meta
             if self._directory is not None:
-                fname = _int8_name(m.shard_id)
-                np.savez(os.path.join(self._directory, fname),
-                         q=i8.q, scales=i8.scales, err=i8.err,
-                         norms_sq=i8.norms_sq)
+                # codes as a raw memmap file (streamed at 1 B/element),
+                # per-row f32 channels in a small npz side file; both CRC'd
+                # in the manifest so open(verify=True) covers the tier
+                codes_name = _int8_codes_name(m.shard_id)
+                meta_name = _int8_meta_name(m.shard_id)
+                mm = np.memmap(os.path.join(self._directory, codes_name),
+                               dtype=np.int8, mode="w+", shape=i8.q.shape)
+                mm[:] = i8.q
+                mm.flush()
+                np.savez(os.path.join(self._directory, meta_name),
+                         **{f: getattr(i8, f) for f in _INT8_META_FIELDS})
                 m = ShardMeta(
                     shard_id=m.shard_id, row_start=m.row_start,
                     n_valid=m.n_valid, padded_rows=m.padded_rows,
                     padded_dim=m.padded_dim,
-                    files={**m.files, INT8_TIER: fname},
-                    checksums={**m.checksums, INT8_TIER: crc32_of(i8.q)},
+                    files={**m.files, INT8_TIER: codes_name,
+                           INT8_META: meta_name},
+                    checksums={**m.checksums, INT8_TIER: crc32_of(i8.q),
+                               INT8_META: crc32_of_arrays(
+                                   *(getattr(i8, f)
+                                     for f in _INT8_META_FIELDS))},
                 )
+                # reopen read-only: codes stream from disk, not from RAM
+                codes = np.memmap(os.path.join(self._directory, codes_name),
+                                  dtype=np.int8, mode="r", shape=i8.q.shape)
+                i8 = i8._replace(q=codes)
+            shards.append(i8)
             metas.append(m)
         self._int8 = shards
         tiers = tuple(dict.fromkeys((*self.manifest.tiers, INT8_TIER)))
@@ -458,26 +557,81 @@ class DatasetStore:
                                      self.n_main + n_full * rows))
         return out
 
-    def iter_shards(self, tier: str = F32_TIER) -> Iterator[PaddedDataset]:
-        """Fresh host-side scan of main + delta shards (restartable: every
-        call opens a new pass — safe to hand to DoubleBufferedStream).
+    def iter_shards(self, tier: str = F32_TIER) -> Iterator:
+        """Fresh host-side shard scan at `tier` (restartable: every call
+        opens a new pass — safe to hand to DoubleBufferedStream).
 
-        Yields :class:`PaddedDataset` with host arrays; the streaming layer
-        device_puts each shard, which for mmap shards is the moment the
-        bytes leave the disk (one sequential read per shard, double
-        buffered against compute).
+        ``tier="f32"`` yields :class:`PaddedDataset` over main + delta
+        shards. ``tier="int8"`` yields the multi-array
+        :class:`~repro.core.quantized.Int8Partition` (codes + scales + err
+        + validity-folded exact quantized norm) over the MAIN shards only —
+        delta rows have no quantized representation, so streamed int8
+        consumers fold them exactly from :meth:`delta_shards` (the
+        executors' rescore union does). The streaming layer device_puts
+        each partition, which for mmap shards is the moment the bytes leave
+        the disk (one sequential read per shard, double buffered against
+        compute).
         """
-        if tier != F32_TIER:
-            raise ValueError("streamed scans read the f32 tier; int8 is a "
-                             "resident-scan tier (executor fqsd-int8)")
+        if tier == F32_TIER:
+            def gen():
+                for i, s in enumerate(self._shards):
+                    yield PaddedDataset(s.vectors, self._shard_norms(i),
+                                        s.meta.n_valid, s.meta.row_start)
+                yield from self.delta_shards()
 
-        def gen():
+            return gen()
+        if tier != INT8_TIER:
+            raise ValueError(
+                f"unknown tier {tier!r}; known: {F32_TIER}, {INT8_TIER}")
+        if self._int8 is None:
+            raise RuntimeError(
+                "int8 tier not materialized; call ensure_tier('int8')")
+
+        def gen8():
             for i, s in enumerate(self._shards):
-                yield PaddedDataset(s.vectors, self._shard_norms(i),
-                                    s.meta.n_valid, s.meta.row_start)
-            yield from self.delta_shards()
+                i8 = self._int8[i]
+                norms = np.asarray(i8.norms_sq)
+                start, nv = s.meta.row_start, s.meta.n_valid
+                dead = self._main_tomb[start : start + nv]
+                if dead.any():
+                    norms = norms.copy()
+                    norms[:nv][dead] = np.inf
+                # validity (padding + tombstones) folds onto the exact
+                # quantized norm — the one channel the scan step masks on
+                qnorm = np.where(np.isfinite(norms), i8.qnorm_sq,
+                                 np.float32(np.inf)).astype(np.float32)
+                yield Int8Partition(i8.q, i8.scales, i8.err, qnorm,
+                                    nv, start)
 
-        return gen()
+        return gen8()
+
+    def shard_source(self, tier: str = F32_TIER) -> "_ShardSource":
+        """A restartable iterable over :meth:`iter_shards` at `tier` —
+        every ``iter()`` opens a fresh pass, so it composes with
+        DoubleBufferedStream re-iteration (multi-pass streamed scans)."""
+        if tier not in (F32_TIER, INT8_TIER):
+            raise ValueError(
+                f"unknown tier {tier!r}; known: {F32_TIER}, {INT8_TIER}")
+        return _ShardSource(self, tier)
+
+    def gather_rows(self, ids) -> np.ndarray:
+        """Random-access read of main-shard rows by global id -> (len(ids),
+        padded_dim) f32. The rescore path of the streamed int8 executors:
+        only *candidate* rows of the f32 tier are touched (for mmap stores,
+        these are the random disk reads the certified scan buys down from a
+        full 4 B/element pass). Negative ids (empty queue slots) and
+        out-of-main ids yield zero rows — callers mask them by validity."""
+        ids = np.asarray(ids, dtype=np.int64).reshape(-1)
+        out = np.zeros((ids.shape[0], self.padded_dim), dtype=np.float32)
+        ok = (ids >= 0) & (ids < self.n_shards * self.rows_per_shard)
+        if ok.any():
+            dest = np.flatnonzero(ok)
+            sid = ids[dest] // self.rows_per_shard
+            row = ids[dest] % self.rows_per_shard
+            for s in np.unique(sid):
+                sel = sid == s
+                out[dest[sel]] = self._shards[int(s)].vectors[row[sel]]
+        return out
 
     def __iter__(self) -> Iterator[PaddedDataset]:
         """A DatasetStore is a restartable shard source (each iter() is a
@@ -510,7 +664,7 @@ class DatasetStore:
             raise RuntimeError("int8 tier not materialized; call ensure_tier('int8')")
         cat = lambda field: np.concatenate([getattr(s, field) for s in self._int8])
         return Int8Shard(cat("q"), cat("scales"), cat("err"),
-                         self.int8_resident_norms())
+                         self.int8_resident_norms(), cat("qnorm_sq"))
 
     def int8_resident_norms(self) -> np.ndarray:
         """norms_sq of :meth:`int8_resident` alone — the only int8 channel

@@ -1,5 +1,6 @@
-"""Shared adversarial quantization fixtures (imported by the quantized
-and int8-Pallas test modules, which must exercise the identical hole)."""
+"""Shared adversarial quantization fixtures (imported by the quantized,
+int8-Pallas, and int8-streamed test modules, which must exercise the
+identical holes — every quantized executor faces the same cases)."""
 import numpy as np
 
 
@@ -27,3 +28,55 @@ def aligned_quantization_error():
     x = np.vstack([row[None, :], decoys]).astype(np.float32)
     q = row[None, :].copy()
     return q, x
+
+
+# --------------------------------------------------------------------------
+# The shared quantization case suite: every (queries, dataset, k) triple an
+# int8 executor must answer bit-identically to its f32 oracle. Originally
+# local to tests/test_int8_pallas.py; shared so the streamed int8 executors
+# face the identical cases (ISSUE 5 satellite).
+
+def _gaussian():
+    rng = np.random.default_rng(42)
+    x = rng.standard_normal((1024, 96)).astype(np.float32)
+    q = rng.standard_normal((8, 96)).astype(np.float32)
+    return q, x, 10
+
+
+def _constant_rows():
+    # every row constant: absmax scaling represents it with zero error
+    vals = np.linspace(-3, 3, 64, dtype=np.float32)
+    x = np.repeat(vals[:, None], 96, axis=1)
+    q = np.repeat(np.float32([[0.1], [-2.5]]), 96, axis=1)
+    return q, x, 5
+
+
+def _dynamic_range_12_decades():
+    # rows spanning 12 orders of magnitude: certification is rare, so this
+    # case drives the uncertified fallback path too
+    rng = np.random.default_rng(0)
+    scales = 10.0 ** rng.uniform(-6, 6, size=(1024, 1)).astype(np.float32)
+    x = (rng.standard_normal((1024, 80)) * scales).astype(np.float32)
+    q = rng.standard_normal((6, 80)).astype(np.float32)
+    return q, x, 7
+
+
+def _dim_not_multiple_of_128():
+    rng = np.random.default_rng(1)
+    x = rng.standard_normal((512, 33)).astype(np.float32)
+    q = rng.standard_normal((4, 33)).astype(np.float32)
+    return q, x, 6
+
+
+def _aligned_quantization_error_case():
+    q, x = aligned_quantization_error()
+    return q, x, 1
+
+
+QUANT_CASES = {
+    "gaussian": _gaussian,
+    "constant_rows": _constant_rows,
+    "dynamic_range_12_decades": _dynamic_range_12_decades,
+    "dim_not_multiple_of_128": _dim_not_multiple_of_128,
+    "aligned_quantization_error": _aligned_quantization_error_case,
+}

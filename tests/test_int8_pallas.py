@@ -19,57 +19,22 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from adversarial_cases import QUANT_CASES as CASES
 from repro.core import ExactKNN
 from repro.core.quantized import quantize_dataset
 from repro.kernels.knn.ops import knn, knn_exact_direct, knn_int8
 
 
 def _gaussian():
-    rng = np.random.default_rng(42)
-    x = rng.standard_normal((1024, 96)).astype(np.float32)
-    q = rng.standard_normal((8, 96)).astype(np.float32)
-    return q, x, 10
+    return CASES["gaussian"]()
 
 
 def _constant_rows():
-    # every row constant: absmax scaling represents it with zero error
-    vals = np.linspace(-3, 3, 64, dtype=np.float32)
-    x = np.repeat(vals[:, None], 96, axis=1)
-    q = np.repeat(np.float32([[0.1], [-2.5]]), 96, axis=1)
-    return q, x, 5
-
-
-def _dynamic_range_12_decades():
-    # rows spanning 12 orders of magnitude: certification is rare, so this
-    # case drives the uncertified fallback path too
-    rng = np.random.default_rng(0)
-    scales = 10.0 ** rng.uniform(-6, 6, size=(1024, 1)).astype(np.float32)
-    x = (rng.standard_normal((1024, 80)) * scales).astype(np.float32)
-    q = rng.standard_normal((6, 80)).astype(np.float32)
-    return q, x, 7
-
-
-def _dim_not_multiple_of_128():
-    rng = np.random.default_rng(1)
-    x = rng.standard_normal((512, 33)).astype(np.float32)
-    q = rng.standard_normal((4, 33)).astype(np.float32)
-    return q, x, 6
+    return CASES["constant_rows"]()
 
 
 def _aligned_quantization_error():
-    from adversarial_cases import aligned_quantization_error
-
-    q, x = aligned_quantization_error()
-    return q, x, 1
-
-
-CASES = {
-    "gaussian": _gaussian,
-    "constant_rows": _constant_rows,
-    "dynamic_range_12_decades": _dynamic_range_12_decades,
-    "dim_not_multiple_of_128": _dim_not_multiple_of_128,
-    "aligned_quantization_error": _aligned_quantization_error,
-}
+    return CASES["aligned_quantization_error"]()
 
 
 def _engine_oracle(eng: ExactKNN, q: np.ndarray):

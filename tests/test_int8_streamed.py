@@ -1,0 +1,305 @@
+"""Streamed int8 executors (ISSUE 5 tentpole): the out-of-core quantized
+scan must return bit-identical top-k (values, indices, tie order) to the
+streamed f32 direct-form oracle on every adversarial quantization case,
+compose with filter masks / tombstones / delta shards, re-iterate
+multi-array streams, and report honest bandwidth + prefetch stats.
+
+The oracle is ``repro.core.fqsd.streamed_direct_scan``: the literal f32
+sum-of-squared-differences per shard, merged by lexicographic (value,
+index) sort — chunk- and order-invariant, so it equals a full-sort oracle
+bit for bit. Certified queries go through the executor's candidate-only
+rescore (same formula, same tie order => bitwise equal); uncertified
+queries go through the executor's fallback, which IS this oracle.
+"""
+import numpy as np
+import pytest
+
+from adversarial_cases import QUANT_CASES
+from repro.api import SearchRequest
+from repro.core import ExactKNN, cache_info, clear_executable_cache, plan
+from repro.core.fqsd import streamed_direct_scan
+from repro.core.streaming import DoubleBufferedStream, device_put_partition
+from repro.store import DatasetStore
+
+RNG = np.random.default_rng(5)
+
+
+def _shard_rows(n: int) -> int:
+    """Small enough that every case streams through several shards."""
+    return max(128, (n // 3) // 128 * 128)
+
+
+def _fit_streamed(x, k, directory=None, **kw):
+    store = DatasetStore.from_array(x, rows_per_shard=_shard_rows(x.shape[0]),
+                                    directory=directory)
+    eng = ExactKNN(k=k, device_budget_bytes=1, **kw).fit_store(store)
+    eng.enable_int8()
+    return eng
+
+
+def _oracle(eng, q):
+    """Streamed f32 direct-form oracle over the engine's own store view
+    (same padded geometry, same validity channels)."""
+    return streamed_direct_scan(eng._pad_queries(q),
+                                eng.store.shard_source("f32"), eng.k)
+
+
+# ------------------------------------------------------------ bit-identity
+class TestStreamedInt8Exactness:
+    @pytest.mark.parametrize("name", sorted(QUANT_CASES))
+    @pytest.mark.parametrize("backing", ["mmap", "host"])
+    def test_matches_streamed_f32_oracle_exactly(self, name, backing,
+                                                 tmp_path):
+        q, x, k = QUANT_CASES[name]()
+        directory = str(tmp_path) if backing == "mmap" else None
+        eng = _fit_streamed(x, k, directory=directory)
+        res = eng.search(SearchRequest(queries=q, tier="int8"))
+        expect = ("fqsd-int8-mmap-streamed" if backing == "mmap"
+                  else "fqsd-int8-streamed")
+        assert res.plan.executor == expect
+        assert res.plan.mode == "fqsd-int8-streamed" and res.tier == "int8"
+        oracle = _oracle(eng, q)
+        np.testing.assert_array_equal(np.asarray(res.topk.scores),
+                                      np.asarray(oracle.scores))
+        np.testing.assert_array_equal(np.asarray(res.topk.indices),
+                                      np.asarray(oracle.indices))
+        cert = np.asarray(res.certified)
+        assert cert.shape == (q.shape[0],) and cert.dtype == bool
+
+    def test_uncertified_queries_still_exact(self, tmp_path):
+        """Rows differing far below the quantization error defeat the
+        certificate — the streamed f32 fallback must keep the answer
+        bit-identical to the oracle anyway."""
+        rng = np.random.default_rng(11)
+        base = rng.standard_normal(64).astype(np.float32) * 1e3
+        x = (base[None, :]
+             + 1e-3 * rng.standard_normal((512, 64))).astype(np.float32)
+        q = x[:4] + 1e-4
+        eng = _fit_streamed(x, 5, directory=str(tmp_path))
+        res = eng.search(SearchRequest(queries=q, tier="int8"))
+        assert not np.asarray(res.certified).all()
+        oracle = _oracle(eng, q)
+        np.testing.assert_array_equal(np.asarray(res.topk.scores),
+                                      np.asarray(oracle.scores))
+        np.testing.assert_array_equal(np.asarray(res.topk.indices),
+                                      np.asarray(oracle.indices))
+        # the fallback's second full pass joins the transfer account: int8
+        # main shards + f32 main shards + the (empty here) delta tail
+        assert res.stats["transfers"] == 2 * eng.store.n_shards
+        # ... and the byte account charges the extra 4 B/element pass
+        n_pad = eng.store.n_shards * eng.store.rows_per_shard
+        assert res.stats["bytes_scanned"] > n_pad * 128 * 4
+
+    def test_matches_resident_int8_executor(self):
+        """Streamed and resident quantized executors share one contract."""
+        q, x, k = QUANT_CASES["gaussian"]()
+        streamed = _fit_streamed(x, k)
+        resident = ExactKNN(k=k).fit(x).enable_int8()
+        got_s = streamed.search(SearchRequest(queries=q, tier="int8"))
+        got_r = resident.search(SearchRequest(queries=q, tier="int8"))
+        np.testing.assert_allclose(np.asarray(got_s.topk.scores),
+                                   np.asarray(got_r.topk.scores),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_array_equal(np.asarray(got_s.topk.indices),
+                                      np.asarray(got_r.topk.indices))
+
+
+# --------------------------------------- mutations, masks, and the oracle
+class TestStreamedInt8UnderMutation:
+    def test_mask_tombstones_delta_vs_f64_oracle(self, tmp_path):
+        """filter_mask + delete + upsert composed on the streamed int8
+        path, checked against a float64 brute-force oracle over the live,
+        mask-eligible row set."""
+        x = RNG.standard_normal((700, 40)).astype(np.float32)
+        q = RNG.standard_normal((5, 40)).astype(np.float32)
+        k = 6
+        eng = _fit_streamed(x, k, directory=str(tmp_path))
+        ids = eng.upsert((q[:2] + 1e-4).astype(np.float32))
+        eng.delete([int(ids[0]), 3])
+        mask = np.ones(eng.n_ids, dtype=bool)
+        mask[[7, 11, int(ids[1])]] = False
+        res = eng.search(SearchRequest(queries=q, tier="int8",
+                                       filter_mask=mask))
+        live = np.concatenate([x, (q[:2] + 1e-4).astype(np.float32)])
+        keep = mask.copy()
+        keep[[int(ids[0]), 3]] = False  # tombstones
+        gids = np.arange(live.shape[0])[keep]
+        d = ((q.astype(np.float64)[:, None, :]
+              - live[keep].astype(np.float64)[None, :, :]) ** 2).sum(-1)
+        order = np.argsort(d, axis=1, kind="stable")[:, :k]
+        np.testing.assert_array_equal(np.asarray(res.topk.indices),
+                                      gids[order])
+        np.testing.assert_allclose(np.asarray(res.topk.scores),
+                                   np.take_along_axis(d, order, 1),
+                                   rtol=1e-4, atol=1e-4)
+        # and bit-identical to the equally-masked streamed f32 request
+        ref = eng.search(SearchRequest(queries=q, filter_mask=mask))
+        np.testing.assert_array_equal(np.asarray(res.topk.indices),
+                                      np.asarray(ref.topk.indices))
+
+    def test_upserted_row_found_and_deleted_row_gone(self, tmp_path):
+        x = RNG.standard_normal((500, 24)).astype(np.float32)
+        q = RNG.standard_normal((3, 24)).astype(np.float32)
+        eng = _fit_streamed(x, 4, directory=str(tmp_path))
+        ids = eng.upsert(q[0])
+        res = eng.search(SearchRequest(queries=q[:1], tier="int8"))
+        assert int(res.topk.indices[0, 0]) == int(ids[0])
+        eng.delete(ids)
+        res = eng.search(SearchRequest(queries=q[:1], tier="int8"))
+        assert int(res.topk.indices[0, 0]) != int(ids[0])
+
+
+# ------------------------------------------------- streams and re-iteration
+class TestMultiArrayStreams:
+    def test_int8_shard_source_reiterates(self, tmp_path):
+        """Multi-pass re-iteration of multi-array partitions: a second pass
+        over shard_source('int8') is a fresh scan (ISSUE 2's re-iteration
+        contract extended to the int8 tier's 4-array prefetch slots)."""
+        x = RNG.standard_normal((600, 32)).astype(np.float32)
+        store = DatasetStore.from_array(x, rows_per_shard=256,
+                                        directory=str(tmp_path))
+        store.ensure_tier("int8")
+        s = DoubleBufferedStream(store.shard_source("int8"), depth=2,
+                                 put_fn=device_put_partition)
+        first = [(p.base_index, p.n_valid) for p in s]
+        second = [(p.base_index, p.n_valid) for p in s]
+        assert first == second == [(0, 256), (256, 256), (512, 88)]
+        assert s.transfers == 6 and s.restarts == 1
+        # every prefetch slot carries the full multi-array partition
+        p = next(iter(store.iter_shards("int8")))
+        assert p.q.dtype == np.int8
+        assert p.scales.shape == p.err.shape == p.qnorm.shape == (256,)
+
+    def test_engine_searches_twice_identically(self, tmp_path):
+        x = RNG.standard_normal((600, 32)).astype(np.float32)
+        q = RNG.standard_normal((4, 32)).astype(np.float32)
+        eng = _fit_streamed(x, 5, directory=str(tmp_path))
+        a = eng.search(SearchRequest(queries=q, tier="int8"))
+        b = eng.search(SearchRequest(queries=q, tier="int8"))
+        np.testing.assert_array_equal(np.asarray(a.topk.indices),
+                                      np.asarray(b.topk.indices))
+        assert (np.asarray(a.topk.indices) >= 0).all()
+
+    def test_transfers_restarts_and_prefetch_depth_reported(self, tmp_path):
+        x = RNG.standard_normal((600, 32)).astype(np.float32)
+        q = RNG.standard_normal((4, 32)).astype(np.float32)
+        eng = _fit_streamed(x, 5, directory=str(tmp_path), prefetch_depth=3)
+        assert eng._ctx().prefetch_depth == 3
+        res = eng.search(SearchRequest(queries=q, tier="int8"))
+        assert res.stats["transfers"] == eng.store.n_shards  # main shards
+        assert res.stats["restarts"] == 0
+        f32 = eng.search(SearchRequest(queries=q))
+        assert f32.stats["transfers"] == eng.store.n_shards
+
+
+# ------------------------------------------------------- planner + caching
+class TestStreamedInt8Planning:
+    def _meta(self, eng, tier):
+        return eng.store.meta(device_resident=False, tier=tier)
+
+    def test_planner_keeps_int8_tier_for_non_resident_stores(self, tmp_path):
+        x = RNG.standard_normal((600, 32)).astype(np.float32)
+        mmap_eng = _fit_streamed(x, 5, directory=str(tmp_path))
+        host_eng = _fit_streamed(x, 5)
+        p = plan((4, 128), self._meta(mmap_eng, "int8"), mmap_eng.config(),
+                 "fqsd")
+        assert p.executor == "fqsd-int8-mmap-streamed"
+        assert p.mode == "fqsd-int8-streamed" and p.tier == "int8"
+        p = plan((4, 128), self._meta(host_eng, "int8"), host_eng.config(),
+                 "fqsd")
+        assert p.executor == "fqsd-int8-streamed" and p.tier == "int8"
+
+    def test_non_l2_streams_fall_back_to_f32(self):
+        x = RNG.standard_normal((600, 32)).astype(np.float32)
+        eng = ExactKNN(k=5, metric="ip", device_budget_bytes=1).fit_store(
+            DatasetStore.from_array(x, rows_per_shard=256), resident=False)
+        p = plan((4, 128), self._meta(eng, "int8"), eng.config(), "fqsd")
+        assert p.executor == "fqsd-mmap-streamed" and p.tier == "f32"
+
+    def test_int8_requires_enable_on_streamed_engines(self, tmp_path):
+        x = RNG.standard_normal((600, 32)).astype(np.float32)
+        store = DatasetStore.from_array(x, rows_per_shard=256,
+                                        directory=str(tmp_path))
+        eng = ExactKNN(k=5, device_budget_bytes=1).fit_store(store)
+        assert not eng.has_int8
+        with pytest.raises(RuntimeError, match="enable_int8"):
+            eng.search(SearchRequest(queries=x[:2], tier="int8"))
+        eng.enable_int8()
+        assert eng.has_int8
+
+    def test_repeat_searches_never_recompile(self, tmp_path):
+        """No-reflashing on the streamed quantized path: the bound step,
+        rescore, and delta/fallback steps all resolve through the
+        executable cache, so repeated searches (and searches after
+        mutations) compile nothing new."""
+        x = RNG.standard_normal((600, 32)).astype(np.float32)
+        q = RNG.standard_normal((4, 32)).astype(np.float32)
+        eng = _fit_streamed(x, 5, directory=str(tmp_path))
+        clear_executable_cache()
+        eng.search(SearchRequest(queries=q, tier="int8"))
+        warm = cache_info()["misses"]
+        eng.search(SearchRequest(queries=q, tier="int8"))
+        assert cache_info()["misses"] == warm
+        eng.delete([0])  # tombstone = runtime data, not a shape
+        eng.search(SearchRequest(queries=q, tier="int8"))
+        assert cache_info()["misses"] == warm
+
+    def test_rescore_factor_rides_the_cache_key(self, tmp_path):
+        """Two engines over one store with different rescore budgets must
+        not share queue executables — and both stay exact."""
+        x = RNG.standard_normal((600, 32)).astype(np.float32)
+        q = RNG.standard_normal((4, 32)).astype(np.float32)
+        a = _fit_streamed(x, 5, directory=str(tmp_path), rescore_factor=2)
+        b = ExactKNN(k=5, device_budget_bytes=1,
+                     rescore_factor=8).fit_store(a.store)
+        ra = a.search(SearchRequest(queries=q, tier="int8"))
+        rb = b.search(SearchRequest(queries=q, tier="int8"))
+        assert ra.plan.cache_key() != rb.plan.cache_key()
+        np.testing.assert_array_equal(np.asarray(ra.topk.indices),
+                                      np.asarray(rb.topk.indices))
+
+
+# ------------------------------------------------------- bandwidth account
+class TestBytesScanned:
+    def test_streamed_int8_moves_fraction_of_f32_bytes(self, tmp_path):
+        """The whole point: the quantized streamed scan reports codes +
+        per-row channels + candidate-row rescore reads, strictly below the
+        4 B/element f32 pass (the 0.3x acceptance ratio is asserted at
+        bench scale, where the candidate gather amortizes)."""
+        x = RNG.standard_normal((1536, 128)).astype(np.float32)
+        q = RNG.standard_normal((4, 128)).astype(np.float32)
+        eng = _fit_streamed(x, 8, directory=str(tmp_path))
+        r8 = eng.search(SearchRequest(queries=q, tier="int8"))
+        r32 = eng.search(SearchRequest(queries=q))
+        n_pad, d_pad = eng.store.n_shards * eng.store.rows_per_shard, 128
+        assert r32.stats["bytes_scanned"] == n_pad * d_pad * 4
+        assert np.asarray(r8.certified).all()
+        codes_and_meta = n_pad * (d_pad + 12)
+        gather = r8.stats["bytes_scanned"] - codes_and_meta
+        assert 0 < gather <= 4 * eng.k * eng.rescore_factor * q.shape[0] * d_pad * 4
+        assert r8.stats["bytes_scanned"] < 0.5 * r32.stats["bytes_scanned"]
+
+
+# ------------------------------------------------------------- scheduling
+class TestStreamedInt8Serving:
+    def test_deep_backlog_routes_out_of_core_scans_to_int8(self, tmp_path):
+        """The bandwidth-aware hook covers streamed plans: a non-resident
+        engine with the int8 tier serves deep backlogs through the
+        streamed quantized executor, and stats() reports the prefetcher's
+        transfers."""
+        from repro.serving import AdaptiveScheduler
+
+        x = RNG.standard_normal((600, 24)).astype(np.float32)
+        eng = _fit_streamed(x, 4, directory=str(tmp_path))
+        s = AdaptiveScheduler(eng, policy="throughput", int8_min_depth=4)
+        reqs = [SearchRequest(queries=x[i, :24], rid=i, arrival_s=0.0)
+                for i in range(12)]
+        results = list(s.serve(iter(reqs)))
+        assert {r.mode for r in results} == {"fqsd-int8"}
+        assert {r.executor for r in results} == {"fqsd-int8-mmap-streamed"}
+        for r in results:
+            assert int(r.indices[0]) == r.rid  # rows find themselves
+        st = s.stats()
+        assert st["per_plan"]["fqsd-int8"]["tier"] == ["int8"]
+        assert st["transfers"] > 0 and st["restarts"] == 0
+        assert st["bytes_scanned"]["int8"] > 0

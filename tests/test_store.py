@@ -64,6 +64,58 @@ class TestManifest:
             DatasetStore.open(str(tmp_path), verify=True)
 
 
+class TestInt8ShardIntegrity:
+    """Manifest CRC32 coverage of the persisted int8 tier (ISSUE 5
+    satellite): corruption of either shard file — the raw codes memmap or
+    the per-row meta npz — must fail a verified open loudly."""
+
+    def _write(self, data, tmp_path):
+        x, _ = data
+        return DatasetStore.from_array(x, rows_per_shard=1024,
+                                       directory=str(tmp_path),
+                                       tiers=("f32", "int8"))
+
+    def test_corrupted_int8_codes_detected(self, data, tmp_path):
+        self._write(data, tmp_path)
+        DatasetStore.open(str(tmp_path), verify=True)  # pristine: fine
+        victim = tmp_path / "shard_00001.int8.bin"
+        raw = bytearray(victim.read_bytes())
+        raw[500] ^= 0xFF
+        victim.write_bytes(bytes(raw))
+        with pytest.raises(ValueError, match="int8 codes"):
+            DatasetStore.open(str(tmp_path), verify=True)
+        # unverified opens stay lazy over the codes (serving-path contract)
+        DatasetStore.open(str(tmp_path))
+
+    def test_corrupted_int8_meta_npz_detected(self, data, tmp_path):
+        self._write(data, tmp_path)
+        victim = tmp_path / "shard_00002.int8.npz"
+        raw = bytearray(victim.read_bytes())
+        raw[len(raw) // 2] ^= 0xFF
+        victim.write_bytes(bytes(raw))
+        with pytest.raises(ValueError, match="corrupt|checksum"):
+            DatasetStore.open(str(tmp_path), verify=True)
+
+    def test_int8_roundtrip_serves_without_touching_f32(self, data, tmp_path):
+        """Reopened int8 shards come back as read-only memmaps over the
+        codes file with the persisted exact quantized norm — the value the
+        bound soundness requires, not a re-derivation from f32 bytes."""
+        from repro.core.quantized import quantized_norm_sq
+
+        store = self._write(data, tmp_path)
+        reopened = DatasetStore.open(str(tmp_path), verify=True)
+        assert reopened.has_tier("int8")
+        for orig, back in zip(store._int8, reopened._int8):
+            assert isinstance(back.q, np.memmap) and back.q.dtype == np.int8
+            np.testing.assert_array_equal(np.asarray(orig.q),
+                                          np.asarray(back.q))
+            np.testing.assert_array_equal(orig.qnorm_sq, back.qnorm_sq)
+            np.testing.assert_array_equal(
+                back.qnorm_sq,
+                np.asarray(quantized_norm_sq(np.asarray(back.q),
+                                             back.scales)))
+
+
 # ------------------------------------------------------- mmap round-trip
 class TestMmapRoundTrip:
     def test_reopened_store_matches_in_memory_f32(self, data, tmp_path):
