@@ -17,7 +17,12 @@ import numpy as np
 from benchmarks.common import emit, time_samples
 from repro.core import ExactKNN
 from repro.store import DatasetStore
-from repro.tuning import AutotuneCache, autotune_knn, set_default_cache
+from repro.tuning import (
+    AutotuneCache,
+    autotune_knn,
+    probe_pallas_capability,
+    set_default_cache,
+)
 
 K = 10
 M = 16  # query batch shared by every executor row
@@ -52,6 +57,22 @@ def run(quick: bool = False) -> None:
     x = rng.standard_normal((n, d)).astype(np.float32)
     q = rng.standard_normal((M, d)).astype(np.float32)
 
+    # probe + persist the compile-capability verdict, then plan this
+    # section's fused rows against a view WITHOUT the verdict: this bench
+    # measures the Pallas executors on purpose (interpret mode included),
+    # while serving planners on the same host honor the persisted veto.
+    real_cache = AutotuneCache.for_device()
+    verdict = probe_pallas_capability(cache=real_cache)
+    emit("kernels/pallas_capability", 0.0, f"compiled={verdict}",
+         compiled=bool(verdict))
+    set_default_cache(real_cache.without_capability())
+    try:
+        _run_rows(quick, n, d, x, q, real_cache)
+    finally:
+        set_default_cache(None)
+
+
+def _run_rows(quick, n, d, x, q, real_cache) -> None:
     # ---- resident XLA executors (f32 + int8 tiers) ----------------------
     eng = ExactKNN(k=K, n_partitions=4).fit(x)
     _emit_executor(eng, "fdsq-xla", lambda: eng.query(q))
@@ -103,37 +124,35 @@ def run(quick: bool = False) -> None:
     # ---- autotuned vs default blocks -----------------------------------
     # the "default" row must plan against an EMPTY cache (a previously
     # persisted device cache would silently make this tuned-vs-tuned and
-    # hide autotune regressions); the sweep + tuned row then use the real
-    # per-device cache so CI machines accumulate warm starts.
+    # hide autotune regressions); the sweep writes to the real per-device
+    # cache so CI machines accumulate warm starts, and the tuned row plans
+    # against a fresh capability-free view of it (fused rows must still
+    # plan Pallas here even when the persisted verdict is False).
     set_default_cache(AutotuneCache(path=None))
-    try:
-        fresh = ExactKNN(k=K, backend="pallas").fit(x)
-        p_cold = fresh.plan_for("fqsd", M)
-        assert (p_cold.block_m, p_cold.block_n, p_cold.block_d) == (0, 0, 0)
-        t = time_samples(fresh.query_batch, q, repeats=REPEATS)
-        p50_d, p99_d, qps_d = _pcts(t)
-        blocks_d = fresh.last_kernel_stats["blocks"]
-        emit("kernels/blocks_default", p50_d, f"blocks={blocks_d}",
-             executor="fdsq-pallas", tier="f32", qps=qps_d, p50_us=p50_d,
-             p99_us=p99_d, blocks=list(blocks_d), tuned=False)
+    fresh = ExactKNN(k=K, backend="pallas").fit(x)
+    p_cold = fresh.plan_for("fqsd", M)
+    assert (p_cold.block_m, p_cold.block_n, p_cold.block_d) == (0, 0, 0)
+    t = time_samples(fresh.query_batch, q, repeats=REPEATS)
+    p50_d, p99_d, qps_d = _pcts(t)
+    blocks_d = fresh.last_kernel_stats["blocks"]
+    emit("kernels/blocks_default", p50_d, f"blocks={blocks_d}",
+         executor="fdsq-pallas", tier="f32", qps=qps_d, p50_us=p50_d,
+         p99_us=p99_d, blocks=list(blocks_d), tuned=False)
 
-        cache = AutotuneCache.for_device()
-        set_default_cache(cache)
-        best, timings = autotune_knn(
-            p_cold.m, p_cold.padded_rows, p_cold.padded_dim, k=K,
-            cache=cache, repeats=1 if quick else 2,
-            max_candidates=4 if quick else None,
-        )
-        tuned_eng = ExactKNN(k=K, backend="pallas").fit(x)
-        p_tuned = tuned_eng.plan_for("fqsd", M)
-        t = time_samples(tuned_eng.query_batch, q, repeats=REPEATS)
-        p50_t, p99_t, qps_t = _pcts(t)
-        emit("kernels/blocks_autotuned", p50_t,
-             f"blocks={tuple(best)};candidates={len(timings)}",
-             executor="fdsq-pallas", tier="f32", qps=qps_t, p50_us=p50_t,
-             p99_us=p99_t, blocks=list(best), tuned=True,
-             n_candidates=len(timings),
-             planner_blocks=[p_tuned.block_m, p_tuned.block_n,
-                             p_tuned.block_d])
-    finally:
-        set_default_cache(None)
+    best, timings = autotune_knn(
+        p_cold.m, p_cold.padded_rows, p_cold.padded_dim, k=K,
+        cache=real_cache, repeats=1 if quick else 2,
+        max_candidates=4 if quick else None,
+    )
+    set_default_cache(real_cache.without_capability())
+    tuned_eng = ExactKNN(k=K, backend="pallas").fit(x)
+    p_tuned = tuned_eng.plan_for("fqsd", M)
+    t = time_samples(tuned_eng.query_batch, q, repeats=REPEATS)
+    p50_t, p99_t, qps_t = _pcts(t)
+    emit("kernels/blocks_autotuned", p50_t,
+         f"blocks={tuple(best)};candidates={len(timings)}",
+         executor="fdsq-pallas", tier="f32", qps=qps_t, p50_us=p50_t,
+         p99_us=p99_t, blocks=list(best), tuned=True,
+         n_candidates=len(timings),
+         planner_blocks=[p_tuned.block_m, p_tuned.block_n,
+                         p_tuned.block_d])

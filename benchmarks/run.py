@@ -16,7 +16,10 @@ certification rate) so the perf trajectory is trackable across PRs.
 ``artifacts/bench/BENCH_kernels.json`` is the CI artifact tracking the
 execution-layer trajectory; a convenience mirror is also written to
 ``BENCH_kernels.json`` at the repo root. Both live in .gitignore — they
-are regenerated on every run and must never be committed.
+are regenerated on every run and must never be committed. Every run is
+also appended to ``<json-dir>/trajectory.sqlite`` (see
+``benchmarks.trajectory``), whose compare CLI is CI's regression gate
+against the previous run's ``BENCH_store.json`` artifact.
 """
 from __future__ import annotations
 
@@ -70,6 +73,15 @@ def main(argv=None) -> int:
             print(f"{name},0,ERROR", flush=True)
     for path in common.write_json(args.json_dir, quick=args.quick):
         print(f"# wrote {path}", file=sys.stderr)
+    try:
+        from benchmarks import trajectory
+        db = trajectory.record(common.RESULTS, quick=args.quick,
+                               db_path=os.path.join(args.json_dir,
+                                                    "trajectory.sqlite"))
+        print(f"# recorded trajectory in {db}", file=sys.stderr)
+    except Exception:
+        # trajectory recording is observability — never fail the bench run
+        traceback.print_exc()
     kern_src = os.path.join(args.json_dir, "BENCH_kernels.json")
     if ("kernels" in common.RESULTS and os.path.exists(kern_src)
             and os.path.abspath(kern_src) != os.path.abspath(args.kernels_json)):

@@ -1,0 +1,206 @@
+"""Bench trajectory memory: a small SQLite DB of every benchmark run plus
+a regression gate over BENCH_<section>.json artifacts.
+
+Two pieces (ISSUE 6 satellite):
+
+* :func:`record` — called by ``benchmarks/run.py`` after each run: appends
+  one ``runs`` row (timestamp, git revision, quick flag) and one ``rows``
+  row per emitted benchmark case into
+  ``artifacts/bench/trajectory.sqlite``. The DB is append-only history —
+  the local analogue of CI's artifact trail, queryable with plain sqlite3.
+
+* :func:`compare` / the CLI — diff a fresh ``BENCH_store.json`` against a
+  previous artifact and fail (exit 1) when p50 or bytes-moved-per-query
+  regress by more than ``--threshold`` (default 20%). CI restores the
+  previous artifact from the cache, runs the gate, then saves the new one:
+
+      python -m benchmarks.trajectory --check artifacts/bench/BENCH_store.json \\
+          --against prev/BENCH_store.json [--threshold 0.2]
+
+  Rows are matched by ``name``; rows present on only one side are reported
+  but never fail the gate (new benchmarks must not break CI), and
+  ``--quick`` runs are only ever compared against other quick runs (the
+  JSON carries the flag).
+"""
+from __future__ import annotations
+
+import argparse
+import datetime
+import json
+import os
+import sqlite3
+import subprocess
+import sys
+
+DEFAULT_DB = os.path.join("artifacts", "bench", "trajectory.sqlite")
+
+_SCHEMA = """
+CREATE TABLE IF NOT EXISTS runs (
+    id INTEGER PRIMARY KEY AUTOINCREMENT,
+    created_utc TEXT NOT NULL,
+    git_rev TEXT,
+    quick INTEGER NOT NULL
+);
+CREATE TABLE IF NOT EXISTS rows (
+    run_id INTEGER NOT NULL REFERENCES runs(id),
+    section TEXT NOT NULL,
+    name TEXT NOT NULL,
+    us_per_call REAL,
+    derived TEXT,
+    extra TEXT
+);
+CREATE INDEX IF NOT EXISTS rows_by_name ON rows (name, run_id);
+"""
+
+
+def _git_rev() -> str | None:
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+        )
+        return out.stdout.strip() or None
+    except (OSError, subprocess.SubprocessError):
+        return None
+
+
+def record(results: dict[str, list[dict]], quick: bool = False,
+           db_path: str = DEFAULT_DB) -> str:
+    """Append one benchmark run (``benchmarks.common.RESULTS`` shaped) to
+    the trajectory DB; returns the DB path. Tolerant by design: recording
+    is observability, so a broken DB must never fail the benchmark run —
+    callers may wrap this, the CLI path does."""
+    os.makedirs(os.path.dirname(db_path) or ".", exist_ok=True)
+    con = sqlite3.connect(db_path)
+    try:
+        con.executescript(_SCHEMA)
+        cur = con.execute(
+            "INSERT INTO runs (created_utc, git_rev, quick) VALUES (?, ?, ?)",
+            (datetime.datetime.now(datetime.timezone.utc).isoformat(),
+             _git_rev(), int(bool(quick))),
+        )
+        run_id = cur.lastrowid
+        for section, rows in results.items():
+            for row in rows:
+                extra = {key: v for key, v in row.items()
+                         if key not in ("name", "us_per_call", "derived")}
+                con.execute(
+                    "INSERT INTO rows (run_id, section, name, us_per_call, "
+                    "derived, extra) VALUES (?, ?, ?, ?, ?, ?)",
+                    (run_id, section, row.get("name", ""),
+                     float(row.get("us_per_call", 0.0)),
+                     str(row.get("derived", "")),
+                     json.dumps(extra, sort_keys=True)),
+                )
+        con.commit()
+    finally:
+        con.close()
+    return db_path
+
+
+# ----------------------------------------------------------- regression gate
+def _metrics(row: dict) -> dict[str, float]:
+    """The gated metrics of one bench row: p50 per call and dataset bytes
+    moved per query (lower = better for both)."""
+    out: dict[str, float] = {}
+    p50 = row.get("p50_us", row.get("us_per_call"))
+    if p50:
+        out["p50_us"] = float(p50)
+    if row.get("bytes_scanned") and row.get("m"):
+        out["bytes_per_query"] = float(row["bytes_scanned"]) / float(row["m"])
+    return out
+
+
+def compare(new_path: str, old_path: str,
+            threshold: float = 0.2) -> tuple[list[str], list[str]]:
+    """Diff two BENCH_<section>.json files; returns (regressions, notes).
+
+    A regression is a matched row whose p50 or bytes/query grew by more
+    than `threshold` (relative). Unmatched rows and quick-vs-full
+    mismatches land in notes only — the gate compares like with like or
+    not at all.
+    """
+    with open(new_path) as f:
+        new = json.load(f)
+    with open(old_path) as f:
+        old = json.load(f)
+    notes: list[str] = []
+    if bool(new.get("quick")) != bool(old.get("quick")):
+        notes.append(
+            f"skipping gate: quick={new.get('quick')} vs "
+            f"baseline quick={old.get('quick')} (not comparable)"
+        )
+        return [], notes
+    old_rows = {r["name"]: r for r in old.get("rows", [])}
+    regressions: list[str] = []
+    for row in new.get("rows", []):
+        prev = old_rows.pop(row["name"], None)
+        if prev is None:
+            notes.append(f"new row (not gated): {row['name']}")
+            continue
+        prev_m, new_m = _metrics(prev), _metrics(row)
+        for metric in ("p50_us", "bytes_per_query"):
+            if metric not in prev_m or metric not in new_m:
+                continue
+            if prev_m[metric] <= 0:
+                continue
+            rel = new_m[metric] / prev_m[metric] - 1.0
+            if rel > threshold:
+                regressions.append(
+                    f"{row['name']}: {metric} regressed "
+                    f"{prev_m[metric]:.1f} -> {new_m[metric]:.1f} "
+                    f"(+{rel * 100:.1f}% > {threshold * 100:.0f}%)"
+                )
+    for name in old_rows:
+        notes.append(f"row disappeared (not gated): {name}")
+    return regressions, notes
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="bench trajectory: record runs, gate regressions")
+    ap.add_argument("--check", metavar="NEW_JSON",
+                    help="fresh BENCH_<section>.json to gate")
+    ap.add_argument("--against", metavar="OLD_JSON",
+                    help="previous artifact to compare against")
+    ap.add_argument("--threshold", type=float, default=0.2,
+                    help="relative regression tolerance (default 0.2 = 20%%)")
+    ap.add_argument("--db", default=DEFAULT_DB,
+                    help="trajectory DB path (for --record)")
+    ap.add_argument("--record", metavar="JSON", nargs="*",
+                    help="record these BENCH_<section>.json files into the DB")
+    args = ap.parse_args(argv)
+
+    if args.record:
+        results: dict[str, list[dict]] = {}
+        quick = False
+        for path in args.record:
+            with open(path) as f:
+                payload = json.load(f)
+            results[payload["section"]] = payload.get("rows", [])
+            quick = quick or bool(payload.get("quick"))
+        print(f"recorded into {record(results, quick=quick, db_path=args.db)}")
+
+    if args.check:
+        if not args.against:
+            print("--check requires --against", file=sys.stderr)
+            return 2
+        if not os.path.exists(args.against):
+            # first run on a fresh cache: nothing to gate against
+            print(f"no baseline at {args.against}; gate skipped")
+            return 0
+        regressions, notes = compare(args.check, args.against,
+                                     threshold=args.threshold)
+        for n in notes:
+            print(f"note: {n}")
+        if regressions:
+            for r in regressions:
+                print(f"REGRESSION: {r}", file=sys.stderr)
+            return 1
+        print(f"gate passed: no metric regressed more than "
+              f"{args.threshold * 100:.0f}%")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

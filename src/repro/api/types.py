@@ -56,6 +56,16 @@ class SearchRequest:
                  Folded onto the executors' existing +inf-norm masking
                  path, so filtering is runtime data — same shapes, no
                  recompilation.
+    prefetch_depth
+                 streamed-scan double-buffer depth for this request;
+                 None = the plan's tuned value, else the engine's default.
+                 Must be >= 1 (validated here, not deep in the stream).
+    spec_trigger streamed-int8 speculation trigger: the shard fraction
+                 after which the candidate gather starts on a background
+                 thread. Must be in [0, 1]; 1.0 disables speculation;
+                 None = the plan's tuned value, else the executor default.
+                 Results are bit-identical at every setting — the trigger
+                 only reschedules reads.
     rid          caller's request id (serving envelope; echoed on results).
     arrival_s    simulated arrival stamp for the discrete-event scheduler.
     """
@@ -67,6 +77,8 @@ class SearchRequest:
     mode_hint: ModeHint = "auto"
     deadline_ms: float | None = None
     filter_mask: Any | None = None
+    prefetch_depth: int | None = None
+    spec_trigger: float | None = None
     rid: int | None = None
     arrival_s: float = 0.0
 
@@ -81,6 +93,16 @@ class SearchRequest:
             raise ValueError(
                 "mode_hint must be 'auto', 'fdsq' or 'fqsd', "
                 f"got {self.mode_hint!r}"
+            )
+        if self.prefetch_depth is not None and self.prefetch_depth < 1:
+            raise ValueError(
+                f"prefetch_depth must be >= 1, got {self.prefetch_depth}"
+            )
+        if self.spec_trigger is not None and not (
+                0.0 <= self.spec_trigger <= 1.0):
+            raise ValueError(
+                "spec_trigger must be a shard fraction in [0, 1] "
+                f"(1 disables speculation), got {self.spec_trigger}"
             )
 
     @property
@@ -111,7 +133,11 @@ class SearchResult:
     kernel_stats  fused-kernel observability (pruning skip rate, resolved
                   tile shapes); None for non-Pallas executors.
     stats         per-request accounting: bytes_scanned, dispatch_ms,
-                  batched, deadline_ms/latency_ms (serving), k, metric, ...
+                  batched, deadline_ms/latency_ms (serving), k, metric;
+                  streamed int8 adds the wall-time split (scan_ms /
+                  gather_ms / rescore_ms) and a "speculation" block
+                  (trigger, rows_speculated, rows_topped_up, rows_wasted —
+                  wasted fetches are charged to bytes_scanned).
     rid           echo of the request id (serving envelope).
     """
 

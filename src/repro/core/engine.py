@@ -150,8 +150,16 @@ class _MaskedShardSource:
 
     def gather_rows(self, ids) -> np.ndarray:
         # candidate indices already passed the masked scan: excluded rows
-        # carry +inf bounds / index -1, so no mask re-check is needed here
+        # carry +inf bounds / index -1, so no mask re-check is needed here.
+        # Thread-safe like the store's own gather (pure numpy/memmap reads)
+        # — the speculative gather thread calls this mid-scan.
         return self._store.gather_rows(ids)
+
+    @property
+    def n_shards(self) -> int:
+        # the streamed executors size their speculation trigger by shard
+        # count; masking never changes the shard layout
+        return self._store.n_shards
 
 
 class _MaskedTierSource:
@@ -176,15 +184,25 @@ class ExactKNN:
         mesh: jax.sharding.Mesh | None = None,
         mesh_axes: Sequence[str] = ("data", "model"),
         dtype=jnp.float32,
-        rescore_factor: int = 4,
+        rescore_factor: int | None = None,
         device_budget_bytes: int | None = None,
-        prefetch_depth: int = 2,
+        prefetch_depth: int | None = None,
+        spec_trigger: float | None = None,
     ):
         validate_metric(metric)
         if k < 1:
             raise ValueError("k must be >= 1")
-        if prefetch_depth < 1:
+        if prefetch_depth is not None and prefetch_depth < 1:
             raise ValueError(f"prefetch_depth must be >= 1, got {prefetch_depth}")
+        if spec_trigger is not None and not (0.0 <= spec_trigger <= 1.0):
+            raise ValueError(
+                "spec_trigger must be a shard fraction in [0, 1] "
+                f"(1 disables speculation), got {spec_trigger}"
+            )
+        if rescore_factor is not None and rescore_factor < 1:
+            raise ValueError(
+                f"rescore_factor must be >= 1, got {rescore_factor}"
+            )
         self.k = int(k)
         self.metric = metric
         self.backend: Backend = backend
@@ -193,12 +211,22 @@ class ExactKNN:
         self.mesh = mesh
         self.mesh_axes = tuple(mesh_axes)
         self.dtype = dtype
-        self.rescore_factor = int(rescore_factor)
+        #: int8 exact-rescore budget (x k). None = default 4, and the
+        #: pipeline autotuner may override it per plan; an explicit value
+        #: is PINNED — tuning never overrides a caller's budget.
+        self.rescore_factor = 4 if rescore_factor is None else int(rescore_factor)
+        self._rescore_pinned = rescore_factor is not None
         self.device_budget_bytes = device_budget_bytes
         #: streamed-scan double-buffer depth (2 = the paper's two memory
         #: banks; deeper trades host memory for jitter tolerance). Threaded
-        #: into every ExecContext — launch/serve.py exposes --prefetch-depth
-        self.prefetch_depth = int(prefetch_depth)
+        #: into every ExecContext — launch/serve.py exposes --prefetch-depth.
+        #: None = default 2, overridable by a tuned plan; explicit = pinned.
+        self.prefetch_depth = 2 if prefetch_depth is None else int(prefetch_depth)
+        self._prefetch_pinned = prefetch_depth is not None
+        #: streamed-int8 speculation trigger (shard fraction after which
+        #: the candidate gather starts on a background thread; 1.0 = no
+        #: speculation). None = tuned plan value, else the executor default.
+        self.spec_trigger = spec_trigger
         self._store = None  # repro.store.DatasetStore
         self._resident = True
         # cos + fused backend: the resident view is normalized at fit time
@@ -491,6 +519,7 @@ class ExactKNN:
             sharded=self.mesh is not None,
             mesh_axes=self.mesh_axes,
             rescore_factor=self.rescore_factor,
+            rescore_pinned=self._rescore_pinned,
             dtype=jnp.dtype(self.dtype).name,
         )
 
@@ -521,11 +550,13 @@ class ExactKNN:
         d = self._padded_dim()
         return plan_fn((m, d), self.dataset_meta(tier=tier), self.config(), mode, **kw)
 
-    def _ctx(self, prefetch_depth: int | None = None) -> ExecContext:
+    def _ctx(self, prefetch_depth: int | None = None,
+             spec_trigger: float | None = None) -> ExecContext:
         return ExecContext(
             mesh=self.mesh, mesh_axes=self.mesh_axes,
             prefetch_depth=(self.prefetch_depth if prefetch_depth is None
                             else prefetch_depth),
+            spec_trigger=spec_trigger,
             cos_prenormalized=self._cos_prenormalized,
         )
 
@@ -649,7 +680,20 @@ class ExactKNN:
             )
             source = (self._store if mask is None
                       else _MaskedShardSource(self._store, mask))
-            out = self._run(p, qv, source)
+            # pipeline-knob precedence: request pin > engine pin > tuned
+            # plan > engine default (the executor resolves a None trigger
+            # against plan.spec_trigger, then DEFAULT_SPEC_TRIGGER)
+            if request.prefetch_depth is not None:
+                prefetch = int(request.prefetch_depth)
+            elif self._prefetch_pinned or p.prefetch_depth <= 0:
+                prefetch = self.prefetch_depth
+            else:
+                prefetch = int(p.prefetch_depth)
+            trigger = (request.spec_trigger
+                       if request.spec_trigger is not None
+                       else self.spec_trigger)
+            out = self._run(p, qv, source, prefetch_depth=prefetch,
+                            spec_trigger=trigger)
             # streamed scans fold delta shards (mask applied) in-pass
         else:
             p = plan_fn(
@@ -682,6 +726,11 @@ class ExactKNN:
         if ctx is not None and ctx.stream_stats is not None:
             stats["transfers"] = ctx.stream_stats.get("transfers", 0)
             stats["restarts"] = ctx.stream_stats.get("restarts", 0)
+        if ctx is not None and ctx.phase_ms is not None:
+            # the streamed int8 wall-time split (scan / gather / rescore)
+            stats.update(ctx.phase_ms)
+        if ctx is not None and ctx.speculation is not None:
+            stats["speculation"] = dict(ctx.speculation)
         if request.deadline_ms is not None:
             stats["deadline_ms"] = request.deadline_ms
         return SearchResult(

@@ -46,8 +46,18 @@ from repro.core.quantized import (
     knn_quantized,
     make_int8_bound_step,
 )
-from repro.core.streaming import DoubleBufferedStream, device_put_partition
+from repro.core.streaming import (
+    DoubleBufferedStream,
+    SpeculativeGather,
+    device_put_partition,
+)
 from repro.core.topk import TopK, sort_pairs
+
+#: Default speculation trigger for the streamed int8 executors: start the
+#: background candidate gather once this fraction of shards has merged.
+#: 1.0 disables speculation (gather strictly after the scan, the pre-ISSUE-6
+#: schedule); tuned per device by repro.tuning.autotune_pipeline.
+DEFAULT_SPEC_TRIGGER = 0.5
 
 
 @dataclasses.dataclass
@@ -74,6 +84,16 @@ class ExecContext:
     #: (streamed int8: codes + per-row channels + candidate-row rescore
     #: reads); None = the engine derives bytes from the plan
     bytes_scanned: int | None = None
+    #: speculation trigger override for the streamed int8 executors; None
+    #: defers to the plan's tuned value, then DEFAULT_SPEC_TRIGGER
+    spec_trigger: float | None = None
+    #: set by the streamed int8 executors: {"scan_ms", "gather_ms",
+    #: "rescore_ms"} — the wall-time split of the pipelined search
+    phase_ms: dict | None = None
+    #: set by the streamed int8 executors: {"trigger", "rows_speculated",
+    #: "rows_topped_up", "rows_wasted"} — wasted speculative fetches are
+    #: also charged to bytes_scanned (honest traffic accounting)
+    speculation: dict | None = None
 
 
 class TieredResident(NamedTuple):
@@ -416,36 +436,54 @@ def _int8_streamed(plan, queries, store, ctx) -> TopK:
     """Shared body of the streamed int8 executors (host-RAM and mmap
     shards run the identical schedule; the plan label tells them apart).
 
-    Three phases, bandwidth-first (paper sections 3.3 + 5 combined):
+    Three phases, bandwidth-first and two-phase-pipelined (paper sections
+    3.3 + 5 combined; ISSUE 6 tentpole):
 
     1. **1 B/element scan** — the int8 tier streams shard by shard through
        the double buffer as multi-array partitions (codes + scales + err +
        exact quantized norms in one prefetch slot), each merged into a
        global widened candidate queue of r+1 certified lower bounds per
        query (r = rescore_factor * k; the +1 entry is the certificate's
-       view of the best row OUTSIDE the candidate set).
-    2. **candidate-only rescore** — ONLY the r candidate rows per query are
-       gathered from the f32 tier (deduplicated random reads; for mmap
-       stores these are the only f32 bytes the whole search touches) and
-       rescored with the direct-form exact distance; live delta rows (no
+       view of the best row OUTSIDE the candidate set). Once a tuned
+       fraction of shards (the *speculation trigger*) has merged, a
+       snapshot of the queue is handed to a background
+       :class:`SpeculativeGather` thread that dedups it and reads its f32
+       rows while the device drains the remaining shard steps — the
+       random-read gather hides under the scan tail instead of extending
+       it.
+    2. **candidate-only rescore** — the FINAL queue's r candidate rows per
+       query are gathered from the f32 tier (deduplicated random reads;
+       for mmap stores these are the only f32 bytes the whole search
+       touches): speculated rows are reused by id, only ids the late
+       shards added are topped up, and wasted speculative fetches are
+       counted into bytes_scanned. The rescore runs the direct-form exact
+       distance over exactly the final queue — bit-identical to the
+       unspeculated schedule by construction. Live delta rows (no
        quantized representation) merge exactly through the same direct
-       step. The host gather begins the moment the queue's indices land,
-       overlapping the device's drain of the scan tail.
+       step.
     3. **certify or fall back** — a query is certified iff the smallest
        lower bound outside its candidate set strictly exceeds its k-th
        exact candidate distance; uncertified queries are recomputed by the
        streamed direct-form f32 oracle, so the returned top-k is exact
-       (values, indices, tie order) for every row either way.
+       (values, indices, tie order) for every row either way. Speculation
+       never touches the certificate: it reorders reads, not math.
 
     The certificate lands on ``ctx.certificate``, the double buffer's
-    transfer counters on ``ctx.stream_stats``, and the honest traffic
-    account (codes + per-row channels + candidate reads + delta/fallback
-    bytes) on ``ctx.bytes_scanned``.
+    transfer counters on ``ctx.stream_stats``, the honest traffic account
+    (codes + per-row channels + candidate reads incl. wasted speculation +
+    delta/fallback bytes) on ``ctx.bytes_scanned``, the wall-time split on
+    ``ctx.phase_ms``, and the speculation counters on ``ctx.speculation``.
     """
+    import time
+
+    t_start = time.perf_counter()
     m = int(queries.shape[0])
     r = max(1, min(int(plan.padded_rows), int(plan.rescore_factor) * plan.k))
     # rescore_factor rides plan.cache_key(); the step caches key on the
-    # resolved budget r so differing budgets never share a queue executable
+    # resolved budget r so differing budgets never share a queue executable.
+    # NOTE the pipeline knobs (prefetch depth, speculation trigger) are
+    # deliberately absent from every step key: changing them reschedules
+    # host work but never recompiles (tested by test_speculation.py).
     bound_step = _cached(("int8-bound-step", r),
                          lambda: make_int8_bound_step(r))
     direct_step = _cached(("direct-step", plan.k),
@@ -453,26 +491,76 @@ def _int8_streamed(plan, queries, store, ctx) -> TopK:
     rescore = _cached(("int8-stream-rescore", plan.k),
                       lambda: _make_stream_rescore(plan.k))
 
+    trigger = ctx.spec_trigger
+    if trigger is None:
+        trigger = (plan.spec_trigger if plan.spec_trigger >= 0.0
+                   else DEFAULT_SPEC_TRIGGER)
+    trigger = float(trigger)
+
     lb = jnp.full((m, r + 1), jnp.inf, jnp.float32)
     li = jnp.full((m, r + 1), -1, jnp.int32)
     stream = DoubleBufferedStream(store.shard_source("int8"),
                                   depth=ctx.prefetch_depth,
                                   put_fn=device_put_partition)
+    n_shards = int(getattr(store, "n_shards", 0) or 0)
+    trigger_after = None
+    if trigger < 1.0 and n_shards > 1:
+        # first shard count at which speculation may launch; must stay
+        # < n_shards (speculating after the last shard is just the serial
+        # schedule, so the loop condition also guards that)
+        trigger_after = max(1, int(np.ceil(trigger * n_shards)))
+    spec = None
+    shards_done = 0
     scan_bytes = 0
     for p in stream:
         lb, li = bound_step(lb, li, queries, p.q, p.scales, p.err, p.qnorm,
                             jnp.int32(p.base_index))
         scan_bytes += p.scan_bytes()
+        shards_done += 1
+        if (spec is None and trigger_after is not None
+                and trigger_after <= shards_done < n_shards):
+            # snapshot the current queue (immutable jax array; the loop
+            # keeps producing NEW queues) and let the background thread
+            # sync + dedup + gather while the device drains the tail
+            spec = SpeculativeGather(li[:, :r], store)
     ctx.stream_stats = {"transfers": stream.transfers,
                         "restarts": stream.restarts}
 
-    # pull ONLY the candidate indices to host (the scan tail drains while
-    # the gather below reads rows), dedup across queries, then rescore
+    # pull ONLY the candidate indices to host, dedup across queries
     cand_idx = np.asarray(li[:, :r])
+    t_scan = time.perf_counter()
     uniq, inv = np.unique(cand_idx, return_inverse=True)
-    rows = store.gather_rows(uniq)
-    scan_bytes += int((uniq >= 0).sum()) * int(rows.shape[1]) * 4
+    rows_speculated = rows_topped = rows_wasted = 0
+    if spec is not None:
+        spec_ids, spec_rows = spec.result()  # join the producer thread
+        # diff the final queue against the snapshot: reuse hits by id,
+        # top up only the ids the late shards added
+        pos = np.searchsorted(spec_ids, uniq)
+        pos_c = np.minimum(pos, max(0, spec_ids.size - 1))
+        hit = (spec_ids[pos_c] == uniq) if spec_ids.size else \
+            np.zeros(uniq.shape, bool)
+        rows = np.zeros((uniq.size, spec_rows.shape[1]), np.float32)
+        rows[hit] = spec_rows[pos_c[hit]]
+        missing = uniq[~hit]
+        if missing.size:
+            rows[~hit] = store.gather_rows(missing)
+        rows_speculated = int((spec_ids >= 0).sum())
+        rows_topped = int((missing >= 0).sum())
+        rows_wasted = rows_speculated - int((uniq[hit] >= 0).sum())
+        # every fetched row is traffic, used or not (wasted speculation
+        # is the price of the overlap and must show up in the account)
+        scan_bytes += (rows_speculated + rows_topped) * int(rows.shape[1]) * 4
+    else:
+        rows = store.gather_rows(uniq)
+        scan_bytes += int((uniq >= 0).sum()) * int(rows.shape[1]) * 4
+    ctx.speculation = {
+        "trigger": trigger,
+        "rows_speculated": rows_speculated,
+        "rows_topped_up": rows_topped,
+        "rows_wasted": rows_wasted,
+    }
     cand_vecs = rows[inv.reshape(m, r)]  # host scatter back to (m, r, d)
+    t_gather = time.perf_counter()
     s, i = rescore(queries, jnp.asarray(cand_vecs), jnp.asarray(cand_idx))
 
     # live delta rows have no int8 representation: merge them exactly
@@ -506,6 +594,12 @@ def _int8_streamed(plan, queries, store, ctx) -> TopK:
         keep = cert[:, None]
         out = TopK(jnp.where(keep, out.scores, exact.scores),
                    jnp.where(keep, out.indices, exact.indices))
+    jax.block_until_ready(out.scores)
+    ctx.phase_ms = {
+        "scan_ms": (t_scan - t_start) * 1e3,
+        "gather_ms": (t_gather - t_scan) * 1e3,
+        "rescore_ms": (time.perf_counter() - t_gather) * 1e3,
+    }
     ctx.bytes_scanned = scan_bytes
     return out
 

@@ -27,9 +27,16 @@ the same compiled executable forever after.
 from __future__ import annotations
 
 import dataclasses
+import logging
 from typing import Literal, Sequence
 
-from repro.tuning.autotune import lookup_blocks
+from repro.tuning.autotune import (
+    lookup_blocks,
+    lookup_pallas_capability,
+    lookup_pipeline,
+)
+
+_log = logging.getLogger(__name__)
 
 Backend = Literal["xla", "pallas"]
 ModeHint = Literal["fdsq", "fqsd", "fqsd-streamed"]
@@ -52,6 +59,20 @@ PLANNABLE_EXECUTORS = (
 
 #: Executors whose block shapes the per-device autotuner may override.
 TUNABLE_EXECUTORS = ("fdsq-pallas", "fqsd-int8-pallas")
+
+#: Streamed executors whose pipeline knobs (prefetch depth, speculation
+#: trigger, rescore budget) the end-to-end autotuner may override.
+PIPELINE_TUNABLE_EXECUTORS = ("fqsd-int8-streamed", "fqsd-int8-mmap-streamed")
+
+#: Fused Pallas executors vetoed on hosts with a persisted interpret-only
+#: capability verdict, and what each falls back to (per logical mode).
+_PALLAS_FALLBACK = {
+    ("fdsq-pallas", "fdsq"): "fdsq-xla",
+    ("fdsq-pallas", "fqsd"): "fqsd-xla",
+    ("fqsd-int8-pallas", "fqsd"): "fqsd-int8",
+}
+
+_capability_warned: set[str] = set()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -85,6 +106,13 @@ class ExecutionPlan(EnginePlan):
     block_m: int = 0
     block_n: int = 0
     block_d: int = 0
+    #: Autotuned pipeline knobs for the streamed executors; 0 / -1.0 mean
+    #: "unset" (the engine resolves its own defaults). Both ride the cache
+    #: key so a tuned plan is distinguishable from an untuned one — but the
+    #: streamed executors key their compiled steps on (kind, k/r) only, so
+    #: changing either knob never recompiles (tested).
+    prefetch_depth: int = 0
+    spec_trigger: float = -1.0
 
     def cache_key(self) -> tuple:
         """Everything that determines the compiled executable for this plan
@@ -94,6 +122,7 @@ class ExecutionPlan(EnginePlan):
             self.n_partitions, self.padded_rows, self.padded_dim,
             self.tier, self.rescore_factor,
             self.block_m, self.block_n, self.block_d,
+            self.prefetch_depth, self.spec_trigger,
         )
 
 
@@ -133,6 +162,9 @@ class EngineConfig:
     sharded: bool = False
     mesh_axes: Sequence[str] = ("data", "model")
     rescore_factor: int = 4  # int8 tier exact-rescore budget (x k)
+    #: True when the engine's rescore_factor was set explicitly by the
+    #: caller: the pipeline autotuner must not override a pinned budget.
+    rescore_pinned: bool = False
     dtype: str = "float32"  # query/dataset dtype (part of the tuning key)
 
 
@@ -272,6 +304,45 @@ def plan(
         tier = "f32"
         chunk = largest_divisor_at_most(rows, max(1, chunk))
 
+    # capability guard: a persisted interpret-only verdict (see
+    # repro.tuning.probe_pallas_capability) vetoes the fused Pallas
+    # executors — interpret mode is a ~100x slowdown, never worth serving.
+    # No verdict (None) means "never probed": planning stays permissive so
+    # explicit pallas backends keep working on unprobed hosts.
+    if executor in TUNABLE_EXECUTORS and lookup_pallas_capability() is False:
+        fallback = _PALLAS_FALLBACK[(executor, mode)]
+        if executor not in _capability_warned:
+            _capability_warned.add(executor)
+            _log.warning(
+                "planner: %s vetoed (persisted capability verdict says "
+                "Pallas runs in interpret mode on this host); falling "
+                "back to %s", executor, fallback)
+        executor = fallback
+        if executor == "fdsq-xla":
+            n_parts = largest_divisor_at_most(rows, max(1, n_parts))
+        elif executor in ("fqsd-xla", "fqsd-int8"):
+            chunk = largest_divisor_at_most(rows, max(1, chunk))
+        if executor in ("fdsq-xla", "fqsd-xla"):
+            mode_label = mode
+            tier = "f32"
+
+    # tuned end-to-end pipeline knobs for the streamed executors (pure
+    # cache read, same contract as the block lookup below). The tuned
+    # rescore budget applies only when the engine's own budget is not
+    # pinned by the caller (cfg.rescore_pinned).
+    rescore_factor = int(cfg.rescore_factor)
+    prefetch_depth = 0
+    spec_trigger = -1.0
+    if executor in PIPELINE_TUNABLE_EXECUTORS:
+        knobs = lookup_pipeline(executor, m, rows,
+                                int(dataset_meta.padded_dim),
+                                cfg.dtype, metric, k)
+        if knobs is not None:
+            prefetch_depth = int(knobs.prefetch_depth)
+            spec_trigger = float(knobs.spec_trigger)
+            if not cfg.rescore_pinned:
+                rescore_factor = int(knobs.rescore_factor)
+
     # per-device autotuned tile shapes for the fused kernels (0 = kernel
     # defaults). The lookup is a pure read of the persisted tuning cache:
     # equal inputs + equal cache state -> equal plans -> executable cache
@@ -303,9 +374,11 @@ def plan(
         n_valid=int(dataset_meta.n_valid),
         sharded=sharded,
         tier=tier,
-        rescore_factor=int(cfg.rescore_factor),
+        rescore_factor=rescore_factor,
         n_shards=int(getattr(dataset_meta, "n_shards", 1)),
         block_m=block_m,
         block_n=block_n,
         block_d=block_d,
+        prefetch_depth=prefetch_depth,
+        spec_trigger=spec_trigger,
     )

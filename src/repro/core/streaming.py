@@ -16,6 +16,7 @@ HBM-bandwidth-bound and PCIe-bound FQ-SD throughput.
 from __future__ import annotations
 
 import collections
+import threading
 from typing import Callable, Iterable, Iterator, TypeVar
 
 import jax
@@ -115,3 +116,53 @@ class DoubleBufferedStream:
 def prefetch_to_device(host_iter: Iterable[T], depth: int = 2, put_fn=None):
     """Functional alias used by the data pipelines."""
     return iter(DoubleBufferedStream(host_iter, depth=depth, put_fn=put_fn))
+
+
+class SpeculativeGather:
+    """Background speculative gather of candidate rows (ISSUE 6 tentpole).
+
+    The DoubleBufferedStream idiom, pointed the other way: while the
+    device drains the remaining shards of a streamed scan, a producer
+    thread resolves a *snapshot* of the candidate queue to host ids
+    (``np.asarray`` — the device sync happens on this thread, off the
+    dispatch thread, so the main loop keeps enqueueing shard steps),
+    dedups them, and reads their f32 rows through ``store.gather_rows``
+    (memmap/host reads — thread-safe alongside the scan's own shard
+    reads, see repro/store/README.md). The consumer joins at rescore
+    time and tops up only ids the final queue added after the snapshot.
+
+    The speculation is *advisory by construction*: the exact rescore
+    always runs on the final queue's ids, with speculated rows keyed by
+    id — so a wrong guess costs wasted bytes (reported, charged to
+    bytes_scanned), never a wrong or non-bit-identical result.
+    """
+
+    def __init__(self, candidate_ids, store):
+        self._snapshot = candidate_ids  # device array or np view, unsynced
+        self._store = store
+        self.ids: np.ndarray | None = None  # sorted unique snapshot ids
+        self.rows: np.ndarray | None = None  # f32 rows, aligned with ids
+        self._err: BaseException | None = None
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name="speculative-gather")
+        self._thread.start()
+
+    def _run(self) -> None:
+        try:
+            ids = np.unique(np.asarray(self._snapshot))  # sync + dedup
+            self.rows = self._store.gather_rows(ids)
+            self.ids = ids
+        except BaseException as e:  # surfaced to the consumer on result()
+            self._err = e
+
+    def result(self) -> tuple[np.ndarray, np.ndarray]:
+        """Join the producer; returns (sorted unique ids, their f32 rows).
+
+        Re-raises any producer-side exception — a failed speculation must
+        fail the search loudly, not silently return rows of zeros.
+        """
+        self._thread.join()
+        if self._err is not None:
+            raise self._err
+        assert self.ids is not None and self.rows is not None
+        return self.ids, self.rows

@@ -21,17 +21,47 @@ import time
 import numpy as np
 
 
+def _positive_int(text: str) -> int:
+    """argparse type: int >= 1, rejected at parse time with a clear message
+    (not deep inside the stream loop)."""
+    try:
+        v = int(text)
+    except ValueError:
+        raise argparse.ArgumentTypeError(f"expected an integer, got {text!r}")
+    if v < 1:
+        raise argparse.ArgumentTypeError(f"must be >= 1, got {v}")
+    return v
+
+
+def _shard_fraction(text: str) -> float:
+    """argparse type: speculation trigger in [0, 1] (1 = no speculation)."""
+    try:
+        v = float(text)
+    except ValueError:
+        raise argparse.ArgumentTypeError(f"expected a float, got {text!r}")
+    if not 0.0 <= v <= 1.0:
+        raise argparse.ArgumentTypeError(
+            f"must be a shard fraction in [0, 1], got {v}")
+    return v
+
+
 def serve_knn(args):
     from repro.api import Router
     from repro.data import query_stream, vector_dataset
     from repro.serving import AdaptiveScheduler, bursty_requests
+    from repro.tuning import probe_pallas_capability
 
+    # probe-once capability verdict: persisted in the per-device autotune
+    # cache so every later plan() on this host refuses interpret-mode
+    # Pallas executors (a ~100x slowdown) with a logged reason
+    probe_pallas_capability()
     policy = "throughput" if args.fqsd else args.policy
     x = vector_dataset(args.n, args.d, seed=0)
     q = query_stream(x, args.queries, seed=1)
     router = Router()
     router.create(args.collection, x, k=args.k, n_partitions=args.partitions,
-                  prefetch_depth=args.prefetch_depth)
+                  prefetch_depth=args.prefetch_depth,
+                  spec_trigger=args.spec_trigger)
     if args.int8_depth is not None:
         router.engine(args.collection).enable_int8()
     sched = AdaptiveScheduler(
@@ -50,9 +80,19 @@ def serve_knn(args):
           f"mode_switches={st['mode_switches']}  "
           f"deadline_misses={st['deadline_misses']}")
     if st["transfers"]:
+        depth = args.prefetch_depth if args.prefetch_depth else "tuned/2"
         print(f"  streamed: transfers={st['transfers']} "
               f"restarts={st['restarts']} "
-              f"(prefetch depth {args.prefetch_depth})")
+              f"(prefetch depth {depth})")
+    if "phase_ms" in st:
+        ph, sp = st["phase_ms"], st["speculation"]
+        print(f"  pipeline: scan={ph['scan_ms']:.1f}ms "
+              f"gather={ph['gather_ms']:.1f}ms "
+              f"rescore={ph['rescore_ms']:.1f}ms  speculation: "
+              f"speculated={sp['rows_speculated']} "
+              f"topped_up={sp['rows_topped_up']} "
+              f"wasted={sp['rows_wasted']} "
+              f"over {sp['dispatches']} dispatches")
     for mode, r in st["per_plan"].items():
         print(f"  plan={mode:<5} n={r['count']:<5} p50={r['p50_ms']:.2f}ms "
               f"p99={r['p99_ms']:.2f}ms q/s={r['qps']:.1f} "
@@ -117,12 +157,19 @@ def main(argv=None):
                     help="backlog depth at which the bandwidth-aware hook "
                          "routes FQ-SD batches to the int8 storage tier "
                          "(enables the tier; default: disabled)")
-    ap.add_argument("--prefetch-depth", type=int, default=2,
-                    help="streamed-scan double-buffer depth (2 = the "
+    ap.add_argument("--prefetch-depth", type=_positive_int, default=None,
+                    help="streamed-scan double-buffer depth (>= 1; 2 = the "
                          "paper's two memory banks; deeper tolerates host "
                          "jitter at the cost of pinned host memory) — "
                          "threaded through ExecContext to every streamed "
-                         "executor")
+                         "executor. Default: the device's tuned value, "
+                         "else 2")
+    ap.add_argument("--spec-trigger", type=_shard_fraction, default=None,
+                    help="streamed-int8 speculation trigger: shard fraction "
+                         "in [0, 1] after which the candidate gather starts "
+                         "on a background thread (1 disables speculation; "
+                         "default: the device's tuned value, else 0.5). "
+                         "Results are bit-identical at every setting")
     ap.add_argument("--arch", default="minicpm-2b")
     args = ap.parse_args(argv)
     if args.mode == "knn":

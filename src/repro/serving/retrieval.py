@@ -196,6 +196,12 @@ class AdaptiveScheduler:
         # resident): partitions shipped host->device and stream restarts
         self._transfers = 0
         self._restarts = 0
+        # streamed-int8 pipeline observability: summed wall-time split and
+        # speculation counters across dispatches that reported them
+        self._phase_ms = {"scan_ms": 0.0, "gather_ms": 0.0, "rescore_ms": 0.0}
+        self._phase_n = 0
+        self._speculation = {"dispatches": 0, "rows_speculated": 0,
+                             "rows_topped_up": 0, "rows_wasted": 0}
 
     # ------------------------------------------------------------ decisions
     def _expected_service_s(self, mode: str) -> float:
@@ -332,6 +338,15 @@ class AdaptiveScheduler:
             self._skip_rate_n += 1
         self._transfers += int(batch.stats.get("transfers", 0))
         self._restarts += int(batch.stats.get("restarts", 0))
+        if "scan_ms" in batch.stats:  # streamed int8: pipelined phase split
+            self._phase_n += 1
+            for key in self._phase_ms:
+                self._phase_ms[key] += float(batch.stats.get(key, 0.0))
+        spec = batch.stats.get("speculation")
+        if spec is not None:
+            self._speculation["dispatches"] += 1
+            for key in ("rows_speculated", "rows_topped_up", "rows_wasted"):
+                self._speculation[key] += int(spec.get(key, 0))
         if self._last_mode is not None and label != self._last_mode:
             self._switches += 1
         self._last_mode = label
@@ -448,6 +463,10 @@ class AdaptiveScheduler:
             out["collection"] = self.collection
         if self._skip_rate_n:  # fused Pallas plans only
             out["prune_skip_rate"] = self._skip_rate_sum / self._skip_rate_n
+        if self._phase_n:  # streamed int8 plans only: pipeline wall-time
+            # split (summed across dispatches) + speculation counters
+            out["phase_ms"] = dict(self._phase_ms)
+            out["speculation"] = dict(self._speculation)
         return out
 
 

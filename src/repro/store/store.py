@@ -620,7 +620,15 @@ class DatasetStore:
         only *candidate* rows of the f32 tier are touched (for mmap stores,
         these are the random disk reads the certified scan buys down from a
         full 4 B/element pass). Negative ids (empty queue slots) and
-        out-of-main ids yield zero rows — callers mask them by validity."""
+        out-of-main ids yield zero rows — callers mask them by validity.
+
+        Thread-safety contract: this is a pure read (numpy/memmap slices,
+        no store state mutated), safe to call from a background thread
+        concurrently with ``iter_shards``/``shard_source`` iteration — the
+        speculative overlapped gather (``core.streaming.SpeculativeGather``)
+        relies on exactly that to hide the rescore's random reads under the
+        int8 scan tail. Concurrent *mutation* (upsert/delete) is NOT part
+        of the contract; the engine serializes searches and mutations."""
         ids = np.asarray(ids, dtype=np.int64).reshape(-1)
         out = np.zeros((ids.shape[0], self.padded_dim), dtype=np.float32)
         ok = (ids >= 0) & (ids < self.n_shards * self.rows_per_shard)

@@ -31,8 +31,25 @@ Cache key format (one line per entry in the JSON file):
 factor set the on-chip queue width, so each gets its own tuning entry).
 M is bucketed to the next power of two — the serving layer already pads
 batches that way, so tuning inherits the same O(log max_batch) key space.
-See ``src/repro/tuning/README.md`` for the sweep space and how to pre-seed
-caches for CI.
+
+Beyond per-kernel block shapes, the same cache persists two more entry
+kinds (distinguished by key prefix, validated per-kind on load):
+
+    pipe|<executor>|m<pow2>|n<rows>|d<dim>|<dtype>|<metric>|k<k>
+        -> PipelineKnobs(prefetch_depth, spec_trigger, rescore_factor,
+           rows_per_shard) — the end-to-end winner of
+        :func:`autotune_pipeline` for one streamed-int8 problem; consumed
+        by ``planner.plan()`` so streamed plans carry tuned pipeline knobs.
+
+    capability|pallas
+        -> {"compiled": bool} — whether the fused Pallas kernels compile
+        natively on this host (vs. interpret mode, a ~100x slowdown).
+        Written once by :func:`probe_pallas_capability`; ``planner.plan()``
+        refuses to emit a fused executor when a persisted verdict says
+        interpret-only and falls back to the XLA scan with a logged reason.
+
+See ``src/repro/tuning/README.md`` for the sweep spaces and how to
+pre-seed caches for CI.
 """
 from __future__ import annotations
 
@@ -58,6 +75,24 @@ class BlockShapes(NamedTuple):
     block_m: int
     block_n: int
     block_d: int
+
+
+class PipelineKnobs(NamedTuple):
+    """End-to-end pipeline knobs for one streamed-int8 problem.
+
+    prefetch_depth   DoubleBufferedStream depth (host->device overlap)
+    spec_trigger     shard fraction after which the candidate gather is
+                     speculatively started on a background thread
+    rescore_factor   candidate budget multiplier (r = factor * k)
+    rows_per_shard   advisory shard size for store builds; the planner
+                     cannot re-shard an existing store, so this field is
+                     only applied when *building* one (see tuning README)
+    """
+
+    prefetch_depth: int
+    spec_trigger: float
+    rescore_factor: int
+    rows_per_shard: int
 
 
 def _next_pow2(v: int) -> int:
@@ -89,6 +124,33 @@ def tuning_key(kernel: str, m: int, n: int, d: int, dtype: str,
     if rescore_factor is not None:
         key += f"|r{int(rescore_factor)}"
     return key
+
+
+def pipeline_key(executor: str, m: int, n: int, d: int, dtype: str,
+                 metric: str, k: int) -> str:
+    """Stable key for one end-to-end streamed-pipeline tuning problem.
+
+    Keyed on the *executor* (not a kernel): the sweep times whole searches,
+    so the winner is only transferable to plans that run the same executor
+    on the same planner-visible geometry. rescore_factor is NOT part of
+    the key — it is one of the swept knobs, stored in the entry value.
+    """
+    return (f"pipe|{executor}|m{_next_pow2(max(1, int(m)))}|n{int(n)}"
+            f"|d{int(d)}|{dtype}|{metric}|k{int(k)}")
+
+
+CAPABILITY_KEY = "capability|pallas"
+
+
+def _validate_entry(key: str, e: dict) -> None:
+    """Raise if one cache entry is malformed for its kind (prefix-typed)."""
+    if key.startswith("pipe|"):
+        PipelineKnobs(int(e["prefetch_depth"]), float(e["spec_trigger"]),
+                      int(e["rescore_factor"]), int(e["rows_per_shard"]))
+    elif key.startswith("capability|"):
+        bool(e["compiled"])
+    else:
+        BlockShapes(int(e["block_m"]), int(e["block_n"]), int(e["block_d"]))
 
 
 def device_kind() -> str:
@@ -129,11 +191,16 @@ class AutotuneCache:
             entries = payload["entries"]
             if not isinstance(entries, dict):
                 raise TypeError("entries must be a dict")
+            ok: dict[str, dict] = {}
             for key, e in entries.items():
-                # validate eagerly so one bad entry cannot poison lookups
-                BlockShapes(int(e["block_m"]), int(e["block_n"]),
-                            int(e["block_d"]))
-            self._entries = {k: dict(v) for k, v in entries.items()}
+                # validate eagerly (per kind) so one bad entry cannot
+                # poison lookups; a bad entry is dropped, not fatal
+                try:
+                    _validate_entry(key, e)
+                except (ValueError, KeyError, TypeError):
+                    continue
+                ok[key] = dict(e)
+            self._entries = ok
         except (OSError, ValueError, KeyError, TypeError):
             self._entries = {}  # corrupt cache == cold cache, never an error
         return self
@@ -160,7 +227,7 @@ class AutotuneCache:
     def get(self, key: str) -> BlockShapes | None:
         self._ensure()
         e = self._entries.get(key)
-        if e is None:
+        if e is None or "block_m" not in e:
             return None
         return BlockShapes(int(e["block_m"]), int(e["block_n"]),
                            int(e["block_d"]))
@@ -174,6 +241,56 @@ class AutotuneCache:
             **meta,
         }
         self.save()
+
+    def get_pipeline(self, key: str) -> PipelineKnobs | None:
+        self._ensure()
+        e = self._entries.get(key)
+        if e is None or "prefetch_depth" not in e:
+            return None
+        return PipelineKnobs(int(e["prefetch_depth"]),
+                             float(e["spec_trigger"]),
+                             int(e["rescore_factor"]),
+                             int(e["rows_per_shard"]))
+
+    def put_pipeline(self, key: str, knobs: PipelineKnobs, **meta) -> None:
+        self._ensure()
+        self._entries[key] = {
+            "prefetch_depth": int(knobs.prefetch_depth),
+            "spec_trigger": float(knobs.spec_trigger),
+            "rescore_factor": int(knobs.rescore_factor),
+            "rows_per_shard": int(knobs.rows_per_shard),
+            **meta,
+        }
+        self.save()
+
+    def get_capability(self, name: str = "pallas") -> bool | None:
+        """Persisted capability verdict, or None if never probed."""
+        self._ensure()
+        e = self._entries.get(f"capability|{name}")
+        if e is None or "compiled" not in e:
+            return None
+        return bool(e["compiled"])
+
+    def put_capability(self, compiled: bool, name: str = "pallas",
+                       **meta) -> None:
+        self._ensure()
+        self._entries[f"capability|{name}"] = {"compiled": bool(compiled),
+                                               **meta}
+        self.save()
+
+    def without_capability(self) -> "AutotuneCache":
+        """In-memory view of this cache minus capability verdicts.
+
+        For benchmarks that measure the fused Pallas path *explicitly*
+        (e.g. kernels_bench on a CPU host): tuned block/pipeline entries
+        stay visible to the planner, but a persisted interpret-only
+        verdict no longer vetoes the executor under measurement.
+        """
+        self._ensure()
+        view = AutotuneCache(path=None)
+        view._entries = {k: dict(v) for k, v in self._entries.items()
+                         if not k.startswith("capability|")}
+        return view
 
     def __len__(self) -> int:
         self._ensure()
@@ -216,6 +333,54 @@ def lookup_blocks(kernel: str, m: int, n: int, d: int, dtype: str,
         )
     except Exception:
         return None
+
+
+def lookup_pipeline(executor: str, m: int, n: int, d: int, dtype: str,
+                    metric: str, k: int) -> PipelineKnobs | None:
+    """Pure read the planner calls: tuned pipeline knobs, else None.
+
+    Same contract as :func:`lookup_blocks` — never raises.
+    """
+    try:
+        return default_cache().get_pipeline(
+            pipeline_key(executor, m, n, d, dtype, metric, k)
+        )
+    except Exception:
+        return None
+
+
+def lookup_pallas_capability() -> bool | None:
+    """Pure read: persisted Pallas verdict for this device, else None.
+
+    None means "never probed" — the planner treats that as capable, so
+    plain planning stays probe-free; only an explicitly persisted
+    interpret-only verdict (see :func:`probe_pallas_capability`) vetoes
+    the fused executors.
+    """
+    try:
+        return default_cache().get_capability("pallas")
+    except Exception:
+        return None
+
+
+def probe_pallas_capability(cache: AutotuneCache | None = None) -> bool:
+    """Probe whether the fused Pallas kernels compile natively here and
+    persist the verdict under ``capability|pallas``.
+
+    The fused kernels themselves decide interpret mode by backend
+    (``ops.knn``: interpret unless the default backend is TPU), so the
+    probe mirrors that decision instead of timing a canary — one static
+    check, persisted once, consulted by every subsequent ``plan()``.
+    Called explicitly at serving/bench startup, never implicitly from
+    planning (planning must stay pure and device-free).
+    """
+    import jax
+
+    if cache is None:
+        cache = default_cache()
+    compiled = jax.default_backend() == "tpu"
+    cache.put_capability(compiled, backend=jax.default_backend())
+    return compiled
 
 
 # --------------------------------------------------------------- sweeping
@@ -370,4 +535,112 @@ def autotune_knn(
         tuning_key(kernel, m, n, d, dtype, metric, k, key_factor), best,
         us_per_call=best_t * 1e6, n_candidates=len(cands),
     )
+    return best, timings
+
+
+# ------------------------------------------------- end-to-end pipeline sweep
+#: Pipeline sweep space (small by design: each point is a whole timed
+#: search over a freshly built store, not one kernel call).
+PIPE_PREFETCH_CANDIDATES = (1, 2, 4)
+PIPE_TRIGGER_CANDIDATES = (0.25, 0.5, 0.75, 1.0)
+PIPE_RESCORE_CANDIDATES = (2, 4, 8)
+
+
+def autotune_pipeline(
+    m: int,
+    n: int,
+    d: int,
+    k: int = 10,
+    metric: str = "l2",
+    cache: AutotuneCache | None = None,
+    repeats: int = 2,
+    prefetch_candidates: tuple[int, ...] = PIPE_PREFETCH_CANDIDATES,
+    trigger_candidates: tuple[float, ...] = PIPE_TRIGGER_CANDIDATES,
+    rescore_candidates: tuple[int, ...] = PIPE_RESCORE_CANDIDATES,
+    shard_candidates: tuple[int, ...] | None = None,
+    directory: str | None = None,
+    seed: int = 0,
+) -> tuple[PipelineKnobs, dict]:
+    """End-to-end sweep of the streamed-int8 pipeline knobs on the live
+    device: build a synthetic store per shard-size candidate, time whole
+    ``search()`` calls per (prefetch_depth, spec_trigger, rescore_factor)
+    combination, and persist the winner under :func:`pipeline_key`.
+
+    Returns (winner, {candidate repr -> median seconds}).
+
+    The winner is persisted for *both* streamed int8 executors
+    (``fqsd-int8-streamed`` and ``fqsd-int8-mmap-streamed``): the knobs
+    describe the scan/gather overlap, which transfers across backing
+    stores; the mirrored entry is tagged ``mirrored=True``. Default shard
+    candidates are exact divisors of n (multiples of 128), so the swept
+    store keeps ``padded_rows == n`` and the stored key is the one the
+    planner looks up for a production store of the same geometry.
+    ``rows_per_shard`` in the winner is *advisory* — the planner cannot
+    re-shard an existing store, it is applied when building one.
+    """
+    import time
+
+    import numpy as np
+
+    from repro.api.types import SearchRequest
+    from repro.core.engine import ExactKNN
+    from repro.store import DatasetStore
+
+    if metric != "l2":
+        raise ValueError("the streamed int8 pipeline serves l2 only")
+    if cache is None:
+        cache = default_cache()
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    q = rng.standard_normal((m, d)).astype(np.float32)
+
+    if shard_candidates is None:
+        shard_candidates = tuple(
+            s for s in (n // 4, n // 8, n // 16)
+            if s >= 128 and s % 128 == 0 and n % s == 0
+        ) or (max(128, (n // 8) // 128 * 128 or 128),)
+
+    timings: dict[str, float] = {}
+    best: PipelineKnobs | None = None
+    best_t = float("inf")
+    geom = None  # planner-visible (padded_rows, padded_dim) of the winner
+
+    for rows_per_shard in shard_candidates:
+        for rescore in rescore_candidates:
+            store = DatasetStore.from_array(x, rows_per_shard=rows_per_shard,
+                                            directory=directory)
+            eng = ExactKNN(k=k, metric=metric, device_budget_bytes=1,
+                           rescore_factor=rescore).fit_store(store)
+            eng.enable_int8()
+            meta = eng.dataset_meta(tier="int8")
+            for prefetch in prefetch_candidates:
+                for trigger in trigger_candidates:
+                    req = SearchRequest(queries=q, tier="int8",
+                                        prefetch_depth=prefetch,
+                                        spec_trigger=trigger)
+                    eng.search(req)  # warm compile + stream
+                    samples = []
+                    for _ in range(repeats):
+                        t0 = time.perf_counter()
+                        eng.search(req)
+                        samples.append(time.perf_counter() - t0)
+                    samples.sort()
+                    t = samples[len(samples) // 2]
+                    label = (f"shard{rows_per_shard}|pf{prefetch}"
+                             f"|tr{trigger}|r{rescore}")
+                    timings[label] = t
+                    if t < best_t:
+                        best_t = t
+                        best = PipelineKnobs(prefetch, trigger, rescore,
+                                             rows_per_shard)
+                        geom = (meta.padded_rows, meta.padded_dim)
+
+    assert best is not None and geom is not None
+    for i, executor in enumerate(("fqsd-int8-streamed",
+                                  "fqsd-int8-mmap-streamed")):
+        cache.put_pipeline(
+            pipeline_key(executor, m, geom[0], geom[1], "float32", metric, k),
+            best, us_per_call=best_t * 1e6, n_candidates=len(timings),
+            mirrored=bool(i),
+        )
     return best, timings

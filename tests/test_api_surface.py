@@ -21,7 +21,7 @@ API_ALL = ("SearchRequest", "SearchResult", "Router")
 
 SEARCH_REQUEST_FIELDS = (
     "queries", "k", "metric", "tier", "mode_hint", "deadline_ms",
-    "filter_mask", "rid", "arrival_s",
+    "filter_mask", "prefetch_depth", "spec_trigger", "rid", "arrival_s",
 )
 
 SEARCH_RESULT_FIELDS = (
@@ -50,6 +50,8 @@ def test_request_defaults_snapshot():
     assert (r.k, r.metric, r.tier, r.mode_hint) == (None, None, "auto", "auto")
     assert (r.deadline_ms, r.filter_mask, r.rid, r.arrival_s) == \
         (None, None, None, 0.0)
+    # pipeline knobs default to None = "use the plan's tuned value"
+    assert (r.prefetch_depth, r.spec_trigger) == (None, None)
 
 
 class TestShimDeprecations:

@@ -11,9 +11,15 @@ from repro.core import ExactKNN, cache_info, clear_executable_cache
 from repro.tuning import (
     AutotuneCache,
     BlockShapes,
+    PipelineKnobs,
     autotune_knn,
+    autotune_pipeline,
     candidate_blocks,
     lookup_blocks,
+    lookup_pallas_capability,
+    lookup_pipeline,
+    pipeline_key,
+    probe_pallas_capability,
     set_default_cache,
     tuning_key,
 )
@@ -223,6 +229,120 @@ class TestSweepAndPlanner:
         p = engine.plan_for("fqsd", 8)
         with pytest.raises(dataclasses.FrozenInstanceError):
             p.block_m = 64
+
+
+PIPE_KEY = pipeline_key("fqsd-int8-streamed", m=8, n=1024, d=128,
+                        dtype="float32", metric="l2", k=10)
+KNOBS = PipelineKnobs(prefetch_depth=2, spec_trigger=0.5,
+                      rescore_factor=4, rows_per_shard=256)
+
+
+class TestPipelineEntries:
+    def test_pipeline_key_format_and_bucketing(self):
+        assert PIPE_KEY == "pipe|fqsd-int8-streamed|m8|n1024|d128|float32|l2|k10"
+        # batch is pow2-bucketed like the kernel keys; rescore is NOT in
+        # the key (it is a swept knob living in the entry value)
+        assert pipeline_key("fqsd-int8-streamed", 5, 1024, 128, "float32",
+                            "l2", 10) == PIPE_KEY
+        assert "|r" not in PIPE_KEY
+
+    def test_put_get_round_trip_persists(self, tmp_path):
+        path = str(tmp_path / "cpu.json")
+        cache = AutotuneCache(path)
+        assert cache.get_pipeline(PIPE_KEY) is None
+        cache.put_pipeline(PIPE_KEY, KNOBS, us_per_call=99.0)
+        assert cache.get_pipeline(PIPE_KEY) == KNOBS
+        assert AutotuneCache(path).get_pipeline(PIPE_KEY) == KNOBS
+
+    def test_kinds_do_not_cross_read(self, tmp_path):
+        """A block entry must never answer a pipeline lookup (or vice
+        versa), even under a colliding key."""
+        cache = AutotuneCache(str(tmp_path / "cpu.json"))
+        cache.put(KEY, BlockShapes(32, 512, 128))
+        cache.put_pipeline(PIPE_KEY, KNOBS)
+        assert cache.get(PIPE_KEY) is None
+        assert cache.get_pipeline(KEY) is None
+
+    def test_load_drops_only_bad_entries(self, tmp_path):
+        """Mixed-kind cache with one malformed pipe entry: the bad entry
+        is dropped on load, the good block and capability entries survive
+        (pre-ISSUE-6 loading nuked the whole cache)."""
+        path = str(tmp_path / "cpu.json")
+        payload = {
+            "schema_version": 1,
+            "entries": {
+                KEY: {"block_m": 32, "block_n": 512, "block_d": 128},
+                PIPE_KEY: {"prefetch_depth": "not-an-int"},
+                "capability|pallas": {"compiled": False},
+            },
+        }
+        with open(path, "w") as f:
+            json.dump(payload, f)
+        cache = AutotuneCache(path)
+        assert cache.get(KEY) == BlockShapes(32, 512, 128)
+        assert cache.get_pipeline(PIPE_KEY) is None
+        assert cache.get_capability("pallas") is False
+
+    def test_lookup_pipeline_consults_default_cache(self):
+        assert lookup_pipeline("fqsd-int8-streamed", 8, 1024, 128,
+                               "float32", "l2", 10) is None
+        cache = AutotuneCache(path=None)
+        cache.put_pipeline(PIPE_KEY, KNOBS)
+        set_default_cache(cache)
+        assert lookup_pipeline("fqsd-int8-streamed", 8, 1024, 128,
+                               "float32", "l2", 10) == KNOBS
+
+
+class TestCapability:
+    def test_unprobed_is_none(self, tmp_path):
+        assert AutotuneCache(str(tmp_path / "c.json")).get_capability() is None
+        assert lookup_pallas_capability() is None
+
+    def test_probe_persists_verdict(self, tmp_path):
+        cache = AutotuneCache(str(tmp_path / "c.json"))
+        verdict = probe_pallas_capability(cache=cache)
+        # off-TPU hosts run the fused kernels in interpret mode
+        import jax
+        assert verdict == (jax.default_backend() == "tpu")
+        assert AutotuneCache(str(tmp_path / "c.json")).get_capability() \
+            == verdict
+
+    def test_without_capability_view(self, tmp_path):
+        cache = AutotuneCache(str(tmp_path / "c.json"))
+        cache.put(KEY, BlockShapes(32, 512, 128))
+        cache.put_pipeline(PIPE_KEY, KNOBS)
+        cache.put_capability(False)
+        view = cache.without_capability()
+        assert view.get_capability() is None
+        assert view.get(KEY) == BlockShapes(32, 512, 128)
+        assert view.get_pipeline(PIPE_KEY) == KNOBS
+        # the view is detached: mutating it never touches the file
+        view.put_capability(True)
+        assert AutotuneCache(str(tmp_path / "c.json")).get_capability() is False
+
+
+class TestPipelineSweep:
+    def test_sweep_persists_for_both_streamed_executors(self, tmp_path):
+        cache = AutotuneCache(str(tmp_path / "dev.json"))
+        best, timings = autotune_pipeline(
+            m=4, n=512, d=32, k=3, cache=cache, repeats=1,
+            prefetch_candidates=(1,), trigger_candidates=(0.5, 1.0),
+            rescore_candidates=(2,), shard_candidates=(128,),
+            directory=str(tmp_path / "shards"),
+        )
+        assert isinstance(best, PipelineKnobs)
+        assert len(timings) == 2 and all(t > 0 for t in timings.values())
+        assert best.rescore_factor == 2 and best.rows_per_shard == 128
+        reread = AutotuneCache(str(tmp_path / "dev.json"))
+        keys = [key for key in reread.keys() if key.startswith("pipe|")]
+        assert sorted(key.split("|")[1] for key in keys) == \
+            ["fqsd-int8-mmap-streamed", "fqsd-int8-streamed"]
+        for key in keys:
+            assert reread.get_pipeline(key) == best
+
+    def test_non_l2_metric_rejected(self):
+        with pytest.raises(ValueError, match="l2"):
+            autotune_pipeline(m=4, n=512, d=32, metric="ip")
 
 
 class TestExecutableCacheLRU:

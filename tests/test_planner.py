@@ -9,6 +9,7 @@ import pytest
 
 from repro.core import (
     DatasetMeta,
+    DatasetStoreMeta,
     EngineConfig,
     ExactKNN,
     cache_info,
@@ -138,6 +139,105 @@ class TestPerRequestPlanOverrides:
     def test_invalid_override_rejected(self):
         with pytest.raises(ValueError, match="k must be >= 1"):
             plan((8, 128), META, CFG, "fqsd", k=0)
+
+
+class TestCapabilityGuard:
+    """ISSUE 6 satellite: a persisted interpret-only verdict must veto the
+    fused Pallas executors at plan time (probing is explicit and happens
+    elsewhere — planning itself stays pure cache reads)."""
+
+    INT8_META = DatasetStoreMeta(padded_rows=2048, padded_dim=128,
+                                 n_valid=2000, tier="int8")
+
+    def _verdict(self, compiled):
+        from repro.tuning import AutotuneCache, set_default_cache
+
+        cache = AutotuneCache(path=None)
+        cache.put_capability(compiled)
+        set_default_cache(cache)
+
+    def test_interpret_only_verdict_falls_back_to_xla(self):
+        self._verdict(False)
+        cfg = dataclasses.replace(CFG, backend="pallas")
+        lat = plan((1, 128), META, cfg, "fdsq")
+        assert lat.executor == "fdsq-xla" and lat.mode == "fdsq"
+        assert META.padded_rows % lat.n_partitions == 0
+        thr = plan((64, 128), META, cfg, "fqsd")
+        assert thr.executor == "fqsd-xla" and thr.mode == "fqsd"
+        assert META.padded_rows % thr.chunk_rows == 0
+        i8 = plan((8, 128), self.INT8_META, cfg, "fqsd")
+        assert i8.executor == "fqsd-int8" and i8.tier == "int8"
+
+    def test_compiled_verdict_keeps_pallas(self):
+        self._verdict(True)
+        cfg = dataclasses.replace(CFG, backend="pallas")
+        assert plan((1, 128), META, cfg, "fdsq").executor == "fdsq-pallas"
+        assert plan((8, 128), self.INT8_META, cfg, "fqsd").executor \
+            == "fqsd-int8-pallas"
+
+    def test_unprobed_host_stays_permissive(self):
+        # conftest installs an empty cache == never probed: explicit pallas
+        # backends must keep planning the fused executor (covers every
+        # pre-existing CPU pallas test and bench)
+        cfg = dataclasses.replace(CFG, backend="pallas")
+        assert plan((1, 128), META, cfg, "fdsq").executor == "fdsq-pallas"
+
+    def test_guard_never_touches_xla_plans(self):
+        self._verdict(False)
+        assert plan((4, 128), META, CFG, "fdsq").executor == "fdsq-xla"
+        assert plan((64, 128), META, CFG, "fqsd").executor == "fqsd-xla"
+
+
+class TestPipelineKnobsOnPlan:
+    """ISSUE 6 tentpole: tuned pipeline knobs land on streamed-int8 plans
+    and ride the plan cache key (tuned vs untuned plans must never collide
+    in any plan-keyed cache)."""
+
+    STREAM_META = DatasetStoreMeta(padded_rows=2048, padded_dim=128,
+                                   n_valid=2000, tier="int8", resident=False,
+                                   n_shards=4, rows_per_shard=512)
+
+    def _tune(self, executor="fqsd-int8-streamed", **kw):
+        from repro.tuning import (AutotuneCache, PipelineKnobs, pipeline_key,
+                                  set_default_cache)
+
+        knobs = PipelineKnobs(prefetch_depth=kw.get("prefetch_depth", 4),
+                              spec_trigger=kw.get("spec_trigger", 0.25),
+                              rescore_factor=kw.get("rescore_factor", 8),
+                              rows_per_shard=512)
+        cache = AutotuneCache(path=None)
+        cache.put_pipeline(pipeline_key(executor, 8, 2048, 128, "float32",
+                                        "l2", 10), knobs)
+        set_default_cache(cache)
+        return knobs
+
+    def test_untuned_plan_carries_sentinels(self):
+        p = plan((8, 128), self.STREAM_META, CFG, "fqsd")
+        assert p.executor == "fqsd-int8-streamed"
+        assert (p.prefetch_depth, p.spec_trigger) == (0, -1.0)
+        assert p.rescore_factor == CFG.rescore_factor
+
+    def test_tuned_knobs_land_on_plan_and_cache_key(self):
+        untuned = plan((8, 128), self.STREAM_META, CFG, "fqsd")
+        knobs = self._tune()
+        tuned = plan((8, 128), self.STREAM_META, CFG, "fqsd")
+        assert tuned.prefetch_depth == knobs.prefetch_depth
+        assert tuned.spec_trigger == knobs.spec_trigger
+        assert tuned.rescore_factor == knobs.rescore_factor
+        assert tuned.cache_key() != untuned.cache_key()
+
+    def test_pinned_rescore_budget_wins_over_tuner(self):
+        self._tune(rescore_factor=8)
+        cfg = dataclasses.replace(CFG, rescore_factor=2, rescore_pinned=True)
+        p = plan((8, 128), self.STREAM_META, cfg, "fqsd")
+        assert p.rescore_factor == 2  # pinned by the caller
+        # prefetch/trigger are pure scheduling, they still apply
+        assert (p.prefetch_depth, p.spec_trigger) == (4, 0.25)
+
+    def test_resident_plans_never_carry_pipeline_knobs(self):
+        self._tune()
+        p = plan((8, 128), META, CFG, "fqsd")
+        assert (p.prefetch_depth, p.spec_trigger) == (0, -1.0)
 
 
 class TestLargestDivisor:

@@ -127,3 +127,32 @@ def test_p5_engine_paths_agree(m, n, d, k, metric, seed):
     np.testing.assert_allclose(
         np.asarray(single.scores[0]), np.asarray(batch.scores[0]), rtol=1e-6, atol=1e-6
     )
+
+
+@given(st.integers(1, 4), st.integers(140, 520), st.integers(4, 33),
+       st.integers(1, 5), st.floats(0.0, 1.0), st.integers(0, 2**31 - 1))
+@settings(max_examples=8, deadline=None)
+def test_p6_speculation_trigger_is_result_invariant(m, n, d, k, trigger, seed):
+    """P6 (ISSUE 6): the streamed int8 executor returns bit-identical top-k
+    (values, indices, tie order) to the streamed f32 direct-form oracle at
+    EVERY speculation trigger point — the trigger only reschedules reads."""
+    from repro.api import SearchRequest
+    from repro.core import ExactKNN
+    from repro.core.fqsd import streamed_direct_scan
+    from repro.store import DatasetStore
+
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, d)).astype(f32)
+    q = rng.standard_normal((m, d)).astype(f32)
+    store = DatasetStore.from_array(x, rows_per_shard=128)
+    eng = ExactKNN(k=k, device_budget_bytes=1).fit_store(store)
+    eng.enable_int8()
+    res = eng.search(SearchRequest(queries=q, tier="int8",
+                                   spec_trigger=trigger))
+    assert res.plan.executor == "fqsd-int8-streamed"
+    oracle = streamed_direct_scan(eng._pad_queries(q),
+                                  eng.store.shard_source("f32"), eng.k)
+    np.testing.assert_array_equal(np.asarray(res.topk.scores),
+                                  np.asarray(oracle.scores))
+    np.testing.assert_array_equal(np.asarray(res.topk.indices),
+                                  np.asarray(oracle.indices))

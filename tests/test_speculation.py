@@ -1,0 +1,222 @@
+"""Speculative overlapped rescore (ISSUE 6 tentpole): the streamed int8
+executors may start gathering candidate rows from the f32 tier on a
+background thread after a configurable fraction of shards has merged. The
+contract under test: results are bit-identical to the streamed f32 oracle
+at EVERY trigger point — speculation only reschedules reads — wrong
+speculation is corrected by the top-up diff, changing only the trigger
+never recompiles, and bad knobs are rejected at request-parse time.
+"""
+import numpy as np
+import pytest
+
+from adversarial_cases import QUANT_CASES
+from repro.api import SearchRequest
+from repro.core import ExactKNN, cache_info
+from repro.core.fqsd import streamed_direct_scan
+from repro.core.streaming import SpeculativeGather
+from repro.store import DatasetStore
+
+TRIGGERS = (0.0, 0.25, 0.5, 0.75, 1.0)
+
+
+def _shard_rows(n: int) -> int:
+    return max(128, (n // 3) // 128 * 128)
+
+
+def _fit_streamed(x, k, directory=None, rows_per_shard=None, **kw):
+    store = DatasetStore.from_array(
+        x, rows_per_shard=rows_per_shard or _shard_rows(x.shape[0]),
+        directory=directory)
+    eng = ExactKNN(k=k, device_budget_bytes=1, **kw).fit_store(store)
+    eng.enable_int8()
+    return eng
+
+
+def _oracle(eng, q):
+    return streamed_direct_scan(eng._pad_queries(q),
+                                eng.store.shard_source("f32"), eng.k)
+
+
+# ------------------------------------------------------------ bit-identity
+class TestSpeculationBitIdentity:
+    @pytest.mark.parametrize("name", sorted(QUANT_CASES))
+    def test_every_trigger_matches_oracle(self, name, tmp_path):
+        """One engine per adversarial case, swept over every trigger point
+        (including 0 = speculate after the first shard and 1 = never):
+        scores AND indices bitwise equal to the streamed f32 oracle."""
+        q, x, k = QUANT_CASES[name]()
+        eng = _fit_streamed(x, k, directory=str(tmp_path))
+        oracle = _oracle(eng, q)
+        for trigger in TRIGGERS:
+            res = eng.search(SearchRequest(queries=q, tier="int8",
+                                           spec_trigger=trigger))
+            np.testing.assert_array_equal(
+                np.asarray(res.topk.scores), np.asarray(oracle.scores),
+                err_msg=f"{name}: scores diverged at trigger={trigger}")
+            np.testing.assert_array_equal(
+                np.asarray(res.topk.indices), np.asarray(oracle.indices),
+                err_msg=f"{name}: indices diverged at trigger={trigger}")
+
+    def test_late_shards_overturn_speculation(self, tmp_path):
+        """Adversarial schedule: every true neighbor lives in the LAST
+        shard, so an early speculative gather fetches only decoys and the
+        final diff must top up the entire queue — and still be exact."""
+        rng = np.random.default_rng(7)
+        d, k = 32, 5
+        decoys = rng.standard_normal((384, d)).astype(np.float32) + 50.0
+        near = rng.standard_normal((128, d)).astype(np.float32)
+        x = np.vstack([decoys, near])  # shards 0-2 decoys, shard 3 near
+        q = near[:6] + np.float32(1e-3)
+        eng = _fit_streamed(x, k, directory=str(tmp_path), rows_per_shard=128)
+        assert eng.store.n_shards == 4
+        oracle = _oracle(eng, q)
+        res = eng.search(SearchRequest(queries=q, tier="int8",
+                                       spec_trigger=0.25))
+        np.testing.assert_array_equal(np.asarray(res.topk.scores),
+                                      np.asarray(oracle.scores))
+        np.testing.assert_array_equal(np.asarray(res.topk.indices),
+                                      np.asarray(oracle.indices))
+        spec = res.stats["speculation"]
+        assert spec["rows_speculated"] > 0
+        # the snapshot predates the near shard: the final candidates are
+        # (almost) all misses, so the top-up and waste must both fire
+        assert spec["rows_topped_up"] > 0
+        assert spec["rows_wasted"] > 0
+        # every neighbor comes from the near block despite the speculation
+        assert np.all(np.asarray(res.topk.indices) >= decoys.shape[0])
+
+    def test_engine_level_trigger_and_prefetch(self, tmp_path):
+        q, x, k = QUANT_CASES["gaussian"]()
+        eng = _fit_streamed(x, k, directory=str(tmp_path),
+                            spec_trigger=0.25, prefetch_depth=3)
+        oracle = _oracle(eng, q)
+        res = eng.search(SearchRequest(queries=q, tier="int8"))
+        np.testing.assert_array_equal(np.asarray(res.topk.scores),
+                                      np.asarray(oracle.scores))
+        np.testing.assert_array_equal(np.asarray(res.topk.indices),
+                                      np.asarray(oracle.indices))
+        assert res.stats["speculation"]["trigger"] == 0.25
+
+
+# ------------------------------------------------------------ observability
+class TestPhaseStats:
+    def test_phase_split_and_speculation_block(self, tmp_path):
+        q, x, k = QUANT_CASES["gaussian"]()
+        eng = _fit_streamed(x, k, directory=str(tmp_path))
+        res = eng.search(SearchRequest(queries=q, tier="int8",
+                                       spec_trigger=0.0))
+        for key in ("scan_ms", "gather_ms", "rescore_ms"):
+            assert res.stats[key] >= 0.0
+        spec = res.stats["speculation"]
+        assert spec["trigger"] == 0.0
+        assert spec["rows_speculated"] > 0
+        assert spec["rows_wasted"] <= spec["rows_speculated"]
+        # wasted speculative fetches are charged to the bandwidth account
+        nospec = eng.search(SearchRequest(queries=q, tier="int8",
+                                          spec_trigger=1.0))
+        assert res.stats["bytes_scanned"] >= nospec.stats["bytes_scanned"]
+
+    def test_trigger_one_disables_speculation(self, tmp_path):
+        q, x, k = QUANT_CASES["gaussian"]()
+        eng = _fit_streamed(x, k, directory=str(tmp_path))
+        res = eng.search(SearchRequest(queries=q, tier="int8",
+                                       spec_trigger=1.0))
+        assert res.stats["speculation"]["rows_speculated"] == 0
+        assert res.stats["speculation"]["rows_topped_up"] == 0
+
+
+class TestSchedulerAggregation:
+    def test_stats_surface_phase_and_speculation(self, tmp_path):
+        """AdaptiveScheduler.stats() must aggregate the executor's phase
+        split and speculation counters across a served stream (ISSUE 6
+        observability satellite)."""
+        from repro.serving import AdaptiveScheduler
+
+        q, x, k = QUANT_CASES["gaussian"]()
+        eng = _fit_streamed(x, k, directory=str(tmp_path))
+        sched = AdaptiveScheduler(eng, policy="throughput")
+        reqs = [SearchRequest(queries=row, rid=i, tier="int8",
+                              spec_trigger=0.5)
+                for i, row in enumerate(q)]
+        results = list(sched.serve(reqs))
+        assert len(results) == q.shape[0]
+        st = sched.stats()
+        assert st["phase_ms"]["scan_ms"] > 0.0
+        assert st["phase_ms"]["rescore_ms"] >= 0.0
+        assert st["speculation"]["dispatches"] >= 1
+        assert st["speculation"]["rows_speculated"] > 0
+
+
+# ------------------------------------------------------------- no recompile
+class TestNoRecompile:
+    def test_trigger_change_hits_executable_cache(self, tmp_path):
+        """The speculation trigger rides the plan cache key (tuned knobs
+        must be distinguishable) but NOT the streamed step executables,
+        which key on (kind, k/r) only — so retuning the trigger or the
+        prefetch depth never pays a recompile."""
+        q, x, k = QUANT_CASES["gaussian"]()
+        eng = _fit_streamed(x, k, directory=str(tmp_path))
+        eng.search(SearchRequest(queries=q, tier="int8", spec_trigger=0.5))
+        misses = cache_info()["misses"]
+        for trigger in (0.0, 0.25, 0.75, 1.0):
+            eng.search(SearchRequest(queries=q, tier="int8",
+                                     spec_trigger=trigger,
+                                     prefetch_depth=1 + int(4 * trigger)))
+        assert cache_info()["misses"] == misses
+
+
+# -------------------------------------------------- background-thread unit
+class TestSpeculativeGather:
+    def test_gathers_unique_sorted_ids(self):
+        class Store:
+            def gather_rows(self, ids):
+                return np.asarray(ids, np.float32)[:, None] * 2.0
+
+        sg = SpeculativeGather(np.array([[3, 1], [1, 2]]), Store())
+        ids, rows = sg.result()
+        np.testing.assert_array_equal(ids, [1, 2, 3])
+        np.testing.assert_array_equal(rows[:, 0], [2.0, 4.0, 6.0])
+
+    def test_background_error_propagates(self):
+        class Broken:
+            def gather_rows(self, ids):
+                raise OSError("shard file vanished")
+
+        sg = SpeculativeGather(np.array([[0, 1]]), Broken())
+        with pytest.raises(OSError, match="shard file vanished"):
+            sg.result()
+
+
+# ------------------------------------------------------------- validation
+class TestKnobValidation:
+    @pytest.mark.parametrize("bad", [0, -1])
+    def test_request_rejects_bad_prefetch(self, bad):
+        with pytest.raises(ValueError, match="prefetch_depth"):
+            SearchRequest(queries=np.zeros(4, np.float32), prefetch_depth=bad)
+
+    @pytest.mark.parametrize("bad", [-0.1, 1.5, 2.0])
+    def test_request_rejects_bad_trigger(self, bad):
+        with pytest.raises(ValueError, match="spec_trigger"):
+            SearchRequest(queries=np.zeros(4, np.float32), spec_trigger=bad)
+
+    def test_engine_rejects_bad_knobs(self):
+        with pytest.raises(ValueError, match="prefetch_depth"):
+            ExactKNN(k=3, prefetch_depth=0)
+        with pytest.raises(ValueError, match="spec_trigger"):
+            ExactKNN(k=3, spec_trigger=1.5)
+        with pytest.raises(ValueError, match="rescore_factor"):
+            ExactKNN(k=3, rescore_factor=0)
+
+    def test_serve_cli_rejects_bad_knobs(self):
+        import argparse
+
+        from repro.launch.serve import _positive_int, _shard_fraction
+
+        assert _positive_int("2") == 2
+        assert _shard_fraction("0.5") == 0.5
+        for bad in ("0", "-3", "x"):
+            with pytest.raises(argparse.ArgumentTypeError):
+                _positive_int(bad)
+        for bad in ("1.5", "-0.1", "y"):
+            with pytest.raises(argparse.ArgumentTypeError):
+                _shard_fraction(bad)
