@@ -27,6 +27,11 @@ import numpy as np
 
 from repro.api.types import SearchRequest, SearchResult
 
+#: one Mesh per device group (keyed by device ids): collections placed on
+#: the same devices share the identical Mesh object, so their mesh
+#: executables share cache entries by construction
+_MESH_BY_GROUP: dict = {}
+
 
 class Router:
     """Route search traffic across named collections.
@@ -51,25 +56,73 @@ class Router:
         self._stats: dict[str, dict] = {}
 
     # ----------------------------------------------------------- collections
-    def create(self, name: str, vectors=None, *, store=None, **engine_kwargs):
+    def create(self, name: str, vectors=None, *, store=None, devices=None,
+               **engine_kwargs):
         """Build and attach a DatasetStore-backed engine for `name`.
 
         Pass either raw ``vectors`` (an (N, d) array; wrapped in an
         in-memory store) or a prebuilt ``store`` (possibly mmap-backed /
         multi-shard). Remaining kwargs go to the ``ExactKNN`` constructor
         (k, metric, backend, device_budget_bytes, ...).
+
+        ``devices`` places the collection's shards across a device group:
+        pass a device count (first N local devices) or an explicit sequence
+        of ``jax.Device``. The Router builds a 1-D ``("data",)`` mesh over
+        them and hands it to the engine, so resident tiers shard row-wise
+        across the group and streamed tiers ring-stream over it — while the
+        process-wide executable cache stays shared: two collections placed
+        on the same device group reuse each other's compiled mesh
+        executables (same ``(cache_key, mesh, axes)``).
         """
         from repro.core.engine import ExactKNN
 
         self._check_name(name)  # fail before any fitting/device work
         if (vectors is None) == (store is None):
             raise ValueError("pass exactly one of `vectors` or `store`")
+        if devices is not None:
+            if "mesh" in engine_kwargs:
+                raise ValueError("pass either `devices` or `mesh`, not both")
+            engine_kwargs = dict(
+                engine_kwargs,
+                mesh=self._make_mesh(devices),
+                mesh_axes=("data",),
+            )
         engine = ExactKNN(**engine_kwargs)
         if store is not None:
             engine.fit_store(store)
         else:
             engine.fit(np.asarray(vectors, dtype=np.float32))
         return self.attach(name, engine)
+
+    @staticmethod
+    def _make_mesh(devices):
+        """A 1-D ``("data",)`` mesh over an explicit device group.
+
+        ``devices`` is a count (first N of ``jax.devices()``) or a sequence
+        of ``jax.Device``. The same group always yields an identical mesh,
+        keeping the shared-cache key ``(plan.cache_key(), mesh, axes)``
+        stable across collections placed on the same devices.
+        """
+        import jax
+
+        from repro import compat
+
+        if isinstance(devices, int):
+            avail = jax.devices()
+            if not 1 <= devices <= len(avail):
+                raise ValueError(
+                    f"devices={devices} but {len(avail)} device(s) present"
+                )
+            devices = avail[:devices]
+        devices = list(devices)
+        if not devices:
+            raise ValueError("`devices` must name at least one device")
+        group = tuple(d.id for d in devices)
+        if group not in _MESH_BY_GROUP:
+            _MESH_BY_GROUP[group] = compat.make_mesh(
+                (len(devices),), ("data",), devices=devices
+            )
+        return _MESH_BY_GROUP[group]
 
     def _check_name(self, name: str) -> None:
         if not isinstance(name, str) or not name:
@@ -82,12 +135,15 @@ class Router:
         self._check_name(name)
         if not engine.is_fitted:
             raise ValueError(f"engine for collection {name!r} must be fitted")
+        mesh = getattr(engine, "mesh", None)
         self._engines[name] = engine
         self._stats[name] = {
             "requests": 0,
             "queries": 0,
             "bytes_scanned": {"f32": 0, "int8": 0},
             "tiers": set(),
+            "devices": ([str(d) for d in mesh.devices.flat]
+                        if mesh is not None else None),
         }
         return engine
 
@@ -156,6 +212,7 @@ class Router:
                 "bytes_scanned": dict(s["bytes_scanned"]),
                 "tiers": sorted(s["tiers"]),
                 "n_rows": int(self._engines[name].n),
+                "devices": s["devices"],
             }
         return {"collections": out, "executable_cache": self.cache_info()}
 

@@ -10,6 +10,8 @@ Public API (planner -> executors -> facade):
     fdsq_search         partition-parallel resident-dataset search (latency)
     fqsd_streamed       host-streamed search with double buffering
     fdsq_sharded/fqsd_sharded/fqsd_ring   mesh-distributed executors
+    fdsq_sharded_int8   mesh-resident certified int8 bound scan
+    make_ring_put       round-robin device_put for mesh ring streaming
 """
 from repro.core.distance import (
     cosine_distance,
@@ -21,6 +23,7 @@ from repro.core.distance import (
 from repro.core.engine import ExactKNN
 from repro.core.executors import (
     ExecContext,
+    MeshTiered,
     TieredResident,
     cache_info,
     cached_partition_step,
@@ -46,14 +49,22 @@ from repro.core.partition import PaddedDataset, iter_partitions, make_padded
 from repro.core.quantized import (
     Int8Partition,
     QuantizedDataset,
+    int8_lower_bounds,
     knn_quantized,
     quantize_dataset,
     quantized_norm_sq,
 )
-from repro.core.sharded import fdsq_sharded, fqsd_ring, fqsd_sharded, shard_dataset
+from repro.core.sharded import (
+    fdsq_sharded,
+    fdsq_sharded_int8,
+    fqsd_ring,
+    fqsd_sharded,
+    shard_dataset,
+)
 from repro.core.streaming import (
     DoubleBufferedStream,
     device_put_partition,
+    make_ring_put,
     prefetch_to_device,
 )
 from repro.core.topk import (
@@ -73,15 +84,17 @@ __all__ = [
     "execute", "register_executor", "get_executor", "list_executors",
     "cache_info", "clear_executable_cache", "set_executable_cache_limit",
     "ExecContext",
-    "TieredResident", "cached_partition_step",
+    "TieredResident", "MeshTiered", "cached_partition_step",
     "fqsd_scan", "fqsd_streamed", "streamed_direct_scan",
     "fdsq_search", "fdsq_query_stream",
-    "fdsq_sharded", "fqsd_sharded", "fqsd_ring", "shard_dataset",
+    "fdsq_sharded", "fdsq_sharded_int8", "fqsd_sharded", "fqsd_ring",
+    "shard_dataset",
     "pairwise_scores", "l2_sq", "inner_product", "cosine_distance",
     "row_norms_sq", "topk_smallest", "merge_topk", "merge_two_sorted",
     "tree_merge_sorted", "empty_topk", "knn_oracle",
     "PaddedDataset", "make_padded", "iter_partitions",
     "DoubleBufferedStream", "prefetch_to_device", "device_put_partition",
+    "make_ring_put",
     "QuantizedDataset", "Int8Partition", "quantize_dataset",
-    "knn_quantized", "quantized_norm_sq",
+    "knn_quantized", "quantized_norm_sq", "int8_lower_bounds",
 ]

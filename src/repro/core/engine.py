@@ -63,6 +63,7 @@ from repro.core import sharded as sh
 from repro.core.distance import Metric, validate_metric
 from repro.core.executors import (
     ExecContext,
+    MeshTiered,
     TieredResident,
     cached_partition_step,
     execute,
@@ -267,13 +268,6 @@ class ExactKNN:
         if resident is None:
             budget = self.device_budget_bytes
             resident = budget is None or store.nbytes("f32") <= budget
-        if self.mesh is not None and not resident:
-            raise ValueError("mesh-sharded serving requires a resident store")
-        if self.mesh is not None and store.n_delta > 0:
-            raise NotImplementedError(
-                "store holds delta rows but mesh serving cannot merge them "
-                "yet; compact the store before mesh fit_store()"
-            )
         self._store = store
         self._resident = bool(resident)
         self._ds = None
@@ -299,10 +293,9 @@ class ExactKNN:
             if self.mesh is not None:
                 vec, nrm = sh.shard_dataset(self.mesh, vec, nrm, self.mesh_axes)
             self._ds = part.PaddedDataset(vec, nrm, host.n_valid, 0)
-            if store.has_tier("int8") and self.metric == "l2" and self.mesh is None:
+            if store.has_tier("int8") and self.metric == "l2":
                 self._refresh_int8_view()
-        if self.mesh is None:
-            self._put_delta_shards()
+        self._put_delta_shards()
         return self
 
     def _row_mult(self, n: int) -> int:
@@ -371,34 +364,40 @@ class ExactKNN:
         self._require_fit()
         if self._store is None:
             raise RuntimeError("engine was fitted without a DatasetStore")
+
+    def _put_norms(self, norms) -> jax.Array:
+        """Device view of a norms-like per-row channel: row-sharded over the
+        mesh when one is attached (the SAME NamedSharding the fit-time
+        shard placed — norms are runtime data, so a mutation re-put never
+        touches a compiled executable), default device otherwise."""
         if self.mesh is not None:
-            raise NotImplementedError(
-                "online upsert/delete on a mesh-sharded store is not "
-                "supported yet (replicated delta shards are future work)"
+            from jax.sharding import NamedSharding, PartitionSpec
+            return jax.device_put(
+                np.asarray(norms),
+                NamedSharding(self.mesh, PartitionSpec(tuple(self.mesh_axes))),
             )
+        return jnp.asarray(norms)
 
     def _sync_mutations(self) -> None:
         """Re-derive device views after store mutations: norms refresh in
         place (same shapes) and delta shards are re-put; vectors and every
-        compiled executable are untouched."""
+        compiled executable are untouched. Mesh views resync the same way —
+        tombstones ride the (re-sharded) norms channel, delta shards stay
+        on the default device and merge through the host round-trip in
+        :meth:`_merge_delta`."""
         if self._store is None or self._store.mutation_count == self._seen_mutations:
             return
-        if self.mesh is not None:
-            raise NotImplementedError(
-                "the attached store mutated but mesh-sharded views cannot "
-                "resync online yet; re-fit_store() the engine"
-            )
         self._seen_mutations = self._store.mutation_count
         if self._resident and self._ds is not None:
             self._ds = part.PaddedDataset(
-                self._ds.vectors, jnp.asarray(self._store.resident_norms()),
+                self._ds.vectors, self._put_norms(self._store.resident_norms()),
                 self._ds.n_valid, 0,
             )
             if self._int8 is not None:
                 # only the norms channel moves on mutation; codes/scales/err
                 # were uploaded once at enable_int8()
                 self._int8 = self._int8._replace(
-                    norms_sq=jnp.asarray(self._store.int8_resident_norms())
+                    norms_sq=self._put_norms(self._store.int8_resident_norms())
                 )
         self._put_delta_shards()
 
@@ -442,6 +441,13 @@ class ExactKNN:
         k = self.k if k is None else int(k)
         metric = self.metric if metric is None else metric
         step = cached_partition_step(k, metric)
+        if self.mesh is not None:
+            # a mesh executor's TopK is committed (replicated) across the
+            # mesh; the delta arrays live on the default device. Detach the
+            # O(m*k) result via host round-trip so the cached step never
+            # mixes arrays committed to different devices.
+            out = TopK(jnp.asarray(jax.device_get(out.scores)),
+                       jnp.asarray(jax.device_get(out.indices)))
         for p in self._delta_dev:
             norms = p.norms
             if mask is not None:
@@ -465,11 +471,6 @@ class ExactKNN:
             raise RuntimeError("int8 tier requires a DatasetStore-backed fit")
         if self.metric != "l2":
             raise ValueError("int8 tier supports the l2 metric only")
-        if self.mesh is not None:
-            raise NotImplementedError(
-                "int8 tier on a mesh-sharded engine is not supported yet "
-                "(the planner's sharded executors read the f32 view)"
-            )
         self._store.ensure_tier("int8")
         if self._resident:
             self._refresh_int8_view()
@@ -481,6 +482,19 @@ class ExactKNN:
         # (quantized_norm_sq) every QuantizedDataset producer uses, and is
         # persisted with the shard, so engine-path bounds match the raw
         # path bitwise; mutations only ever refresh norms_sq
+        if self.mesh is not None:
+            # mesh-resident int8: every channel row-shards over the mesh
+            # axes (codes 1 B/element per device; the f32 tier stays off
+            # the mesh — only candidate rows of it are ever gathered)
+            from jax.sharding import NamedSharding, PartitionSpec
+            spec = NamedSharding(self.mesh,
+                                 PartitionSpec(tuple(self.mesh_axes)))
+            self._int8 = QuantizedDataset(
+                *(jax.device_put(np.asarray(a), spec)
+                  for a in (i8.q, i8.scales, i8.err, i8.norms_sq,
+                            i8.qnorm_sq))
+            )
+            return
         self._int8 = QuantizedDataset(
             jnp.asarray(i8.q), jnp.asarray(i8.scales), jnp.asarray(i8.err),
             jnp.asarray(i8.norms_sq), jnp.asarray(i8.qnorm_sq),
@@ -591,8 +605,15 @@ class ExactKNN:
             return ds
         n_main = self._store.n_main if self._store is not None else ds.n_valid
         keep = _keep_rows(mask, 0, n_main, int(ds.vectors.shape[0]))
-        norms = jnp.where(jnp.asarray(keep), ds.norms, jnp.inf)
+        norms = jnp.where(self._put_like(keep, ds.norms), ds.norms, jnp.inf)
         return part.PaddedDataset(ds.vectors, norms, ds.n_valid, ds.base_index)
+
+    def _put_like(self, host_arr: np.ndarray, ref: jax.Array) -> jax.Array:
+        """Ship a host per-row channel next to `ref` (same NamedSharding on
+        a mesh view) so masking a sharded channel never gathers it."""
+        if self.mesh is not None:
+            return jax.device_put(np.asarray(host_arr), ref.sharding)
+        return jnp.asarray(host_arr)
 
     def _masked_int8(self, mask: np.ndarray | None) -> QuantizedDataset:
         """Int8 view under the same per-request mask (norms_sq is the int8
@@ -603,7 +624,8 @@ class ExactKNN:
         keep = _keep_rows(mask, 0, self._store.n_main,
                           int(q8.norms_sq.shape[0]))
         return q8._replace(
-            norms_sq=jnp.where(jnp.asarray(keep), q8.norms_sq, jnp.inf)
+            norms_sq=jnp.where(self._put_like(keep, q8.norms_sq),
+                               q8.norms_sq, jnp.inf)
         )
 
     def search(self, request: SearchRequest) -> SearchResult:
@@ -664,11 +686,6 @@ class ExactKNN:
                     "filter_mask must cover the engine's global id space "
                     f"({self.n_ids} rows), got {mask.shape[0]}"
                 )
-            if self.mesh is not None:
-                raise NotImplementedError(
-                    "per-request filter masks on a mesh-sharded engine are "
-                    "not supported yet"
-                )
         t0 = time.perf_counter()
         if not self._resident:
             # tier="int8" survives planning here: the out-of-core scan
@@ -700,13 +717,22 @@ class ExactKNN:
                 (m, self._padded_dim()), self.dataset_meta(tier=tier),
                 self.config(), mode, k=k, metric=metric,
             )
-            if p.tier == "int8":
+            if p.executor == "fdsq-sharded-int8":
+                # mesh-resident int8: the sharded quantized view plus the
+                # backing store for the candidate-only f32 rescore (masked
+                # view when the request filters — gather/delta/fallback all
+                # see the same exclusions)
+                src = (self._store if mask is None
+                       else _MaskedShardSource(self._store, mask))
+                dataset = MeshTiered(self._masked_int8(mask), src)
+            elif p.tier == "int8":
                 dataset = TieredResident(self._masked_resident(mask),
                                          self._masked_int8(mask))
             else:
                 dataset = self._masked_resident(mask)
             out = self._run(p, qv, dataset)
-            out = self._merge_delta(out, qv, k=k, metric=metric, mask=mask)
+            if not self._last_ctx.delta_folded:
+                out = self._merge_delta(out, qv, k=k, metric=metric, mask=mask)
         dispatch_ms = (time.perf_counter() - t0) * 1e3
         ctx = self._last_ctx
         cert = ctx.certificate if (ctx is not None and p.tier == "int8") else None
@@ -726,6 +752,10 @@ class ExactKNN:
         if ctx is not None and ctx.stream_stats is not None:
             stats["transfers"] = ctx.stream_stats.get("transfers", 0)
             stats["restarts"] = ctx.stream_stats.get("restarts", 0)
+        if ctx is not None and ctx.device_bytes is not None:
+            # mesh executors: the scan-bytes split per device (the total —
+            # incl. gather/delta/fallback traffic — is bytes_scanned above)
+            stats["bytes_per_device"] = list(ctx.device_bytes)
         if ctx is not None and ctx.phase_ms is not None:
             # the streamed int8 wall-time split (scan / gather / rescore)
             stats.update(ctx.phase_ms)

@@ -50,6 +50,7 @@ from repro.core.streaming import (
     DoubleBufferedStream,
     SpeculativeGather,
     device_put_partition,
+    make_ring_put,
 )
 from repro.core.topk import TopK, sort_pairs
 
@@ -94,6 +95,15 @@ class ExecContext:
     #: "rows_topped_up", "rows_wasted"} — wasted speculative fetches are
     #: also charged to bytes_scanned (honest traffic accounting)
     speculation: dict | None = None
+    #: set by the mesh int8 executors: scan bytes each device moved (list of
+    #: len = device count). The total still lands on bytes_scanned; this is
+    #: the per-device split (gather/delta/fallback traffic is host-side and
+    #: charged to the total only).
+    device_bytes: list | None = None
+    #: set by executors that merge the store's delta shards themselves (the
+    #: int8 rescore tail does); the engine then skips its own delta merge so
+    #: upserted rows are never scored twice
+    delta_folded: bool = False
 
 
 class TieredResident(NamedTuple):
@@ -102,6 +112,17 @@ class TieredResident(NamedTuple):
 
     f32: part.PaddedDataset
     quant: QuantizedDataset
+
+
+class MeshTiered(NamedTuple):
+    """Mesh-resident int8 tier (what fdsq-sharded-int8 consumes): the
+    quantized arrays row-sharded over the mesh axes (NamedSharding), plus
+    the backing DatasetStore for the candidate-only f32 rescore
+    (``gather_rows``) and the exact streamed fallback. The f32 tier never
+    lives on the mesh — only candidate rows of it are ever read."""
+
+    quant: QuantizedDataset
+    store: object
 
 
 Executor = Callable[[ExecutionPlan, jax.Array, object, ExecContext], TopK]
@@ -432,6 +453,122 @@ def _make_stream_rescore(k: int) -> Callable:
     return rescore
 
 
+def _rescore_budget(plan) -> int:
+    """The resolved candidate budget r of an int8 plan: rescore_factor * k,
+    clamped to the dataset (and >= 1 so the widened queue always exists)."""
+    return max(1, min(int(plan.padded_rows), int(plan.rescore_factor) * plan.k))
+
+
+def _rescore_certify(plan, queries, store, ctx, lb, li, scan_bytes,
+                     spec=None, t_start=None, trigger=1.0) -> TopK:
+    """Shared epilogue of every certified-int8 executor that scans through a
+    DatasetStore (single-device streamed AND the mesh paths): given the
+    final widened (m, r+1) lower-bound queue, gather the candidate f32 rows
+    (reusing a speculative gather when one ran), rescore exactly, merge the
+    live delta shards, certify, and fall back to the streamed f32 oracle
+    for uncertified queries.
+
+    ``lb``/``li`` may be committed anywhere (a mesh-replicated shard_map
+    output or the default-device streamed queue): the epilogue syncs them
+    to host and runs on the default device, so mesh-committed scan outputs
+    never mix with default-device delta/rescore arrays. Phases 2+3 of the
+    :func:`_int8_streamed` docstring, verbatim — one body is what makes
+    every int8 executor bit-identical to the streamed f32 oracle.
+    """
+    import time
+
+    if t_start is None:
+        t_start = time.perf_counter()
+    m = int(queries.shape[0])
+    r = _rescore_budget(plan)
+    direct_step = _cached(("direct-step", plan.k),
+                          lambda: make_direct_partition_step(plan.k))
+    rescore = _cached(("int8-stream-rescore", plan.k),
+                      lambda: _make_stream_rescore(plan.k))
+    if ctx.stream_stats is None:
+        ctx.stream_stats = {"transfers": 0, "restarts": 0}
+
+    # pull ONLY the candidate indices to host, dedup across queries
+    cand_idx = np.asarray(li[:, :r])
+    # best lower bound OUTSIDE the candidate set; host round-trip detaches
+    # it from whatever device/mesh produced the queue
+    lb_r1 = jnp.asarray(np.asarray(lb[:, r]))
+    t_scan = time.perf_counter()
+    uniq, inv = np.unique(cand_idx, return_inverse=True)
+    rows_speculated = rows_topped = rows_wasted = 0
+    if spec is not None:
+        spec_ids, spec_rows = spec.result()  # join the producer thread
+        # diff the final queue against the snapshot: reuse hits by id,
+        # top up only the ids the late shards added
+        pos = np.searchsorted(spec_ids, uniq)
+        pos_c = np.minimum(pos, max(0, spec_ids.size - 1))
+        hit = (spec_ids[pos_c] == uniq) if spec_ids.size else \
+            np.zeros(uniq.shape, bool)
+        rows = np.zeros((uniq.size, spec_rows.shape[1]), np.float32)
+        rows[hit] = spec_rows[pos_c[hit]]
+        missing = uniq[~hit]
+        if missing.size:
+            rows[~hit] = store.gather_rows(missing)
+        rows_speculated = int((spec_ids >= 0).sum())
+        rows_topped = int((missing >= 0).sum())
+        rows_wasted = rows_speculated - int((uniq[hit] >= 0).sum())
+        # every fetched row is traffic, used or not (wasted speculation
+        # is the price of the overlap and must show up in the account)
+        scan_bytes += (rows_speculated + rows_topped) * int(rows.shape[1]) * 4
+    else:
+        rows = store.gather_rows(uniq)
+        scan_bytes += int((uniq >= 0).sum()) * int(rows.shape[1]) * 4
+    ctx.speculation = {
+        "trigger": trigger,
+        "rows_speculated": rows_speculated,
+        "rows_topped_up": rows_topped,
+        "rows_wasted": rows_wasted,
+    }
+    cand_vecs = rows[inv.reshape(m, r)]  # host scatter back to (m, r, d)
+    t_gather = time.perf_counter()
+    s, i = rescore(queries, jnp.asarray(cand_vecs), jnp.asarray(cand_idx))
+
+    # live delta rows have no int8 representation: merge them exactly
+    # through the same direct-form step the oracle uses (order-invariant)
+    for p in store.delta_shards():
+        dp = device_put_partition(p)
+        s, i = direct_step(s, i, queries, dp.vectors, dp.norms,
+                           jnp.int32(p.base_index))
+        scan_bytes += int(p.vectors.shape[0]) * int(p.vectors.shape[1]) * 4
+    ctx.delta_folded = True
+
+    thresh = s[:, plan.k - 1]
+    cert = (lb_r1 > thresh) | ~jnp.isfinite(lb_r1)
+    ctx.certificate = cert
+    out = TopK(s, jnp.where(jnp.isfinite(s), i, -1))
+
+    if not bool(jax.device_get(cert).all()):
+        from repro.core.fqsd import streamed_direct_scan
+
+        fb_stats: dict = {}
+        exact = streamed_direct_scan(
+            queries, store.shard_source("f32"), plan.k,
+            prefetch_depth=ctx.prefetch_depth, step_fn=direct_step,
+            stream_stats=fb_stats,
+        )
+        # the fallback is a second full pass: its shipped partitions join
+        # the transfer account (exactly the case an operator wants to see)
+        for key in ("transfers", "restarts"):
+            ctx.stream_stats[key] += fb_stats.get(key, 0)
+        scan_bytes += int(plan.padded_rows) * int(plan.padded_dim) * 4
+        keep = cert[:, None]
+        out = TopK(jnp.where(keep, out.scores, exact.scores),
+                   jnp.where(keep, out.indices, exact.indices))
+    jax.block_until_ready(out.scores)
+    ctx.phase_ms = {
+        "scan_ms": (t_scan - t_start) * 1e3,
+        "gather_ms": (t_gather - t_scan) * 1e3,
+        "rescore_ms": (time.perf_counter() - t_gather) * 1e3,
+    }
+    ctx.bytes_scanned = scan_bytes
+    return out
+
+
 def _int8_streamed(plan, queries, store, ctx) -> TopK:
     """Shared body of the streamed int8 executors (host-RAM and mmap
     shards run the identical schedule; the plan label tells them apart).
@@ -478,7 +615,7 @@ def _int8_streamed(plan, queries, store, ctx) -> TopK:
 
     t_start = time.perf_counter()
     m = int(queries.shape[0])
-    r = max(1, min(int(plan.padded_rows), int(plan.rescore_factor) * plan.k))
+    r = _rescore_budget(plan)
     # rescore_factor rides plan.cache_key(); the step caches key on the
     # resolved budget r so differing budgets never share a queue executable.
     # NOTE the pipeline knobs (prefetch depth, speculation trigger) are
@@ -486,10 +623,6 @@ def _int8_streamed(plan, queries, store, ctx) -> TopK:
     # host work but never recompiles (tested by test_speculation.py).
     bound_step = _cached(("int8-bound-step", r),
                          lambda: make_int8_bound_step(r))
-    direct_step = _cached(("direct-step", plan.k),
-                          lambda: make_direct_partition_step(plan.k))
-    rescore = _cached(("int8-stream-rescore", plan.k),
-                      lambda: _make_stream_rescore(plan.k))
 
     trigger = ctx.spec_trigger
     if trigger is None:
@@ -525,83 +658,8 @@ def _int8_streamed(plan, queries, store, ctx) -> TopK:
             spec = SpeculativeGather(li[:, :r], store)
     ctx.stream_stats = {"transfers": stream.transfers,
                         "restarts": stream.restarts}
-
-    # pull ONLY the candidate indices to host, dedup across queries
-    cand_idx = np.asarray(li[:, :r])
-    t_scan = time.perf_counter()
-    uniq, inv = np.unique(cand_idx, return_inverse=True)
-    rows_speculated = rows_topped = rows_wasted = 0
-    if spec is not None:
-        spec_ids, spec_rows = spec.result()  # join the producer thread
-        # diff the final queue against the snapshot: reuse hits by id,
-        # top up only the ids the late shards added
-        pos = np.searchsorted(spec_ids, uniq)
-        pos_c = np.minimum(pos, max(0, spec_ids.size - 1))
-        hit = (spec_ids[pos_c] == uniq) if spec_ids.size else \
-            np.zeros(uniq.shape, bool)
-        rows = np.zeros((uniq.size, spec_rows.shape[1]), np.float32)
-        rows[hit] = spec_rows[pos_c[hit]]
-        missing = uniq[~hit]
-        if missing.size:
-            rows[~hit] = store.gather_rows(missing)
-        rows_speculated = int((spec_ids >= 0).sum())
-        rows_topped = int((missing >= 0).sum())
-        rows_wasted = rows_speculated - int((uniq[hit] >= 0).sum())
-        # every fetched row is traffic, used or not (wasted speculation
-        # is the price of the overlap and must show up in the account)
-        scan_bytes += (rows_speculated + rows_topped) * int(rows.shape[1]) * 4
-    else:
-        rows = store.gather_rows(uniq)
-        scan_bytes += int((uniq >= 0).sum()) * int(rows.shape[1]) * 4
-    ctx.speculation = {
-        "trigger": trigger,
-        "rows_speculated": rows_speculated,
-        "rows_topped_up": rows_topped,
-        "rows_wasted": rows_wasted,
-    }
-    cand_vecs = rows[inv.reshape(m, r)]  # host scatter back to (m, r, d)
-    t_gather = time.perf_counter()
-    s, i = rescore(queries, jnp.asarray(cand_vecs), jnp.asarray(cand_idx))
-
-    # live delta rows have no int8 representation: merge them exactly
-    # through the same direct-form step the oracle uses (order-invariant)
-    for p in store.delta_shards():
-        dp = device_put_partition(p)
-        s, i = direct_step(s, i, queries, dp.vectors, dp.norms,
-                           jnp.int32(p.base_index))
-        scan_bytes += int(p.vectors.shape[0]) * int(p.vectors.shape[1]) * 4
-
-    thresh = s[:, plan.k - 1]
-    lb_r1 = lb[:, r]  # best lower bound OUTSIDE the candidate set
-    cert = (lb_r1 > thresh) | ~jnp.isfinite(lb_r1)
-    ctx.certificate = cert
-    out = TopK(s, jnp.where(jnp.isfinite(s), i, -1))
-
-    if not bool(jax.device_get(cert).all()):
-        from repro.core.fqsd import streamed_direct_scan
-
-        fb_stats: dict = {}
-        exact = streamed_direct_scan(
-            queries, store.shard_source("f32"), plan.k,
-            prefetch_depth=ctx.prefetch_depth, step_fn=direct_step,
-            stream_stats=fb_stats,
-        )
-        # the fallback is a second full pass: its shipped partitions join
-        # the transfer account (exactly the case an operator wants to see)
-        for key in ("transfers", "restarts"):
-            ctx.stream_stats[key] += fb_stats.get(key, 0)
-        scan_bytes += int(plan.padded_rows) * int(plan.padded_dim) * 4
-        keep = cert[:, None]
-        out = TopK(jnp.where(keep, out.scores, exact.scores),
-                   jnp.where(keep, out.indices, exact.indices))
-    jax.block_until_ready(out.scores)
-    ctx.phase_ms = {
-        "scan_ms": (t_scan - t_start) * 1e3,
-        "gather_ms": (t_gather - t_scan) * 1e3,
-        "rescore_ms": (time.perf_counter() - t_gather) * 1e3,
-    }
-    ctx.bytes_scanned = scan_bytes
-    return out
+    return _rescore_certify(plan, queries, store, ctx, lb, li, scan_bytes,
+                            spec=spec, t_start=t_start, trigger=trigger)
 
 
 @register_executor("fqsd-int8-streamed")
@@ -646,3 +704,125 @@ def _fqsd_sharded(plan, queries, dataset: part.PaddedDataset, ctx) -> TopK:
     key = (plan.cache_key(), ctx.mesh)
     fn = _cached(key, lambda: sh.fqsd_ring(ctx.mesh, plan.k, plan.metric))
     return fn(queries, dataset.vectors, dataset.norms)
+
+
+@register_executor("fdsq-sharded-int8")
+def _fdsq_sharded_int8(plan, queries, dataset: MeshTiered, ctx) -> TopK:
+    """Mesh-resident certified int8: the quantized arrays live row-sharded
+    over the mesh, every device computes reverse-triangle lower bounds on
+    its rows only (1 B/element local traffic) and keeps a widened (m, r+1)
+    queue, the queues merge hierarchically with O(r) collective volume
+    (repro.core.sharded.fdsq_sharded_int8), and the shared epilogue
+    gathers + rescores only candidate f32 rows from the backing store —
+    certified or exactly recomputed, bit-identical to the streamed f32
+    oracle either way."""
+    import time
+
+    if ctx.mesh is None:
+        raise ValueError("plan requires a mesh but ExecContext.mesh is None")
+    t_start = time.perf_counter()
+    r = _rescore_budget(plan)
+    key = (plan.cache_key(), ctx.mesh, tuple(ctx.mesh_axes))
+    fn = _cached(
+        key,
+        lambda: sh.fdsq_sharded_int8(ctx.mesh, r, tuple(ctx.mesh_axes)),
+    )
+    q8 = dataset.quant
+    # validity (padding / tombstones / filter mask) rides the exact-norms
+    # channel; fold it into qnorm so the mesh scan needs a single channel —
+    # runtime data on sharded arrays, never a shape change
+    qnorm = jnp.where(jnp.isfinite(q8.norms_sq), q8.qnorm_sq, jnp.inf)
+    state = fn(queries, q8.q, q8.scales, q8.err, qnorm)
+    n_dev = 1
+    for ax in ctx.mesh_axes:
+        n_dev *= int(ctx.mesh.shape[ax])
+    rows_per_dev = int(q8.q.shape[0]) // n_dev
+    per_dev = rows_per_dev * int(q8.q.shape[1]) + 12 * rows_per_dev
+    ctx.device_bytes = [per_dev] * n_dev
+    return _rescore_certify(plan, queries, dataset.store, ctx,
+                            state.scores, state.indices, per_dev * n_dev,
+                            t_start=t_start)
+
+
+def _int8_mesh_streamed(plan, queries, store, ctx) -> TopK:
+    """Shared body of the ring-streamed mesh int8 executors (host-RAM and
+    mmap shard sources run the identical schedule).
+
+    The paper's FQ-SD stream, fanned out over a device group: shard i of
+    the store's int8 source is ``device_put`` to device i mod P (the ring),
+    and because the shipped arrays arrive committed to that device, the
+    cached bound step that consumes them runs there — P concurrent
+    double-buffered scan pipelines out of one host iterator, each advancing
+    its own widened (m, r+1) certified lower-bound queue. JAX's async
+    dispatch keeps all P devices busy without threads: the host loop only
+    enqueues work. One global O(k) merge (host concat of the P queues +
+    one lexicographic sort — every device's local top r+1 contains its
+    rows' contribution to the global top r+1) and the shared epilogue
+    rescores candidate f32 rows exactly as on the single-device path.
+    A store larger than the sum of all device memories serves fine: at
+    most depth shards are in flight, none resident.
+
+    Per-device scan bytes land on ``ctx.device_bytes``; speculation stays
+    off on mesh paths (the scan is already P-way overlapped)."""
+    import time
+
+    if ctx.mesh is None:
+        raise ValueError("plan requires a mesh but ExecContext.mesh is None")
+    t_start = time.perf_counter()
+    m = int(queries.shape[0])
+    r = _rescore_budget(plan)
+    # the SAME step key as the single-device streamed path: one cached
+    # wrapper whose jit resolves per-device placements, so mesh adoption
+    # adds zero cache entries and repeat searches never miss
+    bound_step = _cached(("int8-bound-step", r),
+                         lambda: make_int8_bound_step(r))
+    devices = list(ctx.mesh.devices.flat)
+    n_dev = len(devices)
+    qs = [jax.device_put(queries, d) for d in devices]
+    lb0 = np.full((m, r + 1), np.inf, np.float32)
+    li0 = np.full((m, r + 1), -1, np.int32)
+    lbs = [jax.device_put(lb0, d) for d in devices]
+    lis = [jax.device_put(li0, d) for d in devices]
+    ring = make_ring_put(devices)
+    # prefetch at least one shard per device so the ring never starves
+    stream = DoubleBufferedStream(
+        store.shard_source("int8"),
+        depth=max(ctx.prefetch_depth, n_dev),
+        put_fn=lambda p: device_put_partition(p, put_fn=ring),
+    )
+    dev_bytes = [0] * n_dev
+    shard_i = 0
+    for p in stream:
+        d = shard_i % n_dev  # consumption order == ring put order
+        lbs[d], lis[d] = bound_step(lbs[d], lis[d], qs[d], p.q, p.scales,
+                                    p.err, p.qnorm, jnp.int32(p.base_index))
+        dev_bytes[d] += p.scan_bytes()
+        shard_i += 1
+    ctx.stream_stats = {"transfers": stream.transfers,
+                        "restarts": stream.restarts}
+    ctx.device_bytes = dev_bytes
+    # global merge: concat the P per-device queues on host, one two-key
+    # sort, keep r+1 — O(k) traffic per device, independent of store size
+    all_s = np.concatenate([np.asarray(x) for x in lbs], axis=1)
+    all_i = np.concatenate([np.asarray(x) for x in lis], axis=1)
+    s, i = sort_pairs(jnp.asarray(all_s), jnp.asarray(all_i))
+    return _rescore_certify(plan, queries, store, ctx,
+                            s[:, : r + 1], i[:, : r + 1], sum(dev_bytes),
+                            t_start=t_start)
+
+
+@register_executor("fqsd-sharded-int8")
+def _fqsd_sharded_int8(plan, queries, store, ctx) -> TopK:
+    """Ring-streamed mesh int8 over host-RAM shards: shard i scans on
+    device i mod P, per-device widened queues, one global O(k) merge,
+    candidate-only f32 rescore (see :func:`_int8_mesh_streamed`)."""
+    return _int8_mesh_streamed(plan, queries, store, ctx)
+
+
+@register_executor("fqsd-sharded-int8-streamed")
+def _fqsd_sharded_int8_streamed(plan, queries, store, ctx) -> TopK:
+    """Ring-streamed mesh int8 over an out-of-core (mmap) store: the codes
+    leave the disk inside each ring device_put at 1 B/element, so one store
+    can exceed the memory of ALL devices combined
+    (see :func:`_int8_mesh_streamed`)."""
+    return _int8_mesh_streamed(plan, queries, store, ctx)

@@ -55,6 +55,9 @@ PLANNABLE_EXECUTORS = (
     "fqsd-int8-mmap-streamed",
     "fdsq-sharded",
     "fqsd-sharded",
+    "fdsq-sharded-int8",
+    "fqsd-sharded-int8",
+    "fqsd-sharded-int8-streamed",
 )
 
 #: Executors whose block shapes the per-device autotuner may override.
@@ -62,7 +65,9 @@ TUNABLE_EXECUTORS = ("fdsq-pallas", "fqsd-int8-pallas")
 
 #: Streamed executors whose pipeline knobs (prefetch depth, speculation
 #: trigger, rescore budget) the end-to-end autotuner may override.
-PIPELINE_TUNABLE_EXECUTORS = ("fqsd-int8-streamed", "fqsd-int8-mmap-streamed")
+PIPELINE_TUNABLE_EXECUTORS = ("fqsd-int8-streamed", "fqsd-int8-mmap-streamed",
+                              "fqsd-sharded-int8",
+                              "fqsd-sharded-int8-streamed")
 
 #: Fused Pallas executors vetoed on hosts with a persisted interpret-only
 #: capability verdict, and what each falls back to (per logical mode).
@@ -269,12 +274,24 @@ def plan(
 
     if mode == "fqsd-streamed" or not dataset_meta.resident:
         if store_backed and tier == "int8" and metric == "l2":
-            # the paper's throughput deployment: out-of-core scan at
-            # 1 B/element with certified rescore reads of candidate rows
-            executor = ("fqsd-int8-mmap-streamed" if dataset_meta.mmap
-                        else "fqsd-int8-streamed")
-            mode_label = "fqsd-int8-streamed"
+            if sharded:
+                # cluster-scale throughput deployment: the int8 shard
+                # source ring-streams over the mesh devices (shard i ->
+                # device i mod P), one global O(k) merge + candidate-only
+                # rescore — a store may exceed ALL device memories combined
+                executor = ("fqsd-sharded-int8-streamed" if dataset_meta.mmap
+                            else "fqsd-sharded-int8")
+                mode_label = "fqsd-sharded-int8"
+            else:
+                # the paper's throughput deployment: out-of-core scan at
+                # 1 B/element with certified rescore reads of candidate rows
+                executor = ("fqsd-int8-mmap-streamed" if dataset_meta.mmap
+                            else "fqsd-int8-streamed")
+                mode_label = "fqsd-int8-streamed"
         else:
+            # mesh non-resident f32 plans also land here: the single-device
+            # manifest stream serves them exactly (only the int8 tier has a
+            # mesh streaming schedule — it is the bandwidth-bound one)
             executor = "fqsd-mmap-streamed" if store_backed else "fqsd-streamed"
             mode_label = "fqsd-streamed"
             tier = "f32"  # exact base tier (int8 needs a store + l2)
@@ -283,9 +300,16 @@ def plan(
         elif store_backed and dataset_meta.rows_per_shard:
             chunk = int(dataset_meta.rows_per_shard)
     elif sharded:
-        executor = "fdsq-sharded" if mode == "fdsq" else "fqsd-sharded"
-        mode_label = f"{mode}-sharded"
-        tier = "f32"
+        if store_backed and tier == "int8" and metric == "l2":
+            # mesh-resident certified int8: row-sharded quantized arrays,
+            # per-device widened queues, hierarchical O(r) merge; rescore
+            # reads only candidate f32 rows of the backing store
+            executor = "fdsq-sharded-int8"
+            mode_label = "fdsq-sharded-int8"
+        else:
+            executor = "fdsq-sharded" if mode == "fdsq" else "fqsd-sharded"
+            mode_label = f"{mode}-sharded"
+            tier = "f32"
     elif tier == "int8" and mode == "fqsd" and metric == "l2":
         executor = ("fqsd-int8-pallas" if cfg.backend == "pallas"
                     else "fqsd-int8")

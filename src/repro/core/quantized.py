@@ -84,6 +84,36 @@ class Int8Partition(NamedTuple):
         return rows * int(self.q.shape[1]) + 12 * rows
 
 
+def int8_lower_bounds(queries, codes, scales, err, qnorm, base):
+    """Certified lower bounds of one int8 shard against a query batch.
+
+    Returns ``(lower, idx)`` with ``lower`` the (m, n) reverse-triangle
+    lower bounds (+inf on invalid rows, i.e. non-finite ``qnorm``) and
+    ``idx`` the (n,) global row ids (-1 on invalid rows). This is the one
+    formula both the streamed step (:func:`make_int8_bound_step`) and the
+    mesh-sharded local scan trace, so every int8 executor prunes with
+    bitwise-identical bounds.
+    """
+    n = codes.shape[0]
+    q32 = queries.astype(jnp.float32)
+    qn = jnp.sum(q32 * q32, axis=-1, keepdims=True)
+    # (M, d) f32 x (N, d) i8 -> f32: dataset-side HBM traffic stays
+    # 1 B/element (same contraction as _approx_l2)
+    cross = jax.lax.dot_general(
+        q32, codes.astype(jnp.bfloat16),
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * scales[None, :]
+    d_hat = jnp.maximum(qn - 2.0 * cross + qnorm[None, :], 0.0)
+    valid = jnp.isfinite(qnorm)
+    root = jnp.sqrt(d_hat)
+    lower = jnp.where(valid[None, :],
+                      jnp.maximum(root - err[None, :], 0.0) ** 2, jnp.inf)
+    idx = jnp.where(valid, base + jnp.arange(n, dtype=jnp.int32),
+                    jnp.int32(-1))
+    return lower, idx
+
+
 def make_int8_bound_step(r: int):
     """Compile-once step for the *streamed* quantized scan: insert one int8
     shard's certified lower bounds into the running (m, r+1) candidate queue.
@@ -114,23 +144,8 @@ def make_int8_bound_step(r: int):
 
     @jax.jit
     def step(lb, li, queries, codes, scales, err, qnorm, base):
-        n = codes.shape[0]
-        q32 = queries.astype(jnp.float32)
-        qn = jnp.sum(q32 * q32, axis=-1, keepdims=True)
-        # (M, d) f32 x (N, d) i8 -> f32: dataset-side HBM traffic stays
-        # 1 B/element (same contraction as _approx_l2)
-        cross = jax.lax.dot_general(
-            q32, codes.astype(jnp.bfloat16),
-            dimension_numbers=(((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.float32,
-        ) * scales[None, :]
-        d_hat = jnp.maximum(qn - 2.0 * cross + qnorm[None, :], 0.0)
-        valid = jnp.isfinite(qnorm)
-        root = jnp.sqrt(d_hat)
-        lower = jnp.where(valid[None, :],
-                          jnp.maximum(root - err[None, :], 0.0) ** 2, jnp.inf)
-        idx = jnp.where(valid, base + jnp.arange(n, dtype=jnp.int32),
-                        jnp.int32(-1))
+        lower, idx = int8_lower_bounds(queries, codes, scales, err, qnorm,
+                                       base)
         s_loc, i_loc = topk_smallest(
             lower, jnp.broadcast_to(idx[None, :], lower.shape), r + 1
         )

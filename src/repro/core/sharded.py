@@ -35,7 +35,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.distance import Metric, validate_metric
 from repro.core.fqsd import chunk_step
-from repro.core.topk import TopK, empty_topk, tree_merge_sorted
+from repro.core.quantized import int8_lower_bounds
+from repro.core.topk import TopK, empty_topk, sort_pairs, topk_smallest, tree_merge_sorted
 from repro import compat
 
 
@@ -98,13 +99,13 @@ def fdsq_sharded(
             state = _gather_merge(state, ax)
         return state
 
-    return compat.shard_map(
+    return jax.jit(compat.shard_map(
         local,
         mesh=mesh,
         in_specs=(P(), P(axes), P(axes)),
         out_specs=TopK(P(), P()),
         check_vma=False,
-    )
+    ))
 
 
 def fqsd_sharded(
@@ -127,13 +128,13 @@ def fqsd_sharded(
         state = _local_scan(queries, vectors, norms, k, metric, base, chunk_rows)
         return _gather_merge(state, dataset_axis)
 
-    return compat.shard_map(
+    return jax.jit(compat.shard_map(
         local,
         mesh=mesh,
         in_specs=(P(query_axis), P(dataset_axis), P(dataset_axis)),
         out_specs=TopK(P(query_axis), P(query_axis)),
         check_vma=False,
-    )
+    ))
 
 
 def fqsd_ring(
@@ -189,13 +190,13 @@ def fqsd_ring(
         )
         return _gather_merge(state, model_axis)
 
-    return compat.shard_map(
+    return jax.jit(compat.shard_map(
         local,
         mesh=mesh,
         in_specs=(P(query_axis), P((query_axis, model_axis)), P((query_axis, model_axis))),
         out_specs=TopK(P(query_axis), P(query_axis)),
         check_vma=False,
-    )
+    ))
 
 
 def fqsd_ring_queries(
@@ -245,13 +246,61 @@ def fqsd_ring_queries(
         # after d_sz rotations the state is back at its owner row
         return _gather_merge(state, model_axis)
 
-    return compat.shard_map(
+    return jax.jit(compat.shard_map(
         local,
         mesh=mesh,
         in_specs=(P(query_axis), P((query_axis, model_axis)), P((query_axis, model_axis))),
         out_specs=TopK(P(query_axis), P(query_axis)),
         check_vma=False,
-    )
+    ))
+
+
+def fdsq_sharded_int8(
+    mesh: Mesh,
+    r: int,
+    data_axes: Sequence[str] = ("data", "model"),
+):
+    """Distributed certified-int8 first pass: the mesh analogue of
+    :func:`repro.core.quantized.make_int8_bound_step`.
+
+    Returns fn(queries (m, d) replicated, codes (N, d) int8 row-sharded over
+    `data_axes`, scales/err/qnorm (N,) row-sharded) -> (lb, li) replicated
+    (m, r+1) certified lower-bound queues, globally exact: every device
+    computes reverse-triangle lower bounds on its local rows only (1 B/elem
+    local HBM traffic), keeps its widened (m, r+1) queue, and the queues
+    merge hierarchically along the mesh axes with O(r) collective volume —
+    the same O(k) merge shape as :func:`fdsq_sharded`, so adding the int8
+    tier costs no extra collective structure. The caller rescores the
+    candidate ids in f32 and certifies exactly as on the streamed path
+    (``lb[:, r]`` is the best lower bound OUTSIDE the candidate set).
+    """
+    if r < 1:
+        raise ValueError(f"rescore budget r must be >= 1, got {r}")
+    axes = tuple(data_axes)
+
+    def local(queries, codes, scales, err, qnorm):
+        base = jnp.int32(0)
+        stride = codes.shape[0]
+        for ax in reversed(axes):
+            base = base + lax.axis_index(ax) * stride
+            stride = stride * mesh.shape[ax]  # static size, version-safe
+        lower, idx = int8_lower_bounds(queries, codes, scales, err, qnorm,
+                                       base)
+        s_loc, i_loc = topk_smallest(
+            lower, jnp.broadcast_to(idx[None, :], lower.shape), r + 1
+        )
+        state = TopK(s_loc, i_loc)
+        for ax in reversed(axes):
+            state = _gather_merge(state, ax)
+        return state
+
+    return jax.jit(compat.shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(), P(axes), P(axes), P(axes), P(axes)),
+        out_specs=TopK(P(), P()),
+        check_vma=False,
+    ))
 
 
 def shard_dataset(mesh: Mesh, dataset, norms, axes: Sequence[str] | str):

@@ -118,6 +118,30 @@ def prefetch_to_device(host_iter: Iterable[T], depth: int = 2, put_fn=None):
     return iter(DoubleBufferedStream(host_iter, depth=depth, put_fn=put_fn))
 
 
+def make_ring_put(devices) -> Callable:
+    """Round-robin ``put_fn`` for mesh streaming: call i ships its pytree of
+    arrays to ``devices[i % len(devices)]``.
+
+    This is the paper's ring-streamed FQ-SD schedule generalized to a device
+    group: shard i lands on device i mod P, every device scans every P-th
+    shard, and because the arrays arrive *committed* to that device, the
+    jit'd scan step that consumes them runs there too — P concurrent
+    double-buffered pipelines out of one host iterator, no shard_map
+    required for data that is never resident. Stateless callers get a fresh
+    ring (counter starts at device 0) per :class:`DoubleBufferedStream`.
+    """
+    devices = list(devices)
+    if not devices:
+        raise ValueError("make_ring_put needs at least one device")
+    counter = iter(range(1 << 62))
+
+    def put(arrays):
+        dev = devices[next(counter) % len(devices)]
+        return jax.device_put(arrays, dev)
+
+    return put
+
+
 class SpeculativeGather:
     """Background speculative gather of candidate rows (ISSUE 6 tentpole).
 

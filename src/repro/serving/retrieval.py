@@ -200,6 +200,10 @@ class AdaptiveScheduler:
         # speculation counters across dispatches that reported them
         self._phase_ms = {"scan_ms": 0.0, "gather_ms": 0.0, "rescore_ms": 0.0}
         self._phase_n = 0
+        # mesh dispatch observability: element-wise per-device scan bytes,
+        # summed across dispatches that reported them (sharded executors) —
+        # the per-device view of the traffic choose_tier optimizes
+        self._device_bytes: list[int] = []
         self._speculation = {"dispatches": 0, "rows_speculated": 0,
                              "rows_topped_up": 0, "rows_wasted": 0}
 
@@ -234,9 +238,12 @@ class AdaptiveScheduler:
         a non-resident engine whose store carries the int8 tier reports
         ``has_int8``, so deep backlogs route out-of-core scans through the
         fqsd-int8-*streamed executors (disk bytes are the bound there, and
-        the quantized pass moves ~1/4 of them). Override with a
-        measured-GB/s policy for smarter routing; `stats()["bytes_scanned"]`
-        exposes the traffic either way. Requests with an explicit ``tier``
+        the quantized pass moves ~1/4 of them). Mesh engines route the same
+        way: a sharded engine with an int8 tier reports ``has_int8``, deep
+        backlogs dispatch through the *-sharded-int8 executors, and the
+        per-device traffic shows up in ``stats()["bytes_per_device"]``.
+        Override with a measured-GB/s policy for smarter routing;
+        `stats()["bytes_scanned"]` exposes the traffic either way. Requests with an explicit ``tier``
         never reach this hook — per-request pins always win.
         """
         if (
@@ -338,10 +345,19 @@ class AdaptiveScheduler:
             self._skip_rate_n += 1
         self._transfers += int(batch.stats.get("transfers", 0))
         self._restarts += int(batch.stats.get("restarts", 0))
-        if "scan_ms" in batch.stats:  # streamed int8: pipelined phase split
+        if "scan_ms" in batch.stats:  # streamed AND sharded int8 plans
+            # report the same scan/gather/rescore wall-time split — mesh
+            # dispatches aggregate here exactly like single-device ones
             self._phase_n += 1
             for key in self._phase_ms:
                 self._phase_ms[key] += float(batch.stats.get(key, 0.0))
+        per_dev = batch.stats.get("bytes_per_device")
+        if per_dev is not None:  # sharded dispatch: per-device scan bytes
+            if len(per_dev) > len(self._device_bytes):
+                self._device_bytes.extend(
+                    [0] * (len(per_dev) - len(self._device_bytes)))
+            for di, nbytes in enumerate(per_dev):
+                self._device_bytes[di] += int(nbytes)
         spec = batch.stats.get("speculation")
         if spec is not None:
             self._speculation["dispatches"] += 1
@@ -463,10 +479,13 @@ class AdaptiveScheduler:
             out["collection"] = self.collection
         if self._skip_rate_n:  # fused Pallas plans only
             out["prune_skip_rate"] = self._skip_rate_sum / self._skip_rate_n
-        if self._phase_n:  # streamed int8 plans only: pipeline wall-time
+        if self._phase_n:  # streamed/sharded int8 plans: pipeline wall-time
             # split (summed across dispatches) + speculation counters
             out["phase_ms"] = dict(self._phase_ms)
             out["speculation"] = dict(self._speculation)
+        if self._device_bytes:  # mesh dispatches: per-device scan traffic,
+            # same bandwidth account as bytes_scanned but split by device
+            out["bytes_per_device"] = list(self._device_bytes)
         return out
 
 

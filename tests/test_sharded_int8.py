@@ -1,0 +1,24 @@
+"""Mesh-scale certified int8 exactness — runs tests/sharded_int8_check.py in
+a subprocess with 4 fake CPU devices (XLA device count is locked at first
+jax init, so the main pytest process must stay single-device). The check
+script parametrizes adversarial_cases.QUANT_CASES over every mesh int8
+executor against the streamed f32 oracle."""
+import os
+import pathlib
+import subprocess
+import sys
+
+HERE = pathlib.Path(__file__).parent
+ROOT = HERE.parent
+
+
+def test_sharded_int8_subprocess():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = str(ROOT / "src") + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, str(HERE / "sharded_int8_check.py")],
+        capture_output=True, text=True, timeout=600, env=env,
+    )
+    assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+    assert "ALL_OK" in proc.stdout
