@@ -20,6 +20,12 @@ acceptance metric — streamed p50 within ~1.1x of resident int8 at bench
 scale); a ``_nospec`` companion row (spec_trigger=1.0) isolates what the
 overlap buys. Results are bit-identical on both rows by construction.
 
+ISSUE 8 adds the degraded-mode row: the streamed int8 scan with one shard
+persistently unreadable (``store/int8_mmap_streamed_degraded``) — the shard
+quarantines to its f32 rows, the result stays certified exact, and the row
+prices the self-healing overhead (``p50_ratio_vs_healthy``,
+``degraded_shards``) in the same trajectory DB.
+
 ISSUE 7 adds the mesh subsection: the same tier pair on a device group —
 resident row-sharded int8 (fdsq-sharded-int8) and the out-of-core ring
 stream (fqsd-sharded-int8-streamed) — reporting qps, p50, per-device scan
@@ -43,6 +49,7 @@ import numpy as np
 from benchmarks.common import RESULTS, emit, energy_j, time_samples
 from repro.api import SearchRequest
 from repro.core import ExactKNN
+from repro.faults import FaultInjector, FaultPlan
 from repro.store import DatasetStore
 
 K = 10
@@ -143,6 +150,29 @@ def run(quick: bool = False) -> None:
              p50_ratio_vs_nospec=p50 / nospec_p50,
              n_shards=store.n_shards, n=n, d=d, m=m, k=K,
              **_phase_fields(res))
+
+        # degraded mode (ISSUE 8): one int8 shard persistently unreadable —
+        # the scan quarantines it and reads its f32 rows instead, so the
+        # result stays certified exact; this row prices that self-healing
+        # (more bytes moved, lower qps) so the resilience cost is tracked
+        # by the same trajectory gate as the healthy rows
+        store.fault_injector = FaultInjector(
+            FaultPlan(fail_shards=(1,), fail_tier="int8"))
+        try:
+            dp50, dp99, dqps, d_bytes, dcert, dres = _bench(
+                oeng, q, "int8", repeats, max_retries=0)
+        finally:
+            store.fault_injector = None
+        degraded = dres.stats["health"]["degraded"]
+        emit("store/int8_mmap_streamed_degraded", dp50,
+             f"qps={dqps:.0f};certified={dcert:.3f};"
+             f"quarantined={len(degraded)};p50={dp50 / p50:.2f}x_healthy",
+             tier="int8", residency="mmap-streamed", qps=dqps, p50_us=dp50,
+             p99_us=dp99, bytes_scanned=d_bytes, certified_exact=dcert,
+             degraded_shards=len(degraded),
+             p50_ratio_vs_healthy=dp50 / p50,
+             n_shards=store.n_shards, n=n, d=d, m=m, k=K,
+             **_phase_fields(dres))
 
     # --- mesh: the same tier pair across a device group ------------------
     _mesh_section(quick)

@@ -66,6 +66,17 @@ class SearchRequest:
                  None = the plan's tuned value, else the executor default.
                  Results are bit-identical at every setting — the trigger
                  only reschedules reads.
+    allow_partial
+                 False (default): an unrecoverable shard failure raises —
+                 never a silently wrong top-k. True: the scan skips dead
+                 shards after retries + quarantine are exhausted and
+                 returns a result flagged ``stats["partial"]`` with the
+                 missing shards in ``stats["health"]["failed_shards"]``.
+    max_retries  bounded retry budget (exponential backoff) for streamed
+                 shard reads / candidate gathers / device transfers on
+                 this request; None = the engine's configured budget.
+                 0 disables retry. Retries are counted in
+                 ``stats["health"]["retries"]``.
     rid          caller's request id (serving envelope; echoed on results).
     arrival_s    simulated arrival stamp for the discrete-event scheduler.
     """
@@ -79,6 +90,8 @@ class SearchRequest:
     filter_mask: Any | None = None
     prefetch_depth: int | None = None
     spec_trigger: float | None = None
+    allow_partial: bool = False
+    max_retries: int | None = None
     rid: int | None = None
     arrival_s: float = 0.0
 
@@ -103,6 +116,10 @@ class SearchRequest:
             raise ValueError(
                 "spec_trigger must be a shard fraction in [0, 1] "
                 f"(1 disables speculation), got {self.spec_trigger}"
+            )
+        if self.max_retries is not None and self.max_retries < 0:
+            raise ValueError(
+                f"max_retries must be >= 0, got {self.max_retries}"
             )
 
     @property
@@ -137,7 +154,13 @@ class SearchResult:
                   streamed int8 adds the wall-time split (scan_ms /
                   gather_ms / rescore_ms) and a "speculation" block
                   (trigger, rows_speculated, rows_topped_up, rows_wasted —
-                  wasted fetches are charged to bytes_scanned).
+                  wasted fetches are charged to bytes_scanned; failed = 1
+                  when the background gather died and the executor degraded
+                  to a synchronous gather). Every engine-served result also
+                  carries a "health" block — retries, failed_shards,
+                  degraded (int8 shards quarantined to their f32 rows —
+                  still exact), slow_shards, shed — and a "partial" flag
+                  (True only under ``allow_partial`` with dead shards).
     rid           echo of the request id (serving envelope).
     """
 
@@ -175,6 +198,20 @@ class SearchResult:
         """Every row of this result certified exact (always True on f32
         paths; int8 uncertified rows were recomputed exactly anyway)."""
         return bool(np.all(np.asarray(self.certified)))
+
+    @property
+    def partial(self) -> bool:
+        """True iff shards are missing from this result (only possible
+        under ``SearchRequest.allow_partial=True``; default-strict
+        requests raise instead of going partial)."""
+        return bool(self.stats.get("partial", False))
+
+    @property
+    def health(self) -> Mapping[str, Any]:
+        """The result's resilience accounting (retries, failed_shards,
+        degraded, slow_shards, shed); empty for shims that bypass the
+        engine's stats assembly."""
+        return self.stats.get("health", {})
 
     @property
     def latency_ms(self) -> float | None:

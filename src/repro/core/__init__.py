@@ -63,6 +63,7 @@ from repro.core.sharded import (
 )
 from repro.core.streaming import (
     DoubleBufferedStream,
+    ResilientShardSource,
     device_put_partition,
     make_ring_put,
     prefetch_to_device,
@@ -93,8 +94,8 @@ __all__ = [
     "row_norms_sq", "topk_smallest", "merge_topk", "merge_two_sorted",
     "tree_merge_sorted", "empty_topk", "knn_oracle",
     "PaddedDataset", "make_padded", "iter_partitions",
-    "DoubleBufferedStream", "prefetch_to_device", "device_put_partition",
-    "make_ring_put",
+    "DoubleBufferedStream", "ResilientShardSource", "prefetch_to_device",
+    "device_put_partition", "make_ring_put",
     "QuantizedDataset", "Int8Partition", "quantize_dataset",
     "knn_quantized", "quantized_norm_sq", "int8_lower_bounds",
 ]

@@ -113,41 +113,45 @@ class _MaskedShardSource:
         self._store = store
         self._mask = mask
 
+    def _fold_f32(self, p: part.PaddedDataset) -> part.PaddedDataset:
+        keep = _keep_rows(self._mask, p.base_index, p.n_valid,
+                          int(p.vectors.shape[0]))
+        if keep.all():
+            return p
+        norms = np.where(keep, np.asarray(p.norms), np.float32(np.inf))
+        return part.PaddedDataset(p.vectors, norms.astype(np.float32),
+                                  p.n_valid, p.base_index)
+
+    def _fold_int8(self, p):
+        keep = _keep_rows(self._mask, p.base_index, p.n_valid,
+                          int(p.qnorm.shape[0]))
+        if keep.all():
+            return p
+        qnorm = np.where(keep, np.asarray(p.qnorm), np.float32(np.inf))
+        return p._replace(qnorm=qnorm.astype(np.float32))
+
     def iter_shards(self, tier: str = "f32"):
         if tier == "f32":
             for p in self._store.iter_shards():
-                keep = _keep_rows(self._mask, p.base_index, p.n_valid,
-                                  int(p.vectors.shape[0]))
-                if keep.all():
-                    yield p
-                    continue
-                norms = np.where(keep, np.asarray(p.norms), np.float32(np.inf))
-                yield part.PaddedDataset(p.vectors, norms.astype(np.float32),
-                                         p.n_valid, p.base_index)
+                yield self._fold_f32(p)
             return
         for p in self._store.iter_shards(tier):
-            keep = _keep_rows(self._mask, p.base_index, p.n_valid,
-                              int(p.qnorm.shape[0]))
-            if keep.all():
-                yield p
-                continue
-            qnorm = np.where(keep, np.asarray(p.qnorm), np.float32(np.inf))
-            yield p._replace(qnorm=qnorm.astype(np.float32))
+            yield self._fold_int8(p)
+
+    def read_shard(self, i: int, tier: str = "f32"):
+        # resilience surface: forwards to the store's fault-hooked read
+        # (retry / CRC / quarantine live below), folding the mask onto the
+        # returned partition. Quarantine means an int8 request can come
+        # back as an f32 PaddedDataset — fold by the returned type.
+        p = self._store.read_shard(i, tier)
+        return (self._fold_f32(p) if isinstance(p, part.PaddedDataset)
+                else self._fold_int8(p))
 
     def shard_source(self, tier: str = "f32"):
         return _MaskedTierSource(self, tier)
 
     def delta_shards(self):
-        out = []
-        for p in self._store.delta_shards():
-            keep = _keep_rows(self._mask, p.base_index, p.n_valid,
-                              int(p.vectors.shape[0]))
-            norms = (np.asarray(p.norms) if keep.all()
-                     else np.where(keep, np.asarray(p.norms),
-                                   np.float32(np.inf)).astype(np.float32))
-            out.append(part.PaddedDataset(p.vectors, norms,
-                                          p.n_valid, p.base_index))
-        return out
+        return [self._fold_f32(p) for p in self._store.delta_shards()]
 
     def gather_rows(self, ids) -> np.ndarray:
         # candidate indices already passed the masked scan: excluded rows
@@ -189,12 +193,20 @@ class ExactKNN:
         device_budget_bytes: int | None = None,
         prefetch_depth: int | None = None,
         spec_trigger: float | None = None,
+        max_retries: int | None = None,
+        retry_backoff_s: float | None = None,
     ):
         validate_metric(metric)
         if k < 1:
             raise ValueError("k must be >= 1")
         if prefetch_depth is not None and prefetch_depth < 1:
             raise ValueError(f"prefetch_depth must be >= 1, got {prefetch_depth}")
+        if max_retries is not None and max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, got {max_retries}")
+        if retry_backoff_s is not None and retry_backoff_s < 0:
+            raise ValueError(
+                f"retry_backoff_s must be >= 0, got {retry_backoff_s}"
+            )
         if spec_trigger is not None and not (0.0 <= spec_trigger <= 1.0):
             raise ValueError(
                 "spec_trigger must be a shard fraction in [0, 1] "
@@ -228,6 +240,12 @@ class ExactKNN:
         #: the candidate gather starts on a background thread; 1.0 = no
         #: speculation). None = tuned plan value, else the executor default.
         self.spec_trigger = spec_trigger
+        #: bounded retry budget for streamed shard reads / candidate gathers
+        #: / device transfers (exponential backoff from retry_backoff_s) —
+        #: a SearchRequest.max_retries overrides it per request.
+        self.max_retries = 2 if max_retries is None else int(max_retries)
+        self.retry_backoff_s = (0.05 if retry_backoff_s is None
+                                else float(retry_backoff_s))
         self._store = None  # repro.store.DatasetStore
         self._resident = True
         # cos + fused backend: the resident view is normalized at fit time
@@ -565,13 +583,19 @@ class ExactKNN:
         return plan_fn((m, d), self.dataset_meta(tier=tier), self.config(), mode, **kw)
 
     def _ctx(self, prefetch_depth: int | None = None,
-             spec_trigger: float | None = None) -> ExecContext:
+             spec_trigger: float | None = None,
+             max_retries: int | None = None,
+             allow_partial: bool = False) -> ExecContext:
         return ExecContext(
             mesh=self.mesh, mesh_axes=self.mesh_axes,
             prefetch_depth=(self.prefetch_depth if prefetch_depth is None
                             else prefetch_depth),
             spec_trigger=spec_trigger,
             cos_prenormalized=self._cos_prenormalized,
+            max_retries=(self.max_retries if max_retries is None
+                         else int(max_retries)),
+            retry_backoff_s=self.retry_backoff_s,
+            allow_partial=bool(allow_partial),
         )
 
     def _run(self, p: ExecutionPlan, queries: jax.Array, dataset, **ctx_kw) -> TopK:
@@ -686,6 +710,9 @@ class ExactKNN:
                     "filter_mask must cover the engine's global id space "
                     f"({self.n_ids} rows), got {mask.shape[0]}"
                 )
+        max_retries = (self.max_retries if request.max_retries is None
+                       else int(request.max_retries))
+        allow_partial = bool(request.allow_partial)
         t0 = time.perf_counter()
         if not self._resident:
             # tier="int8" survives planning here: the out-of-core scan
@@ -710,7 +737,8 @@ class ExactKNN:
                        if request.spec_trigger is not None
                        else self.spec_trigger)
             out = self._run(p, qv, source, prefetch_depth=prefetch,
-                            spec_trigger=trigger)
+                            spec_trigger=trigger, max_retries=max_retries,
+                            allow_partial=allow_partial)
             # streamed scans fold delta shards (mask applied) in-pass
         else:
             p = plan_fn(
@@ -730,7 +758,8 @@ class ExactKNN:
                                          self._masked_int8(mask))
             else:
                 dataset = self._masked_resident(mask)
-            out = self._run(p, qv, dataset)
+            out = self._run(p, qv, dataset, max_retries=max_retries,
+                            allow_partial=allow_partial)
             if not self._last_ctx.delta_folded:
                 out = self._merge_delta(out, qv, k=k, metric=metric, mask=mask)
         dispatch_ms = (time.perf_counter() - t0) * 1e3
@@ -761,6 +790,22 @@ class ExactKNN:
             stats.update(ctx.phase_ms)
         if ctx is not None and ctx.speculation is not None:
             stats["speculation"] = dict(ctx.speculation)
+        # health is ALWAYS present: a fault-free search reports an all-clear
+        # block, so serving aggregation / dashboards never branch on its
+        # absence. Shard lists are dedup'd + sorted (a shard can degrade on
+        # multiple reads of one scan).
+        h = ctx.health if (ctx is not None and ctx.health is not None) else {}
+        health = {
+            "retries": int(h.get("retries", 0)),
+            "failed_shards": sorted(set(h.get("failed_shards", ()))),
+            "degraded": sorted(set(h.get("degraded", ()))),
+            "slow_shards": sorted(set(h.get("slow_shards", ()))),
+            "shed": False,
+        }
+        stats["health"] = health
+        # partial is loud: only an allow_partial=True request can ever see
+        # it, and it means failed_shards' rows are missing from topk.
+        stats["partial"] = bool(health["failed_shards"])
         if request.deadline_ms is not None:
             stats["deadline_ms"] = request.deadline_ms
         return SearchResult(

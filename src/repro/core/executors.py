@@ -48,7 +48,9 @@ from repro.core.quantized import (
 )
 from repro.core.streaming import (
     DoubleBufferedStream,
+    ResilientShardSource,
     SpeculativeGather,
+    _fresh_health,
     device_put_partition,
     make_ring_put,
 )
@@ -104,6 +106,18 @@ class ExecContext:
     #: int8 rescore tail does); the engine then skips its own delta merge so
     #: upserted rows are never scored twice
     delta_folded: bool = False
+    #: bounded-retry budget for host-side shard reads, candidate gathers,
+    #: and device_put transfers (exponential backoff from retry_backoff_s)
+    max_retries: int = 2
+    retry_backoff_s: float = 0.05
+    #: the request opted into partial results: a shard unrecoverable on
+    #: every tier is skipped and listed in health["failed_shards"] instead
+    #: of failing the search (the engine flags the result "partial")
+    allow_partial: bool = False
+    #: resilience accounting for this run ({"retries", "degraded",
+    #: "failed_shards", "slow_shards"}); created lazily by the streamed
+    #: executors and surfaced by the engine as stats["health"]
+    health: dict | None = None
 
 
 class TieredResident(NamedTuple):
@@ -319,6 +333,8 @@ def _fqsd_streamed(plan, queries, dataset: Iterable[part.PaddedDataset], ctx) ->
         queries, dataset, plan.k, plan.metric,
         prefetch_depth=ctx.prefetch_depth, step_fn=step,
         stream_stats=ctx.stream_stats,
+        put_retries=ctx.max_retries, retry_backoff_s=ctx.retry_backoff_s,
+        health=_ctx_health(ctx),
     )
 
 
@@ -337,10 +353,14 @@ def _fqsd_mmap_streamed(plan, queries, dataset, ctx) -> TopK:
     """
     step = cached_partition_step(plan.k, plan.metric)
     ctx.stream_stats = {}
+    source = (_resilient_source(dataset, "f32", ctx)
+              if hasattr(dataset, "read_shard") else dataset.iter_shards())
     return fqsd_streamed(
-        queries, dataset.iter_shards(), plan.k, plan.metric,
+        queries, source, plan.k, plan.metric,
         prefetch_depth=ctx.prefetch_depth, step_fn=step,
         stream_stats=ctx.stream_stats,
+        put_retries=ctx.max_retries, retry_backoff_s=ctx.retry_backoff_s,
+        health=_ctx_health(ctx),
     )
 
 
@@ -435,6 +455,45 @@ def _fqsd_int8_pallas(plan, queries, dataset: TieredResident, ctx) -> TopK:
     return out
 
 
+def _ctx_health(ctx: ExecContext) -> dict:
+    if ctx.health is None:
+        ctx.health = _fresh_health()
+    return ctx.health
+
+
+def _with_retries(fn: Callable, ctx: ExecContext):
+    """Bounded retry with exponential backoff for host-side store ops
+    (candidate gathers, delta device_puts). Every failed attempt counts
+    into ``ctx.health["retries"]``; the last failure propagates."""
+    import time
+
+    delay = ctx.retry_backoff_s
+    for attempt in range(ctx.max_retries + 1):
+        try:
+            return fn()
+        except Exception:
+            _ctx_health(ctx)["retries"] += 1
+            if attempt == ctx.max_retries:
+                raise
+            if delay > 0:
+                time.sleep(delay)
+                delay *= 2
+
+
+def _resilient_source(store, tier: str, ctx: ExecContext):
+    """The shard source of a streamed scan: self-healing when the dataset
+    exposes per-shard reads (``read_shard`` — DatasetStore and the
+    engine's masked view), the store's plain restartable source otherwise
+    (legacy duck-typed datasets keep their exact old behavior)."""
+    if hasattr(store, "read_shard"):
+        return ResilientShardSource(
+            store, tier, max_retries=ctx.max_retries,
+            backoff_s=ctx.retry_backoff_s,
+            allow_partial=ctx.allow_partial, health=_ctx_health(ctx),
+        )
+    return store.shard_source(tier)
+
+
 def _make_stream_rescore(k: int) -> Callable:
     """Exact candidate rescore for the streamed int8 executors: direct-form
     (q - x)^2 over the gathered candidate rows, lexicographic (value, index)
@@ -496,8 +555,15 @@ def _rescore_certify(plan, queries, store, ctx, lb, li, scan_bytes,
     t_scan = time.perf_counter()
     uniq, inv = np.unique(cand_idx, return_inverse=True)
     rows_speculated = rows_topped = rows_wasted = 0
-    if spec is not None:
-        spec_ids, spec_rows = spec.result()  # join the producer thread
+    spec_failed = 0
+    spec_res = spec.result() if spec is not None else None
+    if spec is not None and spec_res is None:
+        # the background gather died (flaky disk, injected fault): the
+        # speculation was only ever a read reschedule, so degrade to the
+        # synchronous gather of the FINAL ids — bit-identical, just slower
+        spec_failed = 1
+    if spec_res is not None:
+        spec_ids, spec_rows = spec_res
         # diff the final queue against the snapshot: reuse hits by id,
         # top up only the ids the late shards added
         pos = np.searchsorted(spec_ids, uniq)
@@ -508,7 +574,8 @@ def _rescore_certify(plan, queries, store, ctx, lb, li, scan_bytes,
         rows[hit] = spec_rows[pos_c[hit]]
         missing = uniq[~hit]
         if missing.size:
-            rows[~hit] = store.gather_rows(missing)
+            rows[~hit] = _with_retries(
+                lambda: store.gather_rows(missing), ctx)
         rows_speculated = int((spec_ids >= 0).sum())
         rows_topped = int((missing >= 0).sum())
         rows_wasted = rows_speculated - int((uniq[hit] >= 0).sum())
@@ -516,13 +583,14 @@ def _rescore_certify(plan, queries, store, ctx, lb, li, scan_bytes,
         # is the price of the overlap and must show up in the account)
         scan_bytes += (rows_speculated + rows_topped) * int(rows.shape[1]) * 4
     else:
-        rows = store.gather_rows(uniq)
+        rows = _with_retries(lambda: store.gather_rows(uniq), ctx)
         scan_bytes += int((uniq >= 0).sum()) * int(rows.shape[1]) * 4
     ctx.speculation = {
         "trigger": trigger,
         "rows_speculated": rows_speculated,
         "rows_topped_up": rows_topped,
         "rows_wasted": rows_wasted,
+        "failed": spec_failed,
     }
     cand_vecs = rows[inv.reshape(m, r)]  # host scatter back to (m, r, d)
     t_gather = time.perf_counter()
@@ -531,7 +599,7 @@ def _rescore_certify(plan, queries, store, ctx, lb, li, scan_bytes,
     # live delta rows have no int8 representation: merge them exactly
     # through the same direct-form step the oracle uses (order-invariant)
     for p in store.delta_shards():
-        dp = device_put_partition(p)
+        dp = _with_retries(lambda: device_put_partition(p), ctx)
         s, i = direct_step(s, i, queries, dp.vectors, dp.norms,
                            jnp.int32(p.base_index))
         scan_bytes += int(p.vectors.shape[0]) * int(p.vectors.shape[1]) * 4
@@ -547,9 +615,11 @@ def _rescore_certify(plan, queries, store, ctx, lb, li, scan_bytes,
 
         fb_stats: dict = {}
         exact = streamed_direct_scan(
-            queries, store.shard_source("f32"), plan.k,
+            queries, _resilient_source(store, "f32", ctx), plan.k,
             prefetch_depth=ctx.prefetch_depth, step_fn=direct_step,
             stream_stats=fb_stats,
+            put_retries=ctx.max_retries,
+            retry_backoff_s=ctx.retry_backoff_s, health=_ctx_health(ctx),
         )
         # the fallback is a second full pass: its shipped partitions join
         # the transfer account (exactly the case an operator wants to see)
@@ -632,9 +702,12 @@ def _int8_streamed(plan, queries, store, ctx) -> TopK:
 
     lb = jnp.full((m, r + 1), jnp.inf, jnp.float32)
     li = jnp.full((m, r + 1), -1, jnp.int32)
-    stream = DoubleBufferedStream(store.shard_source("int8"),
+    stream = DoubleBufferedStream(_resilient_source(store, "int8", ctx),
                                   depth=ctx.prefetch_depth,
-                                  put_fn=device_put_partition)
+                                  put_fn=device_put_partition,
+                                  put_retries=ctx.max_retries,
+                                  retry_backoff_s=ctx.retry_backoff_s,
+                                  health=_ctx_health(ctx))
     n_shards = int(getattr(store, "n_shards", 0) or 0)
     trigger_after = None
     if trigger < 1.0 and n_shards > 1:
@@ -645,10 +718,25 @@ def _int8_streamed(plan, queries, store, ctx) -> TopK:
     spec = None
     shards_done = 0
     scan_bytes = 0
+    direct_r1 = None
     for p in stream:
-        lb, li = bound_step(lb, li, queries, p.q, p.scales, p.err, p.qnorm,
-                            jnp.int32(p.base_index))
-        scan_bytes += p.scan_bytes()
+        if isinstance(p, part.PaddedDataset):
+            # quarantined int8 shard degraded to its f32 rows: exact
+            # distances ARE valid lower bounds of themselves, so merging
+            # them into the widened queue through the direct-form step
+            # keeps the certificate sound and the result bit-identical
+            # to the f32 oracle. Built lazily: the fault-free path never
+            # touches this cache entry (no-recompile tests stay exact).
+            if direct_r1 is None:
+                direct_r1 = _cached(("direct-step", r + 1),
+                                    lambda: make_direct_partition_step(r + 1))
+            lb, li = direct_r1(lb, li, queries, p.vectors, p.norms,
+                               jnp.int32(p.base_index))
+            scan_bytes += int(p.vectors.shape[0]) * int(p.vectors.shape[1]) * 4
+        else:
+            lb, li = bound_step(lb, li, queries, p.q, p.scales, p.err,
+                                p.qnorm, jnp.int32(p.base_index))
+            scan_bytes += p.scan_bytes()
         shards_done += 1
         if (spec is None and trigger_after is not None
                 and trigger_after <= shards_done < n_shards):
@@ -786,17 +874,35 @@ def _int8_mesh_streamed(plan, queries, store, ctx) -> TopK:
     ring = make_ring_put(devices)
     # prefetch at least one shard per device so the ring never starves
     stream = DoubleBufferedStream(
-        store.shard_source("int8"),
+        _resilient_source(store, "int8", ctx),
         depth=max(ctx.prefetch_depth, n_dev),
         put_fn=lambda p: device_put_partition(p, put_fn=ring),
+        put_retries=ctx.max_retries, retry_backoff_s=ctx.retry_backoff_s,
+        health=_ctx_health(ctx),
     )
     dev_bytes = [0] * n_dev
     shard_i = 0
+    direct_r1 = None
     for p in stream:
         d = shard_i % n_dev  # consumption order == ring put order
-        lbs[d], lis[d] = bound_step(lbs[d], lis[d], qs[d], p.q, p.scales,
-                                    p.err, p.qnorm, jnp.int32(p.base_index))
-        dev_bytes[d] += p.scan_bytes()
+        if isinstance(p, part.PaddedDataset):
+            # quarantined shard's f32 rows, already ring-committed to
+            # device d (the resilient source yields before the ring put,
+            # so skipped shards never desync put and consume order);
+            # exact distances merge as their own lower bounds — see
+            # _int8_streamed
+            if direct_r1 is None:
+                direct_r1 = _cached(("direct-step", r + 1),
+                                    lambda: make_direct_partition_step(r + 1))
+            lbs[d], lis[d] = direct_r1(lbs[d], lis[d], qs[d], p.vectors,
+                                       p.norms, jnp.int32(p.base_index))
+            dev_bytes[d] += (int(p.vectors.shape[0])
+                             * int(p.vectors.shape[1]) * 4)
+        else:
+            lbs[d], lis[d] = bound_step(lbs[d], lis[d], qs[d], p.q,
+                                        p.scales, p.err, p.qnorm,
+                                        jnp.int32(p.base_index))
+            dev_bytes[d] += p.scan_bytes()
         shard_i += 1
     ctx.stream_stats = {"transfers": stream.transfers,
                         "restarts": stream.restarts}

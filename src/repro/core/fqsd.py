@@ -125,6 +125,9 @@ def fqsd_streamed(
     put_fn=None,
     step_fn=None,
     stream_stats: dict | None = None,
+    put_retries: int = 0,
+    retry_backoff_s: float = 0.05,
+    health: dict | None = None,
 ) -> TopK:
     """Exact kNN over a host-resident dataset streamed with double buffering.
 
@@ -134,7 +137,10 @@ def fqsd_streamed(
     `step_fn` lets callers inject an already-built step (the executor layer
     caches it per plan so repeated streamed searches share one executable).
     A `stream_stats` dict receives the streamer's transfers/restarts
-    counters (serving observability).
+    counters (serving observability). `put_retries`/`retry_backoff_s`/
+    `health` ride through to the streamer's bounded device_put retry
+    (shard-*read* resilience belongs to the partition source, e.g.
+    ``streaming.ResilientShardSource``).
     """
     from repro.core.streaming import DoubleBufferedStream, device_put_partition
 
@@ -144,6 +150,8 @@ def fqsd_streamed(
     stream = DoubleBufferedStream(
         partitions, depth=prefetch_depth,
         put_fn=put_fn if put_fn is not None else device_put_partition,
+        put_retries=put_retries, retry_backoff_s=retry_backoff_s,
+        health=health,
     )
     for p in stream:
         state = step(
@@ -203,6 +211,9 @@ def streamed_direct_scan(
     prefetch_depth: int = 2,
     step_fn=None,
     stream_stats: dict | None = None,
+    put_retries: int = 0,
+    retry_backoff_s: float = 0.05,
+    health: dict | None = None,
 ) -> TopK:
     """Exact direct-form kNN over streamed partitions (l2 only).
 
@@ -210,7 +221,8 @@ def streamed_direct_scan(
     but scoring through :func:`make_direct_partition_step`, so the result
     is bit-identical to a full lexicographic sort of every (q - x)^2
     distance — the reference the streamed int8 executors are tested
-    against and fall back to for uncertified queries.
+    against and fall back to for uncertified queries. Retry/health knobs
+    mirror :func:`fqsd_streamed`.
     """
     from repro.core.streaming import DoubleBufferedStream, device_put_partition
 
@@ -219,7 +231,10 @@ def streamed_direct_scan(
     s = jnp.full((m, k), jnp.inf, jnp.float32)
     i = jnp.full((m, k), -1, jnp.int32)
     stream = DoubleBufferedStream(partitions, depth=prefetch_depth,
-                                  put_fn=device_put_partition)
+                                  put_fn=device_put_partition,
+                                  put_retries=put_retries,
+                                  retry_backoff_s=retry_backoff_s,
+                                  health=health)
     for p in stream:
         s, i = step(s, i, queries, p.vectors, p.norms, jnp.int32(p.base_index))
     if stream_stats is not None:

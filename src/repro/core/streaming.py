@@ -17,12 +17,22 @@ from __future__ import annotations
 
 import collections
 import threading
+import time
 from typing import Callable, Iterable, Iterator, TypeVar
 
 import jax
 import numpy as np
 
 T = TypeVar("T")
+
+
+def _fresh_health() -> dict:
+    """One search's resilience accounting (engine surfaces it as
+    ``stats["health"]``): failed attempts retried, shards quarantined to
+    the f32 tier, shards skipped under ``allow_partial``, straggler reads.
+    """
+    return {"retries": 0, "degraded": [], "failed_shards": [],
+            "slow_shards": []}
 
 
 def device_put_partition(p, put_fn: Callable | None = None):
@@ -37,6 +47,11 @@ def device_put_partition(p, put_fn: Callable | None = None):
     pytree, so the streamer's "one partition in flight" schedule holds for
     multi-array partitions exactly as it does for (vectors, norms) pairs.
     """
+    from repro import faults as _faults
+
+    inj = _faults.active()
+    if inj is not None:
+        inj.on_device_put(getattr(p, "base_index", -1))
     put = put_fn or jax.device_put
     arrays = {
         name: v
@@ -68,6 +83,9 @@ class DoubleBufferedStream:
         host_iter: Iterable[T],
         depth: int = 2,
         put_fn: Callable[[T], T] | None = None,
+        put_retries: int = 0,
+        retry_backoff_s: float = 0.05,
+        health: dict | None = None,
     ):
         if depth < 1:
             raise ValueError("depth must be >= 1")
@@ -75,10 +93,23 @@ class DoubleBufferedStream:
         self._it = iter(host_iter)
         self._depth = depth
         self._put = put_fn or jax.device_put
+        self._put_retries = max(0, int(put_retries))
+        self._retry_backoff_s = max(0.0, float(retry_backoff_s))
+        self._health = health
         self._buf: collections.deque = collections.deque()
         self._started = False
-        self.transfers = 0  # observability: number of partitions shipped
+        self._next_i = 0  # stream position of the next item the source yields
+        self.transfers = 0  # observability: number of partitions delivered
         self.restarts = 0  # observability: completed re-iterations
+
+    @staticmethod
+    def _tag(err: BaseException, index: int) -> None:
+        # Failure forensics: mark which stream position died so callers
+        # (quarantine, logs) can name the shard without re-scanning.
+        try:
+            err.shard_index = index
+        except Exception:
+            pass
 
     def _fill(self) -> None:
         while len(self._buf) < self._depth:
@@ -86,11 +117,31 @@ class DoubleBufferedStream:
                 item = next(self._it)
             except StopIteration:
                 return
+            except BaseException as e:
+                self._tag(e, self._next_i)
+                raise
+            idx = self._next_i
+            self._next_i += 1
             # device_put returns immediately (async dispatch); the DMA for
             # partition i+1 overlaps the consumer's compute on partition i —
-            # the two "memory banks" of the paper.
-            self._buf.append(self._put(item))
-            self.transfers += 1
+            # the two "memory banks" of the paper. A failed put (flaky DMA /
+            # injected fault) is retried with exponential backoff before the
+            # error — tagged with the shard index — escapes.
+            delay = self._retry_backoff_s
+            for attempt in range(self._put_retries + 1):
+                try:
+                    self._buf.append(self._put(item))
+                    break
+                except BaseException as e:
+                    if self._health is not None:
+                        self._health["retries"] = (
+                            self._health.get("retries", 0) + 1)
+                    if attempt == self._put_retries:
+                        self._tag(e, idx)
+                        raise
+                    if delay > 0:
+                        time.sleep(delay)
+                        delay *= 2
 
     def __iter__(self) -> Iterator[T]:
         if self._started:
@@ -104,12 +155,14 @@ class DoubleBufferedStream:
                 )
             self._it = fresh
             self._buf.clear()
+            self._next_i = 0
             self.restarts += 1
         self._started = True
         self._fill()
         while self._buf:
             item = self._buf.popleft()
             self._fill()  # enqueue next bank before yielding control
+            self.transfers += 1  # count on delivery, not on (maybe lost) ship
             yield item
 
 
@@ -142,6 +195,100 @@ def make_ring_put(devices) -> Callable:
     return put
 
 
+class ResilientShardSource:
+    """Restartable shard iterable with bounded retry, quarantine, and
+    straggler accounting — the self-healing front of every streamed scan.
+
+    Wraps anything with the store surface (``read_shard(i, tier)``,
+    ``n_shards``, ``delta_shards()`` — `DatasetStore` or the engine's
+    masked view) and yields its shards in manifest order:
+
+    * a failed read (``IOError``, CRC mismatch, injected fault) is retried
+      up to ``max_retries`` times with exponential backoff starting at
+      ``backoff_s``; every failed attempt counts into ``health["retries"]``;
+    * an int8 shard that stays unreadable is **quarantined with certified
+      degradation**: its f32 rows are read (same retry budget) and yielded
+      instead — exact distances are valid lower bounds, so the streamed
+      int8 certificate stays sound and results stay bit-identical to the
+      f32 oracle; the shard id lands in ``health["degraded"]``;
+    * a shard unrecoverable on every tier raises loudly unless the request
+      opted in with ``allow_partial=True``, in which case it is skipped
+      and listed in ``health["failed_shards"]`` (the engine flags the
+      result ``partial``) — never a silent wrong top-k;
+    * reads slower than ``straggler_factor ×`` the EWMA of recent read
+      times are recorded in ``health["slow_shards"]``.
+
+    The f32 pass also yields the store's delta shards (matching
+    ``iter_shards``); the int8 pass covers main shards only, exactly like
+    the store's own int8 iterator.
+    """
+
+    def __init__(self, store, tier: str, max_retries: int = 2,
+                 backoff_s: float = 0.05, allow_partial: bool = False,
+                 health: dict | None = None, straggler_factor: float = 4.0):
+        self._store = store
+        self._tier = tier
+        self._retries = max(0, int(max_retries))
+        self._backoff_s = max(0.0, float(backoff_s))
+        self._allow_partial = bool(allow_partial)
+        self._straggler_factor = float(straggler_factor)
+        self._mean_read_s: float | None = None  # EWMA of shard read times
+        self.health = health if health is not None else _fresh_health()
+
+    def _note_read_time(self, i: int, dt: float) -> None:
+        mean = self._mean_read_s
+        if mean is None:
+            self._mean_read_s = dt
+            return
+        if mean > 1e-6 and dt > self._straggler_factor * mean:
+            self.health["slow_shards"].append(i)
+        self._mean_read_s = 0.8 * mean + 0.2 * dt
+
+    def _read(self, i: int, tier: str):
+        delay = self._backoff_s
+        for attempt in range(self._retries + 1):
+            try:
+                t0 = time.perf_counter()
+                p = self._store.read_shard(i, tier)
+                self._note_read_time(i, time.perf_counter() - t0)
+                return p
+            except Exception as e:
+                self.health["retries"] += 1
+                if attempt == self._retries:
+                    try:
+                        e.shard_index = i
+                    except Exception:
+                        pass
+                    raise
+                if delay > 0:
+                    time.sleep(delay)
+                    delay *= 2
+
+    def __iter__(self):
+        for i in range(int(self._store.n_shards)):
+            try:
+                p = self._read(i, self._tier)
+            except Exception:
+                p = None
+                if self._tier == "int8":
+                    try:
+                        p = self._read(i, "f32")
+                    except Exception:
+                        p = None
+                    else:
+                        if i not in self.health["degraded"]:
+                            self.health["degraded"].append(i)
+                if p is None:
+                    if not self._allow_partial:
+                        raise
+                    if i not in self.health["failed_shards"]:
+                        self.health["failed_shards"].append(i)
+                    continue
+            yield p
+        if self._tier == "f32":
+            yield from self._store.delta_shards()
+
+
 class SpeculativeGather:
     """Background speculative gather of candidate rows (ISSUE 6 tentpole).
 
@@ -158,7 +305,11 @@ class SpeculativeGather:
     The speculation is *advisory by construction*: the exact rescore
     always runs on the final queue's ids, with speculated rows keyed by
     id — so a wrong guess costs wasted bytes (reported, charged to
-    bytes_scanned), never a wrong or non-bit-identical result.
+    bytes_scanned), never a wrong or non-bit-identical result. A *failed*
+    speculation is advisory too: ``result()`` returns ``None`` (the error
+    is kept on ``.error``) and the executor degrades to the synchronous
+    gather it would have run anyway — counted in
+    ``stats["speculation"]["failed"]``, still bit-identical.
     """
 
     def __init__(self, candidate_ids, store):
@@ -166,7 +317,7 @@ class SpeculativeGather:
         self._store = store
         self.ids: np.ndarray | None = None  # sorted unique snapshot ids
         self.rows: np.ndarray | None = None  # f32 rows, aligned with ids
-        self._err: BaseException | None = None
+        self.error: BaseException | None = None
         self._thread = threading.Thread(target=self._run, daemon=True,
                                         name="speculative-gather")
         self._thread.start()
@@ -177,16 +328,17 @@ class SpeculativeGather:
             self.rows = self._store.gather_rows(ids)
             self.ids = ids
         except BaseException as e:  # surfaced to the consumer on result()
-            self._err = e
+            self.error = e
 
-    def result(self) -> tuple[np.ndarray, np.ndarray]:
-        """Join the producer; returns (sorted unique ids, their f32 rows).
-
-        Re-raises any producer-side exception — a failed speculation must
-        fail the search loudly, not silently return rows of zeros.
+    def result(self) -> tuple[np.ndarray, np.ndarray] | None:
+        """Join the producer; returns (sorted unique ids, their f32 rows),
+        or ``None`` if the background gather failed (``.error`` holds the
+        exception). A failed speculation must not fail the search — the
+        consumer degrades to a synchronous gather of the final candidate
+        set, which is exactly the non-speculative path.
         """
         self._thread.join()
-        if self._err is not None:
-            raise self._err
+        if self.error is not None:
+            return None
         assert self.ids is not None and self.rows is not None
         return self.ids, self.rows

@@ -1,0 +1,245 @@
+"""Deterministic, seedable fault injection for the search path.
+
+The training side already treats failure as a first-class input
+(`repro.runtime.fault.FailureInjector` kills steps on a schedule so the
+checkpoint/recovery loop can be tested deterministically). This module is
+the same idea for the *serving* path: a `FaultPlan` describes a mixture of
+storage and transfer faults — shard read ``IOError``, byte corruption,
+slow-shard stragglers, ``device_put`` failures, gather failures — and a
+`FaultInjector` fires them from hooks inside `store.DatasetStore` and
+`core.streaming`, deterministically per ``(op, shard, occurrence)``.
+
+Determinism contract
+    Every decision is drawn from ``np.random.default_rng`` seeded by
+    ``(plan.seed, op, key, occurrence)``. The same plan over the same call
+    sequence injects the same faults — chaos runs are replayable by seed.
+
+Convergence contract
+    Transient faults are bounded: one ``(op, key)`` site fails at most
+    ``plan.max_failures_per_op`` times *consecutively*, then the next call
+    is forced to succeed. A reader retrying at least that many times
+    always converges, so a chaos soak with ``max_retries >=
+    max_failures_per_op`` can assert zero crashes. Shards listed in
+    ``plan.fail_shards`` are *persistent* failures (every read raises) —
+    the quarantine / ``allow_partial`` machinery, not retry, must absorb
+    those.
+
+The injector is either installed per store (``store.fault_injector =
+inj``) or process-wide (`install` / the `installed` context manager —
+this is what reaches the `device_put_partition` hook, which has no store
+in scope).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+import time
+from collections import Counter
+
+import numpy as np
+
+__all__ = [
+    "FaultError",
+    "ShardReadError",
+    "ShardCorruptError",
+    "FaultPlan",
+    "FaultInjector",
+    "install",
+    "uninstall",
+    "active",
+    "installed",
+]
+
+
+class FaultError(OSError):
+    """Base class for injected / detected search-path storage faults."""
+
+    def __init__(self, message: str, shard_id: int = -1, tier: str = ""):
+        super().__init__(message)
+        self.shard_id = int(shard_id)
+        self.tier = str(tier)
+
+
+class ShardReadError(FaultError):
+    """A shard's bytes could not be read (torn file, flaky disk, ...)."""
+
+
+class ShardCorruptError(FaultError):
+    """A shard's bytes were read but failed their CRC32 check."""
+
+
+_TIER_CODES = {"f32": 0, "int8": 1, "int8_meta": 2, "": 3}
+_OP_CODES = {"read": 0, "corrupt": 1, "slow": 2, "put": 3, "gather": 4}
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """One replayable mixture of search-path faults.
+
+    Rates are per-call probabilities in ``[0, 1]``. ``fail_shards`` lists
+    shard ids that fail *persistently* (optionally restricted to
+    ``fail_tier``); everything else is transient and bounded by
+    ``max_failures_per_op`` consecutive failures per site.
+    """
+
+    seed: int = 0
+    read_error_rate: float = 0.0   # shard read raises ShardReadError
+    corrupt_rate: float = 0.0      # shard bytes get one flipped byte
+    slow_rate: float = 0.0         # shard read sleeps slow_s (straggler)
+    slow_s: float = 0.01
+    put_error_rate: float = 0.0    # device_put_partition raises
+    gather_error_rate: float = 0.0 # gather_rows raises
+    fail_shards: tuple = ()        # persistent: these shards always fail
+    fail_tier: str | None = None   # restrict fail_shards to one tier
+    max_failures_per_op: int = 2   # consecutive transient failures cap
+
+    def __post_init__(self):
+        for f in ("read_error_rate", "corrupt_rate", "slow_rate",
+                  "put_error_rate", "gather_error_rate"):
+            v = getattr(self, f)
+            if not 0.0 <= float(v) <= 1.0:
+                raise ValueError(f"{f} must be in [0, 1], got {v!r}")
+        if self.slow_s < 0:
+            raise ValueError(f"slow_s must be >= 0, got {self.slow_s!r}")
+        if self.max_failures_per_op < 0:
+            raise ValueError("max_failures_per_op must be >= 0, got "
+                             f"{self.max_failures_per_op!r}")
+        if self.fail_tier is not None and self.fail_tier not in ("f32", "int8"):
+            raise ValueError(f"fail_tier must be 'f32'|'int8'|None, got "
+                             f"{self.fail_tier!r}")
+
+
+class FaultInjector:
+    """Fires a `FaultPlan`'s faults from the store/streaming hooks.
+
+    Thread-safe: the speculative-gather thread calls `on_gather`
+    concurrently with shard reads on the dispatch thread. Every injected
+    fault is appended to ``events`` (``{"op", "shard", "tier"}``) so tests
+    can reconcile injections against the `health` stats that surface them.
+    """
+
+    def __init__(self, plan: FaultPlan):
+        self.plan = plan
+        self.events: list[dict] = []
+        self._lock = threading.Lock()
+        self._calls: Counter = Counter()   # (op, key) -> call count
+        self._consec: Counter = Counter()  # (op, key) -> consecutive fails
+
+    # ------------------------------------------------------------- internals
+    def _uniform(self, op: str, key: tuple, call: int) -> float:
+        seq = [int(self.plan.seed) & 0x7FFFFFFF, _OP_CODES[op]]
+        seq += [int(k) & 0x7FFFFFFF for k in key]
+        seq.append(int(call) & 0x7FFFFFFF)
+        return float(np.random.default_rng(seq).random())
+
+    def _fire(self, op: str, key: tuple, rate: float) -> bool:
+        """Deterministic bounded coin flip for one (op, site) call."""
+        if rate <= 0.0:
+            return False
+        site = (op, key)
+        with self._lock:
+            self._calls[site] += 1
+            call = self._calls[site]
+            if self._consec[site] >= self.plan.max_failures_per_op:
+                # forced success: bounded retries always converge
+                self._consec[site] = 0
+                return False
+            if self._uniform(op, key, call) < rate:
+                self._consec[site] += 1
+                return True
+            self._consec[site] = 0
+            return False
+
+    def _log(self, op: str, shard: int, tier: str) -> None:
+        with self._lock:
+            self.events.append({"op": op, "shard": int(shard), "tier": tier})
+
+    # ----------------------------------------------------------------- hooks
+    def on_shard_read(self, shard_id: int, tier: str) -> None:
+        """Called by ``DatasetStore.read_shard`` before touching bytes."""
+        p = self.plan
+        if shard_id in p.fail_shards and (p.fail_tier is None
+                                          or p.fail_tier == tier):
+            self._log("read", shard_id, tier)
+            raise ShardReadError(
+                f"injected persistent read failure on shard {shard_id} "
+                f"({tier} tier)", shard_id, tier)
+        tkey = (int(shard_id), _TIER_CODES.get(tier, 3))
+        if self._fire("slow", tkey, p.slow_rate):
+            self._log("slow", shard_id, tier)
+            time.sleep(p.slow_s)
+        if self._fire("read", tkey, p.read_error_rate):
+            self._log("read", shard_id, tier)
+            raise ShardReadError(
+                f"injected transient read failure on shard {shard_id} "
+                f"({tier} tier)", shard_id, tier)
+
+    def maybe_corrupt(self, arr: np.ndarray, shard_id: int,
+                      tier: str) -> np.ndarray:
+        """Return ``arr``, or a copy with one deterministic byte flipped."""
+        tkey = (int(shard_id), _TIER_CODES.get(tier, 3))
+        if not self._fire("corrupt", tkey, self.plan.corrupt_rate):
+            return arr
+        self._log("corrupt", shard_id, tier)
+        out = np.array(arr, copy=True)
+        flat = out.view(np.uint8).reshape(-1)
+        with self._lock:
+            pos = int(self._uniform("corrupt", tkey, self._calls[
+                ("corrupt", tkey)]) * flat.size) % flat.size
+        flat[pos] ^= 0xFF
+        return out
+
+    def on_device_put(self, base_index: int) -> None:
+        """Called by ``core.streaming.device_put_partition`` per transfer."""
+        key = (max(int(base_index), 0),)
+        if self._fire("put", key, self.plan.put_error_rate):
+            self._log("put", base_index, "")
+            raise RuntimeError(
+                f"injected device_put failure (partition base {base_index})")
+
+    def on_gather(self, n_ids: int) -> None:
+        """Called by ``DatasetStore.gather_rows`` before reading rows."""
+        if self._fire("gather", (), self.plan.gather_error_rate):
+            self._log("gather", -1, "f32")
+            raise ShardReadError(
+                f"injected gather failure ({n_ids} candidate rows)")
+
+    # ------------------------------------------------------------- reporting
+    def counts(self) -> dict:
+        """Injected-event totals per op (for reconciling against health)."""
+        with self._lock:
+            c: Counter = Counter(e["op"] for e in self.events)
+        return {op: int(c.get(op, 0)) for op in _OP_CODES}
+
+
+# ------------------------------------------------------- process-wide hookup
+_ACTIVE: FaultInjector | None = None
+_ACTIVE_LOCK = threading.Lock()
+
+
+def install(inj: FaultInjector) -> None:
+    """Install a process-wide injector (reaches the device_put hook)."""
+    global _ACTIVE
+    with _ACTIVE_LOCK:
+        _ACTIVE = inj
+
+
+def uninstall() -> None:
+    global _ACTIVE
+    with _ACTIVE_LOCK:
+        _ACTIVE = None
+
+
+def active() -> FaultInjector | None:
+    return _ACTIVE
+
+
+@contextlib.contextmanager
+def installed(inj: FaultInjector):
+    """``with installed(inj): ...`` — scoped process-wide injection."""
+    install(inj)
+    try:
+        yield inj
+    finally:
+        uninstall()

@@ -33,6 +33,17 @@ def _positive_int(text: str) -> int:
     return v
 
 
+def _nonneg_int(text: str) -> int:
+    """argparse type: int >= 0 (retry budgets; 0 = no retries)."""
+    try:
+        v = int(text)
+    except ValueError:
+        raise argparse.ArgumentTypeError(f"expected an integer, got {text!r}")
+    if v < 0:
+        raise argparse.ArgumentTypeError(f"must be >= 0, got {v}")
+    return v
+
+
 def _shard_fraction(text: str) -> float:
     """argparse type: speculation trigger in [0, 1] (1 = no speculation)."""
     try:
@@ -59,9 +70,29 @@ def serve_knn(args):
     x = vector_dataset(args.n, args.d, seed=0)
     q = query_stream(x, args.queries, seed=1)
     router = Router()
-    router.create(args.collection, x, k=args.k, n_partitions=args.partitions,
-                  prefetch_depth=args.prefetch_depth,
-                  spec_trigger=args.spec_trigger)
+    engine_kw = dict(k=args.k, n_partitions=args.partitions,
+                     prefetch_depth=args.prefetch_depth,
+                     spec_trigger=args.spec_trigger,
+                     max_retries=args.max_retries)
+    if args.verify_on_open:
+        # write the corpus through the disk store and reopen it verified:
+        # full CRC audit at open, plus CRC-on-read armed on every streamed
+        # shard for the life of the server
+        import atexit
+        import shutil
+        import tempfile
+
+        from repro.store import DatasetStore
+
+        tiers = ("f32", "int8") if args.int8_depth is not None else ("f32",)
+        tmp = tempfile.mkdtemp(prefix="knn-store-")
+        # the store's memmaps stay open for the life of the server
+        atexit.register(shutil.rmtree, tmp, ignore_errors=True)
+        DatasetStore.from_array(x, directory=tmp, tiers=tiers)
+        store = DatasetStore.open(tmp, verify=True, verify_on_read=True)
+        router.create(args.collection, store=store, **engine_kw)
+    else:
+        router.create(args.collection, x, **engine_kw)
     if args.int8_depth is not None:
         router.engine(args.collection).enable_int8()
     sched = AdaptiveScheduler(
@@ -70,7 +101,8 @@ def serve_knn(args):
         int8_min_depth=args.int8_depth,
         router=router, collection=args.collection,
     )
-    reqs = bursty_requests(q, args.burst_size, args.trickle)
+    req_opts = {"allow_partial": True} if args.allow_partial else {}
+    reqs = bursty_requests(q, args.burst_size, args.trickle, **req_opts)
     t0 = time.perf_counter()
     n_served = sum(1 for _ in sched.serve(reqs))
     wall = time.perf_counter() - t0
@@ -78,7 +110,13 @@ def serve_knn(args):
     print(f"collection={st['collection']}  policy={st['policy']}  "
           f"served={st['served']} (wall {wall:.2f}s)  "
           f"mode_switches={st['mode_switches']}  "
-          f"deadline_misses={st['deadline_misses']}")
+          f"deadline_misses={st['deadline_misses']}  shed={st['shed']}")
+    h, cb = st["health"], st["circuit_breaker"]
+    print(f"  health: retries={h['retries']} "
+          f"failed_shards={h['failed_shards']} degraded={h['degraded']} "
+          f"slow_shards={h['slow_shards']}  "
+          f"breaker: open={cb['open']} trips={cb['trips']} "
+          f"probes={cb['probes']}")
     if st["transfers"]:
         depth = args.prefetch_depth if args.prefetch_depth else "tuned/2"
         print(f"  streamed: transfers={st['transfers']} "
@@ -170,6 +208,21 @@ def main(argv=None):
                          "on a background thread (1 disables speculation; "
                          "default: the device's tuned value, else 0.5). "
                          "Results are bit-identical at every setting")
+    ap.add_argument("--verify-on-open", action="store_true",
+                    help="round-trip the corpus through a disk store and "
+                         "reopen it with a full CRC audit, arming per-read "
+                         "CRC checks (ShardCorruptError on mismatch) for "
+                         "every streamed shard")
+    ap.add_argument("--allow-partial", action="store_true",
+                    help="stamp allow_partial on every request: a shard "
+                         "that stays unreadable after retries + quarantine "
+                         "is skipped and the result is flagged partial "
+                         "(default: strict — such a shard raises)")
+    ap.add_argument("--max-retries", type=_nonneg_int, default=None,
+                    help="bounded retry budget (>= 0, exponential backoff) "
+                         "for streamed shard reads / candidate gathers / "
+                         "device transfers; 0 disables retry. Default: the "
+                         "engine's default (2)")
     ap.add_argument("--arch", default="minicpm-2b")
     args = ap.parse_args(argv)
     if args.mode == "knn":

@@ -63,6 +63,7 @@ from repro.api.types import SearchRequest, SearchResult
 from repro.core.engine import ExactKNN
 from repro.core.partition import next_pow2
 from repro.core.topk import TopK
+from repro.faults import FaultError
 
 Policy = Literal["latency", "throughput", "adaptive"]
 
@@ -131,6 +132,15 @@ class AdaptiveScheduler:
     Per-request pins always win: ``mode_hint`` overrides the policy for its
     dispatch, ``tier`` overrides :meth:`choose_tier`.
 
+    Resilience: ``shed_expired`` (default True) answers requests whose
+    deadline has already expired at dispatch time with an empty shed
+    result (``stats["mode"] == "shed"``) instead of serving them late; a
+    per-collection circuit breaker opens after ``breaker_threshold``
+    consecutive failed/degraded dispatches, then serves degraded
+    (``allow_partial`` stamped onto dispatches) until a probe read of the
+    implicated shard succeeds. ``stats()["health"]`` aggregates every
+    dispatch's resilience accounting.
+
     Construct with either ``engine=...`` (single collection) or
     ``router=...`` + ``collection=...`` (multi-collection; dispatches go
     through ``Router.search`` so per-collection stats accumulate).
@@ -151,6 +161,8 @@ class AdaptiveScheduler:
         int8_min_depth: int | None = None,
         router=None,
         collection: str | None = None,
+        shed_expired: bool = True,
+        breaker_threshold: int = 3,
     ):
         if router is not None:
             if collection is None:
@@ -171,8 +183,28 @@ class AdaptiveScheduler:
         self.max_batch = int(max_batch)
         self.deadline_slack = float(deadline_slack)
         self.int8_min_depth = None if int8_min_depth is None else int(int8_min_depth)
+        if breaker_threshold < 1:
+            raise ValueError(
+                f"breaker_threshold must be >= 1, got {breaker_threshold}"
+            )
+        #: deadline-aware load shedding (discrete-event serve only): a
+        #: request whose deadline has ALREADY expired at dispatch time is
+        #: answered with an empty shed result instead of burning a scan on
+        #: an answer nobody can use.
+        self.shed_expired = bool(shed_expired)
+        self.breaker_threshold = int(breaker_threshold)
         self.served = 0
         self.deadline_misses = 0
+        self.shed = 0
+        # cross-dispatch resilience accounting (mirrors per-result
+        # stats["health"], aggregated) + the per-collection circuit breaker
+        self._health_agg = {"retries": 0, "failed_shards": set(),
+                            "degraded": set(), "slow_shards": set()}
+        self._breaker_failures = 0   # consecutive failed/degraded dispatches
+        self._breaker_open = False
+        self._breaker_trips = 0
+        self._breaker_probes = 0
+        self._breaker_shards: set[int] = set()  # shards implicated so far
         self._lat_ms: dict[str, list[float]] = {m: [] for m in self.MODES}
         self._svc_s: dict[str, float] = {m: 0.0 for m in self.MODES}
         self._count: dict[str, int] = {m: 0 for m in self.MODES}
@@ -264,6 +296,7 @@ class AdaptiveScheduler:
             r.k, r.metric, r.tier,
             r.mode_hint if r.mode_hint != "auto" else None,
             id(r.filter_mask) if r.filter_mask is not None else None,
+            r.allow_partial, r.max_retries,
         )
 
     # ------------------------------------------------------------ execution
@@ -271,6 +304,43 @@ class AdaptiveScheduler:
         if self.router is not None:
             return self.router.search(self.collection, request)
         return self.engine.search(request)
+
+    # ------------------------------------------------------- circuit breaker
+    def _probe_store(self) -> bool:
+        """Breaker probe: can the implicated shard (or shard 0) be read on
+        every tier again? Success closes the breaker; a failure keeps
+        serving degraded (allow_partial stamped on dispatches)."""
+        self._breaker_probes += 1
+        store = getattr(self.engine, "store", None)
+        if store is None or not hasattr(store, "read_shard"):
+            return True  # nothing probeable: assume recovered
+        shard = min(self._breaker_shards) if self._breaker_shards else 0
+        try:
+            store.read_shard(shard, "f32")
+            if store.has_tier("int8"):
+                store.read_shard(shard, "int8")
+        except Exception:
+            return False
+        return True
+
+    def _breaker_note(self, health: dict | None) -> None:
+        """Count one dispatch toward the breaker: failed or degraded shards
+        open it after `breaker_threshold` consecutive dirty dispatches; a
+        clean dispatch resets the streak and closes an open breaker."""
+        dirty = bool(health and (health.get("failed_shards")
+                                 or health.get("degraded")))
+        if not dirty:
+            self._breaker_failures = 0
+            self._breaker_open = False
+            return
+        self._breaker_shards.update(
+            s for key in ("failed_shards", "degraded")
+            for s in health.get(key, ()) if s >= 0)
+        self._breaker_failures += 1
+        if (not self._breaker_open
+                and self._breaker_failures >= self.breaker_threshold):
+            self._breaker_open = True
+            self._breaker_trips += 1
 
     def _execute(
         self,
@@ -311,12 +381,36 @@ class AdaptiveScheduler:
             q = np.concatenate([q, np.zeros((b_pad - b, q.shape[1]), q.dtype)])
         head = reqs[0]
         label = "fqsd-int8" if tier == "int8" else mode
-        batch = self._search(SearchRequest(
-            queries=q, k=head.k, metric=head.metric,
-            tier="int8" if tier == "int8" else "f32",
-            mode_hint="fqsd" if tier == "int8" else mode,
-            filter_mask=head.filter_mask,
-        ))
+        if self._breaker_open and self._probe_store():
+            # the probe read succeeded: the storage fault cleared — close
+            # the breaker and serve strict again
+            self._breaker_open = False
+            self._breaker_failures = 0
+        allow_partial = head.allow_partial or self._breaker_open
+
+        def dispatch(partial_ok: bool) -> SearchResult:
+            return self._search(SearchRequest(
+                queries=q, k=head.k, metric=head.metric,
+                tier="int8" if tier == "int8" else "f32",
+                mode_hint="fqsd" if tier == "int8" else mode,
+                filter_mask=head.filter_mask,
+                allow_partial=partial_ok, max_retries=head.max_retries,
+            ))
+
+        try:
+            batch = dispatch(allow_partial)
+        except FaultError as e:
+            # unrecoverable storage fault under strict semantics: count it
+            # toward the breaker; once open, retry this dispatch degraded
+            # (partial allowed) instead of failing the serve loop — below
+            # the threshold, stay loud.
+            self._breaker_note(
+                {"failed_shards": [getattr(e, "shard_id", -1)]})
+            if allow_partial or not self._breaker_open:
+                raise
+            batch = dispatch(True)
+        else:
+            self._breaker_note(batch.stats.get("health"))
         scores = np.asarray(batch.scores)[:b]  # forces execution (device sync)
         indices = np.asarray(batch.indices)[:b]
         dt_s = time.perf_counter() - t0
@@ -363,6 +457,12 @@ class AdaptiveScheduler:
             self._speculation["dispatches"] += 1
             for key in ("rows_speculated", "rows_topped_up", "rows_wasted"):
                 self._speculation[key] += int(spec.get(key, 0))
+        health = batch.stats.get("health")
+        if health is not None:
+            self._health_agg["retries"] += int(health.get("retries", 0))
+            for key in ("failed_shards", "degraded", "slow_shards"):
+                self._health_agg[key].update(health.get(key, ()))
+        partial = bool(batch.stats.get("partial", False))
         if self._last_mode is not None and label != self._last_mode:
             self._switches += 1
         self._last_mode = label
@@ -387,11 +487,31 @@ class AdaptiveScheduler:
                 certified=bool(cert[i]) if cert is not None else True,
                 kernel_stats=batch.kernel_stats,
                 stats={"latency_ms": lat_ms, "batched": len(reqs),
-                       "mode": label, "deadline_ms": r.deadline_ms},
+                       "mode": label, "deadline_ms": r.deadline_ms,
+                       "health": dict(health) if health is not None else {},
+                       "partial": partial},
                 rid=r.rid,
             ))
         self.served += len(reqs)
         return results, dt_s
+
+    def _shed_result(self, r: SearchRequest, clock_s: float) -> SearchResult:
+        """An expired request's answer: empty top-k (inf scores, -1 ids),
+        loudly flagged — never a late scan dressed up as service."""
+        k = r.k if r.k is not None else self.engine.k
+        lat_ms = (clock_s - r.arrival_s) * 1e3
+        return SearchResult(
+            topk=TopK(np.full(k, np.inf, np.float32),
+                      np.full(k, -1, np.int32)),
+            plan=None, tier="f32", certified=False,
+            stats={"latency_ms": lat_ms, "batched": 0, "mode": "shed",
+                   "shed": True, "deadline_ms": r.deadline_ms,
+                   "partial": False,
+                   "health": {"retries": 0, "failed_shards": [],
+                              "degraded": [], "slow_shards": [],
+                              "shed": True}},
+            rid=r.rid,
+        )
 
     # -------------------------------------------------------------- serving
     def serve(self, requests: Iterable[SearchRequest]) -> Iterator[SearchResult]:
@@ -400,7 +520,8 @@ class AdaptiveScheduler:
         The clock starts at the first arrival, advances by measured service
         time per dispatch, and jumps forward over idle gaps. Each iteration
         admits everything that has arrived, makes ONE mode decision
-        (per-request pins override it), and dispatches one batch of
+        (per-request pins override it), sheds requests whose deadline has
+        already expired (``shed_expired``), and dispatches one batch of
         option-compatible requests.
         """
         stream = iter(requests)
@@ -421,6 +542,23 @@ class AdaptiveScheduler:
             if not pending:
                 clock = nxt.arrival_s  # idle until the next arrival
                 continue
+            if self.shed_expired:
+                kept: deque[SearchRequest] = deque()
+                for r in pending:
+                    expired = (r.deadline_ms is not None
+                               and (clock - r.arrival_s) * 1e3 > r.deadline_ms)
+                    if expired:
+                        self.shed += 1
+                        self.deadline_misses += 1
+                        yield self._shed_result(r, clock)
+                    else:
+                        kept.append(r)
+                pending = kept
+                if not pending:
+                    if nxt is None:
+                        break  # everything left was shed
+                    clock = nxt.arrival_s
+                    continue
             mode = self.choose_mode(pending, clock)
             head = pending[0]
             if head.mode_hint != "auto":
@@ -467,6 +605,7 @@ class AdaptiveScheduler:
         out = {
             "served": self.served,
             "deadline_misses": self.deadline_misses,
+            "shed": self.shed,
             "policy": self.policy,
             "mode_switches": self._switches,
             "per_plan": per_plan,
@@ -474,6 +613,21 @@ class AdaptiveScheduler:
             # streamed-plan prefetcher counters (0 for resident serving)
             "transfers": self._transfers,
             "restarts": self._restarts,
+            # aggregated resilience accounting across every dispatch (the
+            # per-result stats["health"] blocks, merged) + breaker state
+            "health": {
+                "retries": int(self._health_agg["retries"]),
+                "failed_shards": sorted(self._health_agg["failed_shards"]),
+                "degraded": sorted(self._health_agg["degraded"]),
+                "slow_shards": sorted(self._health_agg["slow_shards"]),
+                "shed": self.shed,
+            },
+            "circuit_breaker": {
+                "open": self._breaker_open,
+                "trips": self._breaker_trips,
+                "probes": self._breaker_probes,
+                "consecutive_failures": self._breaker_failures,
+            },
         }
         if self.collection is not None:
             out["collection"] = self.collection

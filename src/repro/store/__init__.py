@@ -4,8 +4,10 @@
                     f32 + int8 tiers, online upsert/delete
     Manifest        durable JSON shard table (geometry, tiers, checksums)
 
-See README.md in this package for the manifest format and tier semantics.
+See README.md in this package for the manifest format, tier semantics,
+and the streamed-path failure semantics (retry / quarantine / partial).
 """
+from repro.faults import FaultError, ShardCorruptError, ShardReadError
 from repro.store.manifest import Manifest, ShardMeta, crc32_of
 from repro.store.store import (
     DELTA_ROWS_DEFAULT,
@@ -18,4 +20,5 @@ from repro.store.store import (
 __all__ = [
     "DatasetStore", "Manifest", "ShardMeta", "Int8Shard", "crc32_of",
     "F32_TIER", "INT8_TIER", "DELTA_ROWS_DEFAULT",
+    "FaultError", "ShardReadError", "ShardCorruptError",
 ]

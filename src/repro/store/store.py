@@ -47,6 +47,7 @@ import numpy as np
 from repro.core.partition import LANE, PaddedDataset, round_up
 from repro.core.planner import DatasetStoreMeta
 from repro.core.quantized import Int8Partition
+from repro.faults import ShardCorruptError
 from repro.store.manifest import Manifest, ShardMeta, crc32_of, crc32_of_arrays
 
 F32_TIER = "f32"
@@ -160,6 +161,13 @@ class DatasetStore:
         self._delta_full: list[tuple[np.ndarray, np.ndarray]] = []
         self._main_tomb = np.zeros(manifest.n_valid, dtype=bool)
         self._mutations = 0  # version counter; device views sync on change
+        #: optional per-store fault injector (repro.faults.FaultInjector);
+        #: when None the process-wide one (repro.faults.install) applies
+        self.fault_injector = None
+        #: re-check shard CRCs on every read_shard (full-shard streamed
+        #: reads only — see read_shard; costs one extra pass over the
+        #: shard's bytes per read, ~halving effective scan bandwidth)
+        self.verify_on_read = False
 
     # ------------------------------------------------------------- factories
     @classmethod
@@ -231,11 +239,17 @@ class DatasetStore:
 
     @classmethod
     def open(cls, directory: str, verify: bool = False,
-             delta_rows: int = DELTA_ROWS_DEFAULT) -> "DatasetStore":
+             delta_rows: int = DELTA_ROWS_DEFAULT,
+             verify_on_read: bool = False) -> "DatasetStore":
         """Reopen a written store; shard vectors stay on disk (np.memmap).
 
         ``verify=True`` recomputes every f32 checksum (reads all shards —
         use in tests and integrity audits, not on the serving path).
+        ``verify_on_read=True`` arms per-read CRC checking on the serving
+        path instead: every :meth:`read_shard` re-hashes the shard's bytes
+        against the manifest, turning silent mid-scan corruption into a
+        loud :class:`~repro.faults.ShardCorruptError` the resilient
+        streamed executors can retry or quarantine.
         """
         manifest = Manifest.load(directory)
         shards: list[_Shard] = []
@@ -251,6 +265,7 @@ class DatasetStore:
                 )
             shards.append(_Shard(vec, norms, m))
         store = cls(manifest, shards, directory=directory, delta_rows=delta_rows)
+        store.verify_on_read = bool(verify_on_read)
         if INT8_TIER in manifest.tiers:
             store._int8 = [cls._load_int8_shard(directory, m, verify)
                            for m in manifest.shards]
@@ -516,6 +531,81 @@ class DatasetStore:
             norms[:nv][dead] = np.inf
         return norms
 
+    def _active_injector(self):
+        if self.fault_injector is not None:
+            return self.fault_injector
+        from repro.faults import active
+
+        return active()
+
+    def read_shard(self, i: int, tier: str = F32_TIER):
+        """Read ONE main shard at `tier` — the unit of streamed resilience.
+
+        Returns the same partition :meth:`iter_shards` would yield at
+        position ``i`` (tombstones/validity folded in). This is where the
+        fault hooks live (``fault_injector.on_shard_read`` /
+        ``maybe_corrupt``) and where ``verify_on_read`` re-hashes the
+        shard's bytes against the manifest CRCs, raising
+        :class:`~repro.faults.ShardCorruptError` on mismatch — so a
+        mid-scan bit flip surfaces as a typed, retryable error instead of
+        a silently wrong top-k. Covers full-shard streamed reads (f32
+        vectors; int8 codes + RAM-resident meta); :meth:`gather_rows`
+        candidate reads are row-granular and not CRC'd (the manifest has
+        no per-row sums).
+        """
+        if not 0 <= i < self.n_shards:
+            raise IndexError(f"shard {i} out of range (n={self.n_shards})")
+        inj = self._active_injector()
+        if inj is not None:
+            inj.on_shard_read(i, tier)
+        s = self._shards[i]
+        if tier == F32_TIER:
+            vec = s.vectors
+            if inj is not None:
+                vec = inj.maybe_corrupt(vec, i, tier)
+            if self.verify_on_read:
+                want = s.meta.checksums.get(F32_TIER)
+                if want is not None and crc32_of(vec) != want:
+                    raise ShardCorruptError(
+                        f"CRC mismatch on f32 shard {i}: bytes changed "
+                        f"since the manifest was written", i, tier)
+            return PaddedDataset(vec, self._shard_norms(i),
+                                 s.meta.n_valid, s.meta.row_start)
+        if tier != INT8_TIER:
+            raise ValueError(
+                f"unknown tier {tier!r}; known: {F32_TIER}, {INT8_TIER}")
+        if self._int8 is None:
+            raise RuntimeError(
+                "int8 tier not materialized; call ensure_tier('int8')")
+        i8 = self._int8[i]
+        codes = i8.q
+        if inj is not None:
+            codes = inj.maybe_corrupt(codes, i, tier)
+        if self.verify_on_read:
+            want = s.meta.checksums.get(INT8_TIER)
+            if want is not None and crc32_of(codes) != want:
+                raise ShardCorruptError(
+                    f"CRC mismatch on int8 codes of shard {i}: bytes "
+                    f"changed since the manifest was written", i, tier)
+            want = s.meta.checksums.get(INT8_META)
+            if want is not None and crc32_of_arrays(
+                    *(getattr(i8, f) for f in _INT8_META_FIELDS)) != want:
+                raise ShardCorruptError(
+                    f"CRC mismatch on int8 meta of shard {i}: per-row "
+                    f"channels changed since the manifest was written",
+                    i, tier)
+        norms = np.asarray(i8.norms_sq)
+        start, nv = s.meta.row_start, s.meta.n_valid
+        dead = self._main_tomb[start: start + nv]
+        if dead.any():
+            norms = norms.copy()
+            norms[:nv][dead] = np.inf
+        # validity (padding + tombstones) folds onto the exact quantized
+        # norm — the one channel the scan step masks on
+        qnorm = np.where(np.isfinite(norms), i8.qnorm_sq,
+                         np.float32(np.inf)).astype(np.float32)
+        return Int8Partition(codes, i8.scales, i8.err, qnorm, nv, start)
+
     def delta_shards(self) -> list[PaddedDataset]:
         """Live appended rows as fixed-geometry padded shards (host arrays).
 
@@ -574,9 +664,8 @@ class DatasetStore:
         """
         if tier == F32_TIER:
             def gen():
-                for i, s in enumerate(self._shards):
-                    yield PaddedDataset(s.vectors, self._shard_norms(i),
-                                        s.meta.n_valid, s.meta.row_start)
+                for i in range(len(self._shards)):
+                    yield self.read_shard(i, F32_TIER)
                 yield from self.delta_shards()
 
             return gen()
@@ -588,20 +677,8 @@ class DatasetStore:
                 "int8 tier not materialized; call ensure_tier('int8')")
 
         def gen8():
-            for i, s in enumerate(self._shards):
-                i8 = self._int8[i]
-                norms = np.asarray(i8.norms_sq)
-                start, nv = s.meta.row_start, s.meta.n_valid
-                dead = self._main_tomb[start : start + nv]
-                if dead.any():
-                    norms = norms.copy()
-                    norms[:nv][dead] = np.inf
-                # validity (padding + tombstones) folds onto the exact
-                # quantized norm — the one channel the scan step masks on
-                qnorm = np.where(np.isfinite(norms), i8.qnorm_sq,
-                                 np.float32(np.inf)).astype(np.float32)
-                yield Int8Partition(i8.q, i8.scales, i8.err, qnorm,
-                                    nv, start)
+            for i in range(len(self._shards)):
+                yield self.read_shard(i, INT8_TIER)
 
         return gen8()
 
@@ -630,6 +707,9 @@ class DatasetStore:
         int8 scan tail. Concurrent *mutation* (upsert/delete) is NOT part
         of the contract; the engine serializes searches and mutations."""
         ids = np.asarray(ids, dtype=np.int64).reshape(-1)
+        inj = self._active_injector()
+        if inj is not None:
+            inj.on_gather(int(ids.shape[0]))
         out = np.zeros((ids.shape[0], self.padded_dim), dtype=np.float32)
         ok = (ids >= 0) & (ids < self.n_shards * self.rows_per_shard)
         if ok.any():

@@ -15,6 +15,14 @@ import pytest
 from repro.tuning import AutotuneCache, set_default_cache
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "chaos: seeded fault-injection soaks (CI runs them over a seed "
+        "matrix via -m chaos; CHAOS_SEED selects the fault plan seed)",
+    )
+
+
 @pytest.fixture(autouse=True)
 def _isolated_autotune_cache():
     set_default_cache(AutotuneCache(path=None))

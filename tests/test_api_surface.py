@@ -21,7 +21,8 @@ API_ALL = ("SearchRequest", "SearchResult", "Router")
 
 SEARCH_REQUEST_FIELDS = (
     "queries", "k", "metric", "tier", "mode_hint", "deadline_ms",
-    "filter_mask", "prefetch_depth", "spec_trigger", "rid", "arrival_s",
+    "filter_mask", "prefetch_depth", "spec_trigger", "allow_partial",
+    "max_retries", "rid", "arrival_s",
 )
 
 SEARCH_RESULT_FIELDS = (
@@ -52,6 +53,8 @@ def test_request_defaults_snapshot():
         (None, None, None, 0.0)
     # pipeline knobs default to None = "use the plan's tuned value"
     assert (r.prefetch_depth, r.spec_trigger) == (None, None)
+    # resilience defaults: strict (no partial results), engine retry budget
+    assert (r.allow_partial, r.max_retries) == (False, None)
 
 
 class TestShimDeprecations:

@@ -1,0 +1,329 @@
+"""Fault-injected resilience (ISSUE 8 tentpole): deterministic fault plans,
+bounded retry, shard quarantine with certified degradation, allow_partial
+semantics, deadline shedding, the serving circuit breaker, and the seeded
+chaos soak (zero crashes, bit-identical non-partial results, every injected
+error reconciled against the surfaced health stats)."""
+import os
+import time
+
+import numpy as np
+import pytest
+
+from repro.api import SearchRequest
+from repro.core import ExactKNN
+from repro.core.streaming import ResilientShardSource, _fresh_health
+from repro.faults import (
+    FaultError,
+    FaultInjector,
+    FaultPlan,
+    ShardReadError,
+    installed,
+)
+from repro.serving import AdaptiveScheduler
+from repro.store import DatasetStore
+
+RNG = np.random.default_rng(42)
+
+
+def _corpus(n=512, d=16):
+    return RNG.standard_normal((n, d)).astype(np.float32)
+
+
+def _streamed_engine(x, tmp_path, tiers=("f32", "int8"), verify_on_read=True,
+                     **eng_kw):
+    DatasetStore.from_array(x, rows_per_shard=128, directory=str(tmp_path),
+                            tiers=tiers)
+    store = DatasetStore.open(str(tmp_path), verify_on_read=verify_on_read)
+    kw = dict(k=5, device_budget_bytes=1, retry_backoff_s=0.0)
+    kw.update(eng_kw)
+    eng = ExactKNN(**kw).fit_store(store)
+    if "int8" in tiers:
+        eng.enable_int8()
+    return eng
+
+
+# --------------------------------------------------------------- fault plan
+class TestFaultPlan:
+    @pytest.mark.parametrize("kw", [
+        {"read_error_rate": 1.5},
+        {"corrupt_rate": -0.1},
+        {"slow_s": -1.0},
+        {"max_failures_per_op": -1},
+        {"fail_tier": "int4"},
+    ])
+    def test_rejects_bad_knobs(self, kw):
+        with pytest.raises(ValueError):
+            FaultPlan(**kw)
+
+    def test_injection_is_deterministic(self):
+        def run():
+            inj = FaultInjector(FaultPlan(seed=3, read_error_rate=0.5))
+            outcomes = []
+            for i in range(60):
+                try:
+                    inj.on_shard_read(i % 5, "f32")
+                    outcomes.append(0)
+                except ShardReadError:
+                    outcomes.append(1)
+            return outcomes, inj.counts()
+        a, ca = run()
+        b, cb = run()
+        assert a == b and ca == cb
+        assert 0 < sum(a) < 60  # the plan actually mixes faults and passes
+
+    def test_consecutive_failures_are_bounded(self):
+        """rate=1 still converges: max_failures_per_op consecutive fails,
+        then a forced success — the contract bounded retry relies on."""
+        inj = FaultInjector(FaultPlan(read_error_rate=1.0,
+                                      max_failures_per_op=2))
+        outcomes = []
+        for _ in range(9):
+            try:
+                inj.on_shard_read(0, "f32")
+                outcomes.append("ok")
+            except ShardReadError:
+                outcomes.append("fail")
+        assert outcomes == ["fail", "fail", "ok"] * 3
+
+    def test_fail_shards_are_persistent_and_tier_scoped(self):
+        inj = FaultInjector(FaultPlan(fail_shards=(1,), fail_tier="int8",
+                                      max_failures_per_op=0))
+        for _ in range(5):  # bounding never rescues a persistent failure
+            with pytest.raises(ShardReadError):
+                inj.on_shard_read(1, "int8")
+        inj.on_shard_read(1, "f32")  # other tier unaffected
+        inj.on_shard_read(0, "int8")  # other shard unaffected
+
+    def test_corruption_flips_one_byte_deterministically(self):
+        arr = np.zeros(64, np.float32)
+        out1 = FaultInjector(FaultPlan(seed=1, corrupt_rate=1.0,
+                                       max_failures_per_op=1)
+                             ).maybe_corrupt(arr, 0, "f32")
+        out2 = FaultInjector(FaultPlan(seed=1, corrupt_rate=1.0,
+                                       max_failures_per_op=1)
+                             ).maybe_corrupt(arr, 0, "f32")
+        np.testing.assert_array_equal(out1, out2)
+        assert (out1.view(np.uint8) != arr.view(np.uint8)).sum() == 1
+        assert np.all(arr == 0)  # the input array is never touched
+
+
+# ----------------------------------------------------------- retry/quarantine
+class TestRetryAndQuarantine:
+    def test_transient_read_errors_are_retried_to_success(self, tmp_path):
+        x = _corpus()
+        eng = _streamed_engine(x, tmp_path, tiers=("f32",))
+        q = x[:4] + np.float32(1e-3)
+        base = eng.search(SearchRequest(queries=q))
+        eng.store.fault_injector = FaultInjector(
+            FaultPlan(seed=2, read_error_rate=0.6, max_failures_per_op=2))
+        res = eng.search(SearchRequest(queries=q))
+        eng.store.fault_injector = None
+        np.testing.assert_array_equal(np.asarray(res.topk.indices),
+                                      np.asarray(base.topk.indices))
+        np.testing.assert_array_equal(np.asarray(res.topk.scores),
+                                      np.asarray(base.topk.scores))
+        assert res.stats["health"]["retries"] >= 1
+        assert not res.stats["partial"]
+
+    def test_dead_int8_shard_quarantines_to_f32_exactly(self, tmp_path):
+        """Persistent int8-shard failure: retry can't save it, so the scan
+        falls back to the shard's f32 rows — certified degradation, the
+        result stays bit-identical to the pristine int8 run."""
+        x = _corpus()
+        eng = _streamed_engine(x, tmp_path)
+        q = x[:4] + np.float32(1e-3)
+        base = eng.search(SearchRequest(queries=q, tier="int8"))
+        eng.store.fault_injector = FaultInjector(
+            FaultPlan(fail_shards=(1,), fail_tier="int8"))
+        res = eng.search(SearchRequest(queries=q, tier="int8"))
+        eng.store.fault_injector = None
+        np.testing.assert_array_equal(np.asarray(res.topk.scores),
+                                      np.asarray(base.topk.scores))
+        np.testing.assert_array_equal(np.asarray(res.topk.indices),
+                                      np.asarray(base.topk.indices))
+        assert res.stats["health"]["degraded"] == [1]
+        assert not res.stats["partial"]
+
+    def test_dead_f32_shard_raises_unless_allow_partial(self, tmp_path):
+        x = _corpus()
+        eng = _streamed_engine(x, tmp_path, tiers=("f32",), max_retries=1)
+        q = x[:4]
+        eng.store.fault_injector = FaultInjector(
+            FaultPlan(fail_shards=(2,), fail_tier="f32"))
+        try:
+            with pytest.raises(ShardReadError):
+                eng.search(SearchRequest(queries=q))  # strict default: loud
+            res = eng.search(SearchRequest(queries=q, allow_partial=True))
+        finally:
+            eng.store.fault_injector = None
+        assert res.stats["partial"] is True
+        assert res.stats["health"]["failed_shards"] == [2]
+        assert res.partial  # the SearchResult accessor agrees
+        idx = np.asarray(res.topk.indices)
+        assert not np.any((idx >= 256) & (idx < 384))  # dead shard's rows
+
+    def test_device_put_faults_are_retried(self, tmp_path):
+        x = _corpus(n=384)
+        eng = _streamed_engine(x, tmp_path, tiers=("f32",))
+        q = x[:4]
+        base = eng.search(SearchRequest(queries=q))
+        inj = FaultInjector(FaultPlan(seed=5, put_error_rate=0.7,
+                                      max_failures_per_op=2))
+        with installed(inj):  # the device_put hook is process-wide
+            res = eng.search(SearchRequest(queries=q))
+        assert inj.counts()["put"] >= 1
+        np.testing.assert_array_equal(np.asarray(res.topk.indices),
+                                      np.asarray(base.topk.indices))
+        assert res.stats["health"]["retries"] >= inj.counts()["put"]
+
+    def test_straggler_shards_are_flagged(self):
+        class Shard:
+            def __init__(self, i):
+                self.base_index = i
+
+        class SlowStore:
+            n_shards = 5
+
+            def read_shard(self, i, tier="f32"):
+                # normal reads take ~1 ms; shard 3 is a 50x straggler
+                time.sleep(0.05 if i == 3 else 0.001)
+                return Shard(i)
+
+            def delta_shards(self):
+                return []
+
+        health = _fresh_health()
+        src = ResilientShardSource(SlowStore(), "f32", health=health)
+        assert [p.base_index for p in src] == [0, 1, 2, 3, 4]
+        assert 3 in health["slow_shards"]
+
+
+# ------------------------------------------------------------------ shedding
+class TestDeadlineShedding:
+    def _engine(self):
+        x = _corpus(n=256)
+        return ExactKNN(k=3, n_partitions=2).fit(x), x
+
+    def test_expired_requests_are_shed(self):
+        eng, x = self._engine()
+        sched = AdaptiveScheduler(eng, policy="latency", fdsq_max_batch=4)
+        reqs = [SearchRequest(queries=x[i], rid=i, arrival_s=0.0,
+                              deadline_ms=1e-6) for i in range(8)]
+        results = list(sched.serve(iter(reqs)))
+        assert len(results) == 8  # every request is answered, some as shed
+        shed = [r for r in results if r.stats.get("shed")]
+        assert len(shed) == 4  # first dispatch runs; the rest have expired
+        for r in shed:
+            assert r.stats["mode"] == "shed"
+            assert r.stats["health"]["shed"] is True
+            assert np.all(np.asarray(r.topk.indices) == -1)
+            assert np.all(np.isinf(np.asarray(r.topk.scores)))
+        assert sched.shed == 4
+        st = sched.stats()
+        assert st["shed"] == 4 and st["health"]["shed"] == 4
+        assert st["deadline_misses"] == 8  # served-late + shed both count
+
+    def test_shedding_can_be_disabled(self):
+        eng, x = self._engine()
+        sched = AdaptiveScheduler(eng, policy="latency", fdsq_max_batch=4,
+                                  shed_expired=False)
+        reqs = [SearchRequest(queries=x[i], rid=i, arrival_s=0.0,
+                              deadline_ms=1e-6) for i in range(8)]
+        results = list(sched.serve(iter(reqs)))
+        assert len(results) == 8
+        assert not any(r.stats.get("shed") for r in results)
+        assert sched.shed == 0
+
+
+# ------------------------------------------------------------ circuit breaker
+class TestCircuitBreaker:
+    def test_opens_serves_degraded_and_recovers(self, tmp_path):
+        x = _corpus()
+        eng = _streamed_engine(x, tmp_path, tiers=("f32",), max_retries=0)
+        store = eng.store
+        store.fault_injector = FaultInjector(
+            FaultPlan(fail_shards=(0,), fail_tier="f32"))
+        sched = AdaptiveScheduler(eng, policy="latency", breaker_threshold=2)
+
+        def one(rid):
+            return list(sched.serve([SearchRequest(
+                queries=x[rid], rid=rid, arrival_s=0.0)]))
+
+        # below the threshold: strict semantics stay loud
+        with pytest.raises(FaultError):
+            one(0)
+        cb = sched.stats()["circuit_breaker"]
+        assert not cb["open"] and cb["consecutive_failures"] == 1
+        # threshold reached: the breaker trips and the dispatch is retried
+        # degraded instead of failing the serve loop
+        res = one(1)
+        assert len(res) == 1 and res[0].stats["partial"]
+        cb = sched.stats()["circuit_breaker"]
+        assert cb["open"] and cb["trips"] == 1
+        # still broken: the probe read fails, service stays degraded
+        res = one(2)
+        assert res[0].stats["partial"]
+        # disk heals: the next probe succeeds, breaker closes, strict again
+        store.fault_injector = None
+        res = one(3)
+        assert not res[0].stats["partial"]
+        cb = sched.stats()["circuit_breaker"]
+        assert not cb["open"] and cb["probes"] >= 2
+        assert sched.stats()["health"]["failed_shards"] == [0]
+
+
+# ------------------------------------------------------------------ chaos soak
+@pytest.mark.chaos
+def test_chaos_soak_zero_crashes_bit_identical(tmp_path):
+    """Acceptance: >= 200 streamed searches under a seeded mixture of read
+    errors, corruption, stragglers, device_put and gather faults — zero
+    crashes, every non-partial answer bit-identical to the fault-free
+    baseline, and every injected error event reconciled 1:1 against the
+    health stats that surfaced it (retries + failed speculations)."""
+    seed = int(os.environ.get("CHAOS_SEED", "0"))
+    x = _corpus()
+    # worst deterministic consecutive-failure chain per site interleaves
+    # read and corrupt faults (2 + 2), so a retry budget of 5 converges
+    eng = _streamed_engine(x, tmp_path, max_retries=5)
+    q = x[:8] + np.float32(1e-3)
+    base = {tier: eng.search(SearchRequest(queries=q, tier=tier))
+            for tier in ("f32", "int8")}
+    inj = FaultInjector(FaultPlan(
+        seed=seed, read_error_rate=0.08, corrupt_rate=0.05, slow_rate=0.02,
+        slow_s=0.001, put_error_rate=0.03, gather_error_rate=0.05,
+        max_failures_per_op=2,
+    ))
+    eng.store.fault_injector = inj
+    retries_total = spec_failed = 0
+    n = 200
+    try:
+        with installed(inj):
+            for i in range(n):
+                tier = "int8" if i % 2 else "f32"
+                res = eng.search(SearchRequest(
+                    queries=q, tier=tier,
+                    spec_trigger=0.5 if tier == "int8" else None))
+                assert not res.stats["partial"]
+                np.testing.assert_array_equal(
+                    np.asarray(res.topk.scores),
+                    np.asarray(base[tier].topk.scores),
+                    err_msg=f"seed={seed} search {i} ({tier}): scores")
+                np.testing.assert_array_equal(
+                    np.asarray(res.topk.indices),
+                    np.asarray(base[tier].topk.indices),
+                    err_msg=f"seed={seed} search {i} ({tier}): indices")
+                h = res.stats["health"]
+                retries_total += h["retries"]
+                spec_failed += res.stats.get("speculation", {}).get("failed", 0)
+    finally:
+        eng.store.fault_injector = None
+    counts = inj.counts()
+    errors = (counts["read"] + counts["corrupt"] + counts["put"]
+              + counts["gather"])
+    assert errors > 0, f"seed={seed}: the plan injected nothing"
+    # every injected error is visible: each failed read/CRC/put/gather
+    # attempt counts one retry, except a failed background speculation,
+    # which surfaces as speculation.failed instead
+    assert retries_total + spec_failed == errors, (
+        f"seed={seed}: {errors} injected errors vs "
+        f"{retries_total} retries + {spec_failed} failed speculations")

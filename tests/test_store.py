@@ -372,3 +372,80 @@ class TestOnlineMutation:
         with pytest.raises(ValueError, match="non-finite"):
             store.upsert(huge[0])
         assert store.n_live == 4 and store.n_delta == 0  # nothing half-applied
+
+
+# ------------------------------------------------------ mid-scan corruption
+class TestMidScanCorruption:
+    """ISSUE 8 satellite: bytes flipped AFTER DatasetStore.open — visible
+    through the already-open read-only memmaps via the page cache — must
+    never produce a silently wrong top-k. With CRC-on-read armed they
+    become quarantine (int8 shard falls back to its exact f32 rows), a
+    loud ShardCorruptError, or an allow_partial result flagged partial."""
+
+    def _open_streamed(self, data, tmp_path):
+        from repro.api import SearchRequest  # noqa: F401  (used by callers)
+
+        x, q = data
+        DatasetStore.from_array(x, rows_per_shard=1024,
+                                directory=str(tmp_path),
+                                tiers=("f32", "int8"))
+        store = DatasetStore.open(str(tmp_path), verify_on_read=True)
+        eng = ExactKNN(k=5, device_budget_bytes=1,
+                       retry_backoff_s=0.0).fit_store(store)
+        eng.enable_int8()
+        return eng, x, q
+
+    def test_int8_codes_corruption_quarantines_to_f32(self, data, tmp_path):
+        from repro.api import SearchRequest
+
+        eng, x, q = self._open_streamed(data, tmp_path)
+        baseline = eng.search(SearchRequest(queries=q, tier="int8"))
+        victim = tmp_path / "shard_00001.int8.bin"
+        raw = bytearray(victim.read_bytes())
+        raw[500] ^= 0xFF
+        victim.write_bytes(bytes(raw))
+        res = eng.search(SearchRequest(queries=q, tier="int8"))
+        # quarantine is certified degradation: the shard's f32 rows scanned
+        # exactly, so the answer stays bit-identical to the pristine run
+        np.testing.assert_array_equal(np.asarray(res.topk.scores),
+                                      np.asarray(baseline.topk.scores))
+        np.testing.assert_array_equal(np.asarray(res.topk.indices),
+                                      np.asarray(baseline.topk.indices))
+        assert res.stats["health"]["degraded"] == [1]
+        assert res.stats["health"]["retries"] >= 1
+        assert not res.stats["partial"]
+
+    def test_in_ram_int8_meta_corruption_quarantines(self, data, tmp_path):
+        from repro.api import SearchRequest
+
+        eng, x, q = self._open_streamed(data, tmp_path)
+        baseline = eng.search(SearchRequest(queries=q, tier="int8"))
+        scales = eng.store._int8[2].scales
+        scales.setflags(write=True)
+        scales[0] += np.float32(1.0)  # bit-rot in the RAM-resident meta
+        res = eng.search(SearchRequest(queries=q, tier="int8"))
+        np.testing.assert_array_equal(np.asarray(res.topk.scores),
+                                      np.asarray(baseline.topk.scores))
+        np.testing.assert_array_equal(np.asarray(res.topk.indices),
+                                      np.asarray(baseline.topk.indices))
+        assert 2 in res.stats["health"]["degraded"]
+
+    def test_f32_corruption_is_loud_or_flagged_partial(self, data, tmp_path):
+        from repro.api import SearchRequest
+        from repro.faults import ShardCorruptError
+
+        eng, x, q = self._open_streamed(data, tmp_path)
+        victim = tmp_path / "shard_00002.f32.bin"
+        raw = bytearray(victim.read_bytes())
+        raw[64] ^= 0xFF
+        victim.write_bytes(bytes(raw))
+        # strict default: the f32 tier has no lower tier to fall back to,
+        # so an unrecoverable shard must raise, never answer wrong
+        with pytest.raises(ShardCorruptError):
+            eng.search(SearchRequest(queries=q))
+        res = eng.search(SearchRequest(queries=q, allow_partial=True))
+        assert res.stats["partial"] is True
+        assert res.stats["health"]["failed_shards"] == [2]
+        # rows of the dead shard (2048..2999) cannot appear in the answer
+        idx = np.asarray(res.topk.indices)
+        assert not np.any(idx >= 2048)

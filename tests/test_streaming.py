@@ -52,6 +52,65 @@ def test_prefetch_to_device_alias():
     assert len(out) == 1
 
 
+class TestFillFaultContract:
+    """ISSUE 8 satellite: _fill attaches the shard index to raised errors,
+    undelivered items never count as transfers, and put failures retry."""
+
+    def test_source_error_carries_shard_index(self):
+        def gen():
+            yield np.zeros(2, np.float32)
+            yield np.zeros(2, np.float32)
+            raise OSError("torn read")
+
+        s = DoubleBufferedStream(gen(), depth=2)
+        with pytest.raises(OSError, match="torn read") as ei:
+            list(s)
+        assert ei.value.shard_index == 2
+        # nothing was delivered before the raise: transfers must say so
+        assert s.transfers == 0
+
+    def test_put_error_carries_shard_index(self):
+        def bad_put(x):
+            raise RuntimeError("device_put failed")
+
+        s = DoubleBufferedStream([np.zeros(2, np.float32)] * 3, depth=2,
+                                 put_fn=bad_put)
+        with pytest.raises(RuntimeError, match="device_put failed") as ei:
+            list(s)
+        assert ei.value.shard_index == 0
+        assert s.transfers == 0
+
+    def test_put_retry_recovers_and_counts_health(self):
+        calls = {"n": 0}
+
+        def flaky_put(x):
+            calls["n"] += 1
+            if calls["n"] == 1:
+                raise RuntimeError("transient transfer failure")
+            return x
+
+        health = {"retries": 0}
+        items = [np.full(2, i, np.float32) for i in range(3)]
+        s = DoubleBufferedStream(items, depth=2, put_fn=flaky_put,
+                                 put_retries=1, retry_backoff_s=0.0,
+                                 health=health)
+        assert [int(x[0]) for x in s] == [0, 1, 2]
+        assert health["retries"] == 1
+        assert s.transfers == 3  # the retried item was delivered exactly once
+
+    def test_put_retry_budget_exhausts_loudly(self):
+        def always_bad(x):
+            raise RuntimeError("dead link")
+
+        health = {"retries": 0}
+        s = DoubleBufferedStream([np.zeros(2, np.float32)], depth=2,
+                                 put_fn=always_bad, put_retries=2,
+                                 retry_backoff_s=0.0, health=health)
+        with pytest.raises(RuntimeError, match="dead link"):
+            list(s)
+        assert health["retries"] == 3  # every failed attempt is counted
+
+
 def test_store_streamed_engine_can_query_twice(tmp_path):
     """End-to-end regression: the out-of-core engine issues one streamed
     scan per query — the second query must not see an exhausted source."""
