@@ -35,7 +35,7 @@ def main(argv=None) -> int:
     ap.add_argument("--quick", action="store_true", help="reduced sizes")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: table2,table3,chipknn,"
-                         "roofline,store,kernels")
+                         "roofline,store,kernels,serve")
     ap.add_argument("--json-dir", default="artifacts/bench",
                     help="directory for BENCH_<section>.json outputs")
     ap.add_argument("--kernels-json", default="BENCH_kernels.json",
@@ -48,6 +48,7 @@ def main(argv=None) -> int:
         common,
         kernels_bench,
         roofline_table,
+        serve_bench,
         store_bench,
         table2,
         table3,
@@ -60,6 +61,7 @@ def main(argv=None) -> int:
         "roofline": roofline_table.run,
         "store": store_bench.run,
         "kernels": kernels_bench.run,
+        "serve": serve_bench.run,
     }
     chosen = (args.only.split(",") if args.only else list(sections))
     print("name,us_per_call,derived")

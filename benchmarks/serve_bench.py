@@ -1,0 +1,80 @@
+"""Network front-end benchmark: the closed-loop HTTP serving trajectory.
+
+ISSUE 9 puts `api.Router` on a socket (`repro.server`); this section
+prices the full network path — parse -> admission -> continuous batching
+-> `AdaptiveScheduler.dispatch_batch` -> JSON encode — the way a client
+sees it: a closed-loop load generator over persistent connections against
+an in-process server on an ephemeral port. ``serve/http_closed_loop``
+reports achieved qps, wire p50/p99 (queueing + service, stamped at parse
+time), and the shed/reject rates, all riding the same >20% trajectory
+gate as the kernel rows (p50_us is the gated metric). An
+``http_closed_loop_deadline`` companion row runs the same loop with a
+per-request deadline to track deadline attainment and the shed path's
+overhead.
+"""
+from __future__ import annotations
+
+import asyncio
+
+import numpy as np
+
+from benchmarks.common import emit
+
+
+def _bench(connections: int, duration_s: float, n: int, d: int,
+           deadline_ms: float | None):
+    from repro.api import Router
+    from repro.server.app import KnnServer
+    from repro.server.loadgen import closed_loop
+
+    rng = np.random.default_rng(0)
+    router = Router()
+    router.create("passages", rng.standard_normal((n, d)).astype(np.float32),
+                  k=10, n_partitions=4)
+
+    async def run():
+        async with KnnServer(router, port=0, max_inflight=1024) as srv:
+            host, port = srv.address
+            # warm the compile cache outside the measured window
+            await closed_loop(host, port, "passages", connections=2,
+                              duration_s=0.5, d=d, k=10)
+            return await closed_loop(
+                host, port, "passages", connections=connections,
+                duration_s=duration_s, d=d, k=10, deadline_ms=deadline_ms)
+
+    return asyncio.run(run())
+
+
+def run(quick: bool = False):
+    n = 4096 if quick else 20000
+    d = 32 if quick else 64
+    connections = 16 if quick else 64
+    duration_s = 2.0 if quick else 6.0
+
+    rep = _bench(connections, duration_s, n, d, deadline_ms=None)
+    p50_us = rep.percentile_ms(50) * 1e3
+    emit("serve/http_closed_loop", p50_us,
+         f"{rep.achieved_qps:.0f}qps x{connections}conn",
+         p50_us=p50_us,
+         p99_us=rep.percentile_ms(99) * 1e3,
+         qps=rep.achieved_qps,
+         connections=connections,
+         requests=rep.sent,
+         shed_rate=rep.shed_rate,
+         reject_rate=rep.reject_rate,
+         errors=rep.errors)
+
+    deadline_ms = 250.0 if quick else 100.0
+    rep = _bench(connections, duration_s / 2, n, d, deadline_ms=deadline_ms)
+    p50_us = rep.percentile_ms(50) * 1e3
+    attainment = rep.deadline_met / rep.ok if rep.ok else 0.0
+    emit("serve/http_closed_loop_deadline", p50_us,
+         f"{attainment:.2f}att@{deadline_ms:.0f}ms",
+         p50_us=p50_us,
+         p99_us=rep.percentile_ms(99) * 1e3,
+         qps=rep.achieved_qps,
+         deadline_ms=deadline_ms,
+         deadline_attainment=attainment,
+         shed_rate=rep.shed_rate,
+         reject_rate=rep.reject_rate,
+         errors=rep.errors)

@@ -12,10 +12,21 @@ bursty arrival stream (dense bursts alternating with a sparse trickle) of
 logical plan (fdsq / fqsd / fqsd-int8), the batch count, p50/p99 latency,
 queries/s, tier, and certified fraction — the paper's RQ3 trade-off
 surfaced as a runtime policy.
+
+With ``--listen HOST:PORT`` the same collection is served over the
+network instead of replayed: an asyncio HTTP/1.1 front end
+(`repro.server.KnnServer`) with per-tenant admission control and
+continuous batching. ``--max-inflight``, ``--tenant-qps``, and
+``--queue-timeout-ms`` bound the live queue (docs/serving.md):
+
+    PYTHONPATH=src python -m repro.launch.serve --mode knn \
+        --listen 127.0.0.1:8440 --collection passages \
+        --max-inflight 512 --tenant-qps 100 --queue-timeout-ms 2000
 """
 from __future__ import annotations
 
 import argparse
+import math
 import time
 
 import numpy as np
@@ -44,6 +55,36 @@ def _nonneg_int(text: str) -> int:
     return v
 
 
+def _positive_float(text: str) -> float:
+    """argparse type: finite float > 0 (rates, timeouts)."""
+    try:
+        v = float(text)
+    except ValueError:
+        raise argparse.ArgumentTypeError(f"expected a number, got {text!r}")
+    if not (math.isfinite(v) and v > 0):
+        raise argparse.ArgumentTypeError(
+            f"must be a finite number > 0, got {text!r}")
+    return v
+
+
+def _listen_addr(text: str) -> tuple[str, int]:
+    """argparse type: HOST:PORT (port in [0, 65535]; 0 = ephemeral),
+    rejected at parse time, not at bind time."""
+    host, sep, port_text = text.rpartition(":")
+    if not sep or not host:
+        raise argparse.ArgumentTypeError(
+            f"expected HOST:PORT, got {text!r}")
+    try:
+        port = int(port_text)
+    except ValueError:
+        raise argparse.ArgumentTypeError(
+            f"port must be an integer, got {port_text!r}")
+    if not 0 <= port <= 65535:
+        raise argparse.ArgumentTypeError(
+            f"port must be in [0, 65535], got {port}")
+    return host, port
+
+
 def _shard_fraction(text: str) -> float:
     """argparse type: speculation trigger in [0, 1] (1 = no speculation)."""
     try:
@@ -56,19 +97,19 @@ def _shard_fraction(text: str) -> float:
     return v
 
 
-def serve_knn(args):
+def _build_router(args):
+    """Build the Router + collection both the replay and the HTTP front
+    end serve (single construction path: --verify-on-open, int8, and every
+    engine knob behave identically in both modes)."""
     from repro.api import Router
-    from repro.data import query_stream, vector_dataset
-    from repro.serving import AdaptiveScheduler, bursty_requests
+    from repro.data import vector_dataset
     from repro.tuning import probe_pallas_capability
 
     # probe-once capability verdict: persisted in the per-device autotune
     # cache so every later plan() on this host refuses interpret-mode
     # Pallas executors (a ~100x slowdown) with a logged reason
     probe_pallas_capability()
-    policy = "throughput" if args.fqsd else args.policy
     x = vector_dataset(args.n, args.d, seed=0)
-    q = query_stream(x, args.queries, seed=1)
     router = Router()
     engine_kw = dict(k=args.k, n_partitions=args.partitions,
                      prefetch_depth=args.prefetch_depth,
@@ -95,6 +136,61 @@ def serve_knn(args):
         router.create(args.collection, x, **engine_kw)
     if args.int8_depth is not None:
         router.engine(args.collection).enable_int8()
+    return router, x
+
+
+def serve_http(args):
+    """--listen path: the network front end over the same collection."""
+    import asyncio
+
+    from repro.server import KnnServer
+
+    router, _ = _build_router(args)
+    policy = "throughput" if args.fqsd else args.policy
+    host, port = args.listen
+
+    async def run():
+        server = KnnServer(
+            router, host=host, port=port,
+            policy=policy,
+            fdsq_max_batch=args.fdsq_max_batch,
+            fqsd_min_depth=args.fqsd_min_depth,
+            int8_min_depth=args.int8_depth,
+            max_inflight=args.max_inflight,
+            tenant_qps=args.tenant_qps,
+            queue_timeout_ms=args.queue_timeout_ms,
+        )
+        async with server:
+            bound_host, bound_port = server.address
+            print(f"serving collection {args.collection!r} "
+                  f"({args.n} x {args.d}) on http://{bound_host}:{bound_port} "
+                  f"(policy={policy} max_inflight={args.max_inflight} "
+                  f"tenant_qps={args.tenant_qps} "
+                  f"queue_timeout_ms={args.queue_timeout_ms})")
+            print("endpoints: POST /v1/collections/"
+                  f"{args.collection}/{{search,upsert,delete}}  "
+                  "GET /healthz  GET /stats  WS /v1/stats/stream")
+            try:
+                await server.serve_forever()
+            except asyncio.CancelledError:
+                pass
+
+    try:
+        asyncio.run(run())
+    except KeyboardInterrupt:
+        print("shutdown requested, draining")
+
+
+def serve_knn(args):
+    from repro.data import query_stream
+    from repro.serving import AdaptiveScheduler, bursty_requests
+
+    if args.listen is not None:
+        serve_http(args)
+        return
+    policy = "throughput" if args.fqsd else args.policy
+    router, x = _build_router(args)
+    q = query_stream(x, args.queries, seed=1)
     sched = AdaptiveScheduler(
         policy=policy,
         fdsq_max_batch=args.fdsq_max_batch, fqsd_min_depth=args.fqsd_min_depth,
@@ -223,6 +319,24 @@ def main(argv=None):
                          "for streamed shard reads / candidate gathers / "
                          "device transfers; 0 disables retry. Default: the "
                          "engine's default (2)")
+    ap.add_argument("--listen", type=_listen_addr, default=None,
+                    metavar="HOST:PORT",
+                    help="serve the collection over HTTP instead of "
+                         "replaying a synthetic stream: asyncio front end "
+                         "with per-tenant admission control and continuous "
+                         "batching (port 0 = ephemeral). See docs/serving.md")
+    ap.add_argument("--max-inflight", type=_positive_int, default=512,
+                    help="server-wide bound on admitted-but-unanswered "
+                         "requests; arrivals past it get 429 + Retry-After "
+                         "(--listen only)")
+    ap.add_argument("--tenant-qps", type=_positive_float, default=None,
+                    help="per-tenant sustained request rate over a 1s "
+                         "sliding window; default: unlimited "
+                         "(--listen only)")
+    ap.add_argument("--queue-timeout-ms", type=_positive_float, default=None,
+                    help="bound on time a request may wait in the live "
+                         "queue before the server answers 503; default: "
+                         "wait for dispatch (--listen only)")
     ap.add_argument("--arch", default="minicpm-2b")
     args = ap.parse_args(argv)
     if args.mode == "knn":

@@ -1,0 +1,40 @@
+"""Async network front end: multi-tenant serving over :class:`repro.api.Router`.
+
+Stdlib-only (asyncio streams + a minimal HTTP/1.1 + WebSocket codec) — the
+runtime dependency set stays jax + numpy. The stack, top to bottom:
+
+- :mod:`repro.server.app` — :class:`KnnServer`: endpoints, routing, the
+  degradation ladder (4xx parse -> 429 admission -> 503 queue timeout ->
+  shed envelope -> circuit breaker).
+- :mod:`repro.server.admission` — per-tenant sliding-window rate limits,
+  inflight quotas, deadline-aware admission.
+- :mod:`repro.server.batching` — continuous (iteration-level) batching
+  feeding :class:`repro.serving.AdaptiveScheduler` on a worker thread.
+- :mod:`repro.server.protocol` — wire codec: HTTP parsing, JSON -> frozen
+  :class:`repro.api.types.SearchRequest` validation, WebSocket frames.
+- :mod:`repro.server.loadgen` — closed-/open-loop load generator and the
+  acceptance soak (``python -m repro.server.loadgen --selfhost``).
+"""
+from repro.server.admission import AdmissionController, Verdict
+from repro.server.app import KnnServer
+from repro.server.batching import ContinuousBatcher, ServerClosed
+from repro.server.protocol import (
+    BadRequest,
+    PayloadTooLarge,
+    ProtocolError,
+    encode_result,
+    parse_search_request,
+)
+
+__all__ = [
+    "AdmissionController",
+    "BadRequest",
+    "ContinuousBatcher",
+    "KnnServer",
+    "PayloadTooLarge",
+    "ProtocolError",
+    "ServerClosed",
+    "Verdict",
+    "encode_result",
+    "parse_search_request",
+]

@@ -196,6 +196,15 @@ class AdaptiveScheduler:
         self.served = 0
         self.deadline_misses = 0
         self.shed = 0
+        #: live backpressure gauge: what the queue feeding this scheduler
+        #: currently holds. The discrete-event loop maintains it itself;
+        #: a live front end (repro.server) calls :meth:`note_queue_depth`
+        #: on every enqueue/dequeue so admission control and the stats
+        #: stream read depth from the same place choose_* does.
+        self.queue_depth = 0
+        #: per-collection dispatch counter (one per `_execute` call) — with
+        #: `shed`, the backpressure counters the serving front end exports
+        self.dispatches = 0
         # cross-dispatch resilience accounting (mirrors per-result
         # stats["health"], aggregated) + the per-collection circuit breaker
         self._health_agg = {"retries": 0, "failed_shards": set(),
@@ -288,16 +297,25 @@ class AdaptiveScheduler:
         return "f32"
 
     @staticmethod
-    def _signature(r: SearchRequest) -> tuple:
+    def batch_signature(r: SearchRequest) -> tuple:
         """Batch-compatibility key: a dispatch never mixes requests whose
         options would plan differently (k, metric, tier/mode pins) or whose
-        filter masks differ (masks fold into the scanned norms)."""
+        filter masks differ (masks fold into the scanned norms). Public so
+        live front ends (``repro.server.batching``) group their queues by
+        exactly the compatibility rule the dispatch path enforces."""
         return (
             r.k, r.metric, r.tier,
             r.mode_hint if r.mode_hint != "auto" else None,
             id(r.filter_mask) if r.filter_mask is not None else None,
             r.allow_partial, r.max_retries,
         )
+
+    # internal alias, kept for subclasses that predate the public name
+    _signature = batch_signature
+
+    def note_queue_depth(self, depth: int) -> None:
+        """Record the feeding queue's current depth (live-serving gauge)."""
+        self.queue_depth = int(depth)
 
     # ------------------------------------------------------------ execution
     def _search(self, request: SearchRequest) -> SearchResult:
@@ -361,6 +379,7 @@ class AdaptiveScheduler:
         compile a fresh executable in the serving hot path, violating the
         no-reflashing property the scheduler exists to exploit.
         """
+        self.dispatches += 1
         t0 = time.perf_counter()
         rows = []
         for r in reqs:
@@ -513,6 +532,55 @@ class AdaptiveScheduler:
             rid=r.rid,
         )
 
+    def dispatch_batch(
+        self,
+        reqs: list[SearchRequest],
+        clock_s: float | None = None,
+    ) -> list[SearchResult]:
+        """One live dispatch — the continuous-batching entry point.
+
+        The discrete-event loop (:meth:`serve`) owns its own clock; a live
+        front end (``repro.server``) instead hands over one
+        option-compatible batch at a time with ``clock_s`` from its event
+        loop (same time base as the requests' ``arrival_s`` stamps, so
+        latency accounting covers queueing + service). Applies the same
+        ladder as ``serve``: shed already-expired requests
+        (``shed_expired``), one mode/tier decision for the survivors
+        (per-request pins win), one batched execution. Results come back
+        in request order; ``clock_s=None`` preserves the wall-clock
+        (service-time-only) latency semantics of :class:`RetrievalServer`.
+        """
+        out: dict[int, SearchResult] = {}
+        live: list[tuple[int, SearchRequest]] = []
+        for i, r in enumerate(reqs):
+            expired = (
+                self.shed_expired and clock_s is not None
+                and r.deadline_ms is not None
+                and (clock_s - r.arrival_s) * 1e3 > r.deadline_ms
+            )
+            if expired:
+                self.shed += 1
+                self.deadline_misses += 1
+                out[i] = self._shed_result(r, clock_s)
+            else:
+                live.append((i, r))
+        if live:
+            batch = [r for _, r in live]
+            mode = self.choose_mode(deque(batch),
+                                    clock_s if clock_s is not None else 0.0)
+            head = batch[0]
+            if head.mode_hint != "auto":
+                mode = head.mode_hint  # per-request pin beats policy
+            tier = head.tier
+            if tier == "auto":
+                tier = self.choose_tier(mode, len(batch))
+            if tier == "int8":
+                mode = "fqsd"
+            results, _ = self._execute(batch, mode, clock_s, tier=tier)
+            for (i, _), res in zip(live, results):
+                out[i] = res
+        return [out[i] for i in range(len(reqs))]
+
     # -------------------------------------------------------------- serving
     def serve(self, requests: Iterable[SearchRequest]) -> Iterator[SearchResult]:
         """Discrete-event loop over an arrival stream (sorted by arrival_s).
@@ -539,6 +607,7 @@ class AdaptiveScheduler:
                     )
                 pending.append(nxt)
                 nxt = next(stream, None)
+            self.note_queue_depth(len(pending))
             if not pending:
                 clock = nxt.arrival_s  # idle until the next arrival
                 continue
@@ -574,6 +643,7 @@ class AdaptiveScheduler:
             while (pending and len(reqs) < take
                    and self._signature(pending[0]) == sig):
                 reqs.append(pending.popleft())
+            self.note_queue_depth(len(pending))
             results, dt_s = self._execute(reqs, mode, clock, tier=tier)
             clock += dt_s
             yield from results
@@ -606,6 +676,10 @@ class AdaptiveScheduler:
             "served": self.served,
             "deadline_misses": self.deadline_misses,
             "shed": self.shed,
+            # live backpressure: feeding-queue depth (gauge) + dispatch
+            # count — what admission control and the stats stream read
+            "queue_depth": self.queue_depth,
+            "dispatches": self.dispatches,
             "policy": self.policy,
             "mode_switches": self._switches,
             "per_plan": per_plan,

@@ -1,0 +1,608 @@
+"""Wire-boundary tests for the async network front end (repro.server).
+
+Every test drives a real `KnnServer` bound to an ephemeral port over real
+sockets — the loadgen's persistent-connection client for well-formed
+traffic, raw `asyncio.open_connection` writes for the malformed cases the
+client cannot produce. No pytest-asyncio: each test is a sync function
+wrapping its scenario in ``asyncio.run``.
+
+The invariants under test are the ISSUE 9 acceptance set: malformed JSON
+-> 400, oversized body -> 413, unknown collection -> 404, expired deadline
+-> shed envelope over the wire, mid-connection disconnect and concurrent
+over-quota tenants -> typed rejections that never crash the server or
+leak an admission slot.
+"""
+from __future__ import annotations
+
+import asyncio
+import json
+import time
+
+import numpy as np
+import pytest
+
+from repro.api import Router
+from repro.server import (
+    AdmissionController,
+    KnnServer,
+    ServerClosed,
+    protocol,
+)
+from repro.server.loadgen import (
+    Connection,
+    LoadReport,
+    closed_loop,
+    stats_stream_probe,
+)
+
+
+def _router(n=256, d=16, k=5, names=("docs",)):
+    rng = np.random.default_rng(0)
+    router = Router()
+    for i, name in enumerate(names):
+        x = rng.standard_normal((n, d)).astype(np.float32)
+        router.create(name, x, k=k, n_partitions=2)
+    return router
+
+
+def _query(d=16, seed=1, **extra):
+    rng = np.random.default_rng(seed)
+    body = {"queries": rng.standard_normal(d).astype(np.float32).tolist()}
+    body.update(extra)
+    return body
+
+
+async def _client(server):
+    conn = Connection(*server.address, LoadReport(mode="test", duration_s=1))
+    return conn
+
+
+async def _raw_roundtrip(server, raw: bytes) -> tuple[int, bytes]:
+    """Write raw bytes, read one full response (status, body)."""
+    reader, writer = await asyncio.open_connection(*server.address)
+    writer.write(raw)
+    await writer.drain()
+    head = await reader.readuntil(b"\r\n\r\n")
+    status = int(head.split(b" ", 2)[1])
+    n = 0
+    for line in head.split(b"\r\n"):
+        if line.lower().startswith(b"content-length:"):
+            n = int(line.split(b":", 1)[1])
+    body = await reader.readexactly(n) if n else b""
+    writer.close()
+    try:
+        await writer.wait_closed()
+    except (ConnectionError, OSError):
+        pass
+    return status, body
+
+
+def _post(path: str, body: bytes, extra_headers: str = "") -> bytes:
+    return (f"POST {path} HTTP/1.1\r\nHost: t\r\n"
+            f"Content-Length: {len(body)}\r\n{extra_headers}\r\n"
+            ).encode() + body
+
+
+# --------------------------------------------------------------- round trip
+def test_search_roundtrip_is_exact_over_the_wire():
+    async def run():
+        router = _router()
+        async with KnnServer(router, port=0) as srv:
+            conn = await _client(srv)
+            body = _query(k=3, rid=7)
+            st, resp = await conn.request(
+                "POST", "/v1/collections/docs/search", body)
+            await conn.close()
+            assert st == 200
+            assert resp["rid"] == 7 and resp["shed"] is False
+            assert len(resp["indices"]) == 3 == len(resp["scores"])
+            # the network path returns the engine's exact answer
+            from repro.api.types import SearchRequest
+            direct = router.search("docs", SearchRequest(
+                queries=np.asarray(body["queries"], np.float32), k=3))
+            np.testing.assert_array_equal(
+                np.asarray(resp["indices"]), np.asarray(direct.topk[1])[0])
+    asyncio.run(run())
+
+
+def test_keepalive_serves_many_requests_per_connection():
+    async def run():
+        async with KnnServer(_router(), port=0) as srv:
+            conn = await _client(srv)
+            for i in range(5):
+                st, resp = await conn.request(
+                    "POST", "/v1/collections/docs/search",
+                    _query(seed=i, k=2, rid=i))
+                assert st == 200 and resp["rid"] == i
+            await conn.close()
+            assert srv.connections == 1  # one socket served all five
+    asyncio.run(run())
+
+
+# ---------------------------------------------------------- boundary: 4xx
+def test_malformed_json_is_400_and_connection_survives():
+    async def run():
+        async with KnnServer(_router(), port=0) as srv:
+            st, body = await _raw_roundtrip(
+                srv, _post("/v1/collections/docs/search", b"{not json"))
+            assert st == 400
+            assert b"error" in body
+            # server is still alive and serving
+            conn = await _client(srv)
+            st, _ = await conn.request(
+                "POST", "/v1/collections/docs/search", _query())
+            await conn.close()
+            assert st == 200
+    asyncio.run(run())
+
+
+def test_oversized_body_is_413_before_reading_it():
+    async def run():
+        async with KnnServer(_router(), port=0,
+                             max_body_bytes=1024) as srv:
+            blob = b"x" * 4096
+            st, body = await _raw_roundtrip(
+                srv, _post("/v1/collections/docs/search", blob))
+            assert st == 413
+            assert b"1024" in body  # names the limit
+    asyncio.run(run())
+
+
+def test_unknown_collection_is_404_with_known_names():
+    async def run():
+        async with KnnServer(_router(names=("docs", "imgs")), port=0) as srv:
+            conn = await _client(srv)
+            st, resp = await conn.request(
+                "POST", "/v1/collections/nope/search", _query())
+            await conn.close()
+            assert st == 404
+            assert resp["collections"] == ["docs", "imgs"]
+    asyncio.run(run())
+
+
+def test_validation_rejections_are_typed_400s():
+    async def run():
+        async with KnnServer(_router(), port=0) as srv:
+            conn = await _client(srv)
+            cases = [
+                _query(metric="hamming"),            # unknown metric
+                _query(frobnicate=1),                # unknown field
+                _query(deadline_ms=-5),              # negative deadline
+                {"queries": [float("nan")] * 16},    # non-finite query
+                {"queries": []},                     # empty query
+                {"queries": [[0.1] * 16] * 4},       # multi-row batch
+                _query(tenant=""),                   # empty tenant
+                _query(tier="int8", mode_hint="fdsq"),  # incompatible pair
+            ]
+            for body in cases:
+                st, resp = await conn.request(
+                    "POST", "/v1/collections/docs/search", body)
+                assert st == 400, (body, resp)
+                assert "error" in resp
+            # none of those crashed the connection or the server
+            st, _ = await conn.request(
+                "POST", "/v1/collections/docs/search", _query())
+            await conn.close()
+            assert st == 200
+    asyncio.run(run())
+
+
+def test_wrong_method_is_405():
+    async def run():
+        async with KnnServer(_router(), port=0) as srv:
+            st, _ = await _raw_roundtrip(
+                srv, b"GET /v1/collections/docs/search HTTP/1.1\r\n"
+                     b"Host: t\r\nContent-Length: 0\r\n\r\n")
+            assert st == 405
+    asyncio.run(run())
+
+
+# ------------------------------------------------------------ deadlines
+def test_expired_deadline_returns_shed_envelope_over_the_wire():
+    async def run():
+        async with KnnServer(_router(), port=0) as srv:
+            conn = await _client(srv)
+            # warm the compile cache so the timing below is about queueing
+            await conn.request("POST", "/v1/collections/docs/search",
+                               _query())
+            # a microscopic deadline is always expired by dispatch time.
+            # Reset the wait estimate so admission (whose deadline check
+            # would otherwise 429 it up front — the warmed EWMA already
+            # predicts the miss) admits it cold; the scheduler then sheds
+            # it at dispatch — the documented 200 + shed envelope
+            srv.batchers["docs"]._ewma_dispatch_s = None
+            st, resp = await conn.request(
+                "POST", "/v1/collections/docs/search",
+                _query(deadline_ms=1e-3, rid=42))
+            await conn.close()
+            assert st == 200
+            assert resp["shed"] is True and resp["rid"] == 42
+            assert resp["scores"] == [] and resp["indices"] == []
+            assert resp["certified"] is False
+            assert srv.schedulers["docs"].shed >= 1
+    asyncio.run(run())
+
+
+def test_unmeetable_deadline_is_rejected_at_admission_with_retry_after():
+    async def run():
+        async with KnnServer(_router(), port=0) as srv:
+            conn = await _client(srv)
+            await conn.request("POST", "/v1/collections/docs/search",
+                               _query())  # warm EWMA
+            batcher = srv.batchers["docs"]
+            assert batcher.predicted_wait_s() > 0  # EWMA warmed
+            # fake a deep backlog so predicted wait >> deadline
+            batcher._ewma_dispatch_s = 10.0
+            st, resp = await conn.request(
+                "POST", "/v1/collections/docs/search",
+                _query(deadline_ms=5.0))
+            await conn.close()
+            assert st == 429
+            assert resp["reason"] == "deadline"
+            assert resp["retry_after_ms"] > 0
+            assert srv.admission.rejected["deadline"] == 1
+            assert srv.admission.inflight == 0  # nothing leaked
+    asyncio.run(run())
+
+
+# -------------------------------------------------- disconnects and leaks
+def test_mid_connection_disconnect_leaks_nothing():
+    async def run():
+        async with KnnServer(_router(), port=0) as srv:
+            # hold the dispatch worker so the victim request is mid-queue
+            # when its client vanishes
+            sched = srv.schedulers["docs"]
+            real = sched.dispatch_batch
+
+            def slow(reqs, clock_s=None):
+                time.sleep(0.15)
+                return real(reqs, clock_s)
+
+            sched.dispatch_batch = slow
+            reader, writer = await asyncio.open_connection(*srv.address)
+            body = json.dumps(_query()).encode()
+            writer.write(_post("/v1/collections/docs/search", body))
+            await writer.drain()
+            await asyncio.sleep(0.05)      # request admitted, queued
+            assert srv.admission.inflight == 1
+            writer.close()                 # client walks away mid-flight
+            try:
+                await writer.wait_closed()
+            except (ConnectionError, OSError):
+                pass
+            # the handler finishes its dispatch, hits the closed socket,
+            # and releases the slot in its finally
+            for _ in range(100):
+                if srv.admission.inflight == 0 and srv.connections == 0:
+                    break
+                await asyncio.sleep(0.02)
+            assert srv.admission.inflight == 0
+            assert srv.connections == 0
+            # server still serves the next client
+            conn = await _client(srv)
+            st, _ = await conn.request(
+                "POST", "/v1/collections/docs/search", _query())
+            await conn.close()
+            assert st == 200
+    asyncio.run(run())
+
+
+def test_queue_timeout_is_503_and_releases_the_slot():
+    async def run():
+        router = _router()
+        async with KnnServer(router, port=0, queue_timeout_ms=40.0) as srv:
+            sched = srv.schedulers["docs"]
+            real = sched.dispatch_batch
+
+            def slow(reqs, clock_s=None):
+                time.sleep(0.2)  # well past the 40ms queue budget
+                return real(reqs, clock_s)
+
+            conn = await _client(srv)
+            await conn.request("POST", "/v1/collections/docs/search",
+                               _query())  # warm compile before slowing
+            sched.dispatch_batch = slow
+            t0 = time.perf_counter()
+            st, resp = await conn.request(
+                "POST", "/v1/collections/docs/search", _query())
+            dt_ms = (time.perf_counter() - t0) * 1e3
+            await conn.close()
+            assert st == 503
+            assert resp["reason"] == "queue_timeout"
+            assert dt_ms < 150, f"timeout answered late: {dt_ms:.0f}ms"
+            assert srv.admission.inflight == 0
+    asyncio.run(run())
+
+
+# ------------------------------------------------------------ multi-tenant
+def test_concurrent_tenants_exceeding_quota_get_429():
+    async def run():
+        async with KnnServer(_router(), port=0, tenant_qps=3.0) as srv:
+            # 8 concurrent requests per tenant against a 3 qps budget:
+            # each tenant lands ~3 admissions, the rest are typed 429s,
+            # and one tenant's storm never starves the other
+            async def tenant_storm(tenant):
+                conn = await _client(srv)
+                statuses = []
+                for i in range(8):
+                    st, resp = await conn.request(
+                        "POST", "/v1/collections/docs/search",
+                        _query(seed=i), headers={"X-Tenant": tenant})
+                    if st == 429:
+                        assert resp["reason"] == "rate_limit"
+                        assert resp["retry_after_ms"] > 0
+                    statuses.append(st)
+                await conn.close()
+                return statuses
+
+            a, b = await asyncio.gather(
+                tenant_storm("tenant-a"), tenant_storm("tenant-b"))
+            for statuses in (a, b):
+                assert statuses.count(200) >= 3   # the window's allowance
+                assert statuses.count(429) >= 1   # the excess, rejected
+                assert set(statuses) <= {200, 429}
+            st = srv.admission.stats()
+            assert st["inflight"] == 0
+            assert st["tenants"]["tenant-a"]["rejected"] >= 1
+            assert st["tenants"]["tenant-b"]["admitted"] >= 3
+    asyncio.run(run())
+
+
+def test_tenant_inflight_quota_rejects_second_concurrent_request():
+    async def run():
+        async with KnnServer(_router(), port=0,
+                             tenant_max_inflight=1) as srv:
+            sched = srv.schedulers["docs"]
+            real = sched.dispatch_batch
+            conn0 = await _client(srv)
+            await conn0.request("POST", "/v1/collections/docs/search",
+                                _query())  # warm compile
+
+            def slow(reqs, clock_s=None):
+                time.sleep(0.2)
+                return real(reqs, clock_s)
+
+            sched.dispatch_batch = slow
+
+            async def one(tenant, seed):
+                conn = await _client(srv)
+                st, resp = await conn.request(
+                    "POST", "/v1/collections/docs/search",
+                    _query(seed=seed), headers={"X-Tenant": tenant})
+                await conn.close()
+                return st, resp
+
+            first = asyncio.create_task(one("hog", 1))
+            await asyncio.sleep(0.05)  # first is admitted, inflight=1
+            st2, resp2 = await one("hog", 2)
+            st3, _ = await one("polite", 3)
+            st1, _ = await first
+            await conn0.close()
+            assert st1 == 200
+            assert st2 == 429 and resp2["reason"] == "quota"
+            assert st3 == 200  # other tenants unaffected
+            assert srv.admission.inflight == 0
+    asyncio.run(run())
+
+
+# --------------------------------------------------- batching under load
+def test_closed_loop_batches_across_connections():
+    async def run():
+        async with KnnServer(_router(n=512), port=0) as srv:
+            rep = await closed_loop(
+                *srv.address, "docs", connections=16, duration_s=1.5,
+                d=16, k=5)
+            assert rep.errors == 0 and rep.ok > 0
+            sched = srv.schedulers["docs"]
+            # continuous batching amortized dispatches: strictly fewer
+            # dispatches than requests served
+            assert sched.dispatches < sched.served
+            assert sched.stats()["queue_depth"] == 0  # drained
+    asyncio.run(run())
+
+
+# -------------------------------------------------------------- stats/WS
+def test_stats_and_healthz_report_live_counters():
+    async def run():
+        async with KnnServer(_router(), port=0) as srv:
+            conn = await _client(srv)
+            await conn.request("POST", "/v1/collections/docs/search",
+                               _query())
+            st, stats = await conn.request("GET", "/stats")
+            assert st == 200
+            assert stats["schedulers"]["docs"]["served"] == 1
+            assert stats["schedulers"]["docs"]["dispatches"] == 1
+            assert "queue_depth" in stats["schedulers"]["docs"]
+            assert stats["admission"]["admitted"] == 1
+            assert stats["router"]["collections"]["docs"]["requests"] == 1
+            st, health = await conn.request("GET", "/healthz")
+            await conn.close()
+            assert st == 200 and health["status"] == "ok"
+            assert health["collections"]["docs"]["circuit_breaker"][
+                "open"] is False
+    asyncio.run(run())
+
+
+def test_websocket_stats_stream_pushes_frames():
+    async def run():
+        async with KnnServer(_router(), port=0,
+                             stats_interval_ms=25.0) as srv:
+            conn = await _client(srv)
+
+            async def traffic():
+                for i in range(4):
+                    await conn.request(
+                        "POST", "/v1/collections/docs/search",
+                        _query(seed=i))
+                    await asyncio.sleep(0.03)
+
+            frames, _ = await asyncio.gather(
+                stats_stream_probe(*srv.address, 0.5, interval_ms=25.0),
+                traffic())
+            await conn.close()
+            assert len(frames) >= 3
+            assert frames[-1]["schedulers"]["docs"]["served"] >= 1
+            # counters are monotone across the stream
+            served = [f["schedulers"]["docs"]["served"] for f in frames]
+            assert served == sorted(served)
+    asyncio.run(run())
+
+
+# -------------------------------------------------------------- mutations
+def test_upsert_then_search_then_delete_over_the_wire():
+    async def run():
+        async with KnnServer(_router(), port=0) as srv:
+            conn = await _client(srv)
+            target = np.full(16, 2.5, np.float32)
+            st, resp = await conn.request(
+                "POST", "/v1/collections/docs/upsert",
+                {"vectors": [target.tolist()]})
+            assert st == 200 and resp["count"] == 1
+            [new_id] = resp["ids"]
+            st, resp = await conn.request(
+                "POST", "/v1/collections/docs/search",
+                {"queries": target.tolist(), "k": 1})
+            assert st == 200 and resp["indices"] == [new_id]
+            st, resp = await conn.request(
+                "POST", "/v1/collections/docs/delete", {"ids": [new_id]})
+            assert st == 200 and resp["deleted"] == 1
+            st, resp = await conn.request(
+                "POST", "/v1/collections/docs/search",
+                {"queries": target.tolist(), "k": 1})
+            assert st == 200 and resp["indices"] != [new_id]
+            # malformed mutation bodies are 400s, not crashes
+            st, _ = await conn.request(
+                "POST", "/v1/collections/docs/upsert", {"vectors": "zz"})
+            assert st == 400
+            st, _ = await conn.request(
+                "POST", "/v1/collections/docs/delete", {"ids": []})
+            assert st == 400
+            await conn.close()
+    asyncio.run(run())
+
+
+# ----------------------------------------------------------- unit: admission
+def test_admission_sliding_window_and_recovery():
+    t = [0.0]
+    adm = AdmissionController(tenant_qps=2.0, window_s=1.0,
+                              clock=lambda: t[0])
+    assert adm.try_admit("a").admitted
+    assert adm.try_admit("a").admitted
+    v = adm.try_admit("a")
+    assert not v.admitted and v.reason == "rate_limit" and v.status == 429
+    assert 0 < v.retry_after_s <= 1.0
+    t[0] = 1.01  # the window slid: budget restored
+    assert adm.try_admit("a").admitted
+    assert adm.try_admit("b").admitted  # other tenants were never charged
+
+
+def test_admission_deadline_and_capacity():
+    adm = AdmissionController(max_inflight=2)
+    assert adm.try_admit("a", deadline_ms=100.0,
+                         predicted_wait_s=0.01).admitted
+    v = adm.try_admit("a", deadline_ms=100.0, predicted_wait_s=0.5)
+    assert not v.admitted and v.reason == "deadline"
+    assert adm.try_admit("a").admitted  # no deadline: fills capacity
+    v = adm.try_admit("b")
+    assert not v.admitted and v.reason == "capacity"
+    adm.release("a")
+    assert adm.try_admit("b").admitted
+    with pytest.raises(ValueError):
+        AdmissionController(max_inflight=0)
+    with pytest.raises(ValueError):
+        AdmissionController(tenant_qps=-1.0)
+
+
+# ------------------------------------------------------------ unit: protocol
+def test_protocol_websocket_frame_roundtrip():
+    async def run():
+        payload = json.dumps({"x": 1}).encode()
+        for mask in (False, True):
+            frame = protocol.ws_frame(payload, mask=mask)
+            reader = asyncio.StreamReader()
+            reader.feed_data(frame)
+            reader.feed_eof()
+            opcode, out = await protocol.ws_read_frame(reader)
+            assert opcode == protocol.OP_TEXT and out == payload
+        # extended 16-bit length path
+        big = b"y" * 70000
+        reader = asyncio.StreamReader()
+        reader.feed_data(protocol.ws_frame(big, mask=True))
+        reader.feed_eof()
+        _, out = await protocol.ws_read_frame(reader)
+        assert out == big
+    asyncio.run(run())
+
+
+def test_server_rejects_bad_constructor_knobs():
+    router = _router()
+    with pytest.raises(ValueError):
+        KnnServer(router, queue_timeout_ms=0)
+    with pytest.raises(ValueError):
+        KnnServer(router, max_body_bytes=0)
+    with pytest.raises(ValueError):
+        KnnServer(router, stats_interval_ms=1)
+
+
+def test_submit_after_stop_raises_server_closed():
+    async def run():
+        srv = KnnServer(_router(), port=0)
+        await srv.start()
+        await srv.stop()
+        from repro.api.types import SearchRequest
+        with pytest.raises(ServerClosed):
+            srv.batchers["docs"].submit(
+                SearchRequest(queries=np.zeros(16, np.float32), k=1))
+    asyncio.run(run())
+
+
+# ----------------------------------------------------------------- chaos
+@pytest.mark.chaos
+def test_fault_injected_shard_degrades_over_the_wire(tmp_path):
+    """PR 8's quarantine machinery surfaces end-to-end: one persistently
+    failing int8 shard under a live server -> 200 answers whose
+    ``stats.health.degraded`` names the quarantined shard, bit-identical
+    to the healthy answer."""
+    from repro.core import ExactKNN
+    from repro.faults import FaultInjector, FaultPlan
+    from repro.store import DatasetStore
+
+    rng = np.random.default_rng(3)
+    x = rng.standard_normal((512, 16)).astype(np.float32)
+    DatasetStore.from_array(x, rows_per_shard=128, directory=str(tmp_path),
+                            tiers=("f32", "int8"))
+    store = DatasetStore.open(str(tmp_path), verify_on_read=True)
+    eng = ExactKNN(k=5, device_budget_bytes=1,
+                   retry_backoff_s=0.0).fit_store(store)
+    eng.enable_int8()
+    router = Router()
+    router.attach("vault", eng)
+
+    async def run():
+        async with KnnServer(router, port=0) as srv:
+            conn = await _client(srv)
+            q = rng.standard_normal(16).astype(np.float32).tolist()
+            body = {"queries": q, "k": 5, "tier": "int8",
+                    "allow_partial": True, "max_retries": 0}
+            st, healthy = await conn.request(
+                "POST", "/v1/collections/vault/search", body)
+            assert st == 200 and healthy["tier"] == "int8"
+            assert healthy["stats"]["health"]["degraded"] == []
+
+            eng.store.fault_injector = FaultInjector(
+                FaultPlan(fail_shards=(1,), fail_tier="int8"))
+            st, degraded = await conn.request(
+                "POST", "/v1/collections/vault/search", body)
+            assert st == 200
+            # quarantine fell back to the f32 mirror for shard 1: the
+            # response is still exact and says so on the wire
+            assert degraded["stats"]["health"]["degraded"] == [1]
+            assert degraded["indices"] == healthy["indices"]
+            assert degraded["scores"] == healthy["scores"]
+
+            # the health endpoint shows the quarantine too
+            st, health = await conn.request("GET", "/healthz")
+            await conn.close()
+            assert health["collections"]["vault"]["health"][
+                "degraded"] == [1]
+    asyncio.run(run())
