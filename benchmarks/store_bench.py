@@ -174,6 +174,45 @@ def run(quick: bool = False) -> None:
              n_shards=store.n_shards, n=n, d=d, m=m, k=K,
              **_phase_fields(dres))
 
+    # --- compaction churn (ISSUE 10): journaled mutations inflate the
+    # int8 scan (delta rows have no int8 representation, so they stream
+    # as f32), then a background-style fold + atomic generation swap
+    # re-quantizes them; this row tracks the bytes_ratio_vs_f32 on both
+    # sides of the swap so compaction's bandwidth payoff — and its cost
+    # (fold wall time per live row) — ride the trajectory gate
+    with tempfile.TemporaryDirectory() as tmp:
+        DatasetStore.from_array(x, rows_per_shard=n // 8, directory=tmp,
+                                tiers=("f32", "int8")).close()
+        store = DatasetStore.open(tmp)
+        ceng = ExactKNN(k=K, device_budget_bytes=1).fit_store(store)
+        ceng.enable_int8()
+        repeats = max(2, REPEATS // 2)
+        churn_rng = np.random.default_rng(1)
+        ceng.upsert(churn_rng.standard_normal(
+            (n // 16, d)).astype(np.float32))
+        ceng.delete(list(churn_rng.choice(n, size=n // 32, replace=False)))
+        _, _, _, f32_b, _, _ = _bench(ceng, q, "f32", repeats)
+        _, _, _, i8_b, _, _ = _bench(ceng, q, "int8", repeats)
+        ratio_before = i8_b / f32_b
+        cstats = store.compact()  # fold + re-quantize + pointer swap
+        p50, p99, qps, f32_a, cert, _ = _bench(ceng, q, "f32", repeats)
+        p50, p99, qps, i8_a, cert, res = _bench(ceng, q, "int8", repeats)
+        ratio_after = i8_a / f32_a
+        emit("store/compaction_churn", p50,
+             f"qps={qps:.0f};certified={cert:.3f};"
+             f"bytes={ratio_before:.2f}->{ratio_after:.2f}x_f32;"
+             f"fold={cstats['duration_s'] * 1e3:.0f}ms",
+             tier="int8", residency="mmap-streamed", qps=qps, p50_us=p50,
+             p99_us=p99, bytes_scanned=i8_a, certified_exact=cert,
+             bytes_ratio_vs_f32=ratio_after,
+             bytes_ratio_vs_f32_before_compaction=ratio_before,
+             compaction_s=cstats["duration_s"],
+             rows_reclaimed=cstats["rows_reclaimed"],
+             delta_folded=cstats["delta_folded"],
+             generation=cstats["generation"],
+             n_shards=store.n_shards, n=store.n_live, d=d, m=m, k=K,
+             **_phase_fields(res))
+
     # --- mesh: the same tier pair across a device group ------------------
     _mesh_section(quick)
 

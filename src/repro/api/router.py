@@ -198,6 +198,35 @@ class Router:
         """Tombstone rows of the named collection by global id."""
         self.engine(collection).delete(ids)
 
+    # ----------------------------------------------------------- compaction
+    def compact(self, collection: str, wait: bool = False) -> dict:
+        """Fold the named collection's delta rows + tombstones into a fresh
+        store generation (atomic pointer swap; searches never block — see
+        ``DatasetStore.compact``). ``wait=False`` triggers the store's
+        background compactor and returns immediately; ``wait=True`` runs it
+        synchronously (tests, admin tooling). Returns the collection's
+        compaction status after the trigger."""
+        store = self._compactable_store(collection)
+        if wait:
+            store.compact()
+        else:
+            store.compact_async()
+        return self.compaction_status(collection)
+
+    def compaction_status(self, collection: str) -> dict:
+        """Live compaction/generation state of the named collection."""
+        return self._compactable_store(collection).compaction_status()
+
+    def _compactable_store(self, collection: str):
+        eng = self.engine(collection)
+        store = getattr(eng, "store", None)
+        if store is None or not hasattr(store, "compact"):
+            raise ValueError(
+                f"collection {collection!r} is not backed by a compactable "
+                f"DatasetStore"
+            )
+        return store
+
     # --------------------------------------------------------------- stats
     def stats(self) -> dict:
         """Per-collection traffic + the shared executable cache counters.
@@ -206,6 +235,7 @@ class Router:
         out = {}
         for name in self.collections():
             s = self._stats[name]
+            store = getattr(self._engines[name], "store", None)
             out[name] = {
                 "requests": s["requests"],
                 "queries": s["queries"],
@@ -213,6 +243,9 @@ class Router:
                 "tiers": sorted(s["tiers"]),
                 "n_rows": int(self._engines[name].n),
                 "devices": s["devices"],
+                "compaction": (store.compaction_status()
+                               if hasattr(store, "compaction_status")
+                               else None),
             }
         return {"collections": out, "executable_cache": self.cache_info()}
 

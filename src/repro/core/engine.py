@@ -259,6 +259,7 @@ class ExactKNN:
         self._int8: QuantizedDataset | None = None  # device int8 view
         self._delta_dev: list[part.PaddedDataset] = []  # device delta shards
         self._seen_mutations = 0
+        self._seen_generation = 0  # store generation the device views mirror
         self._plans: list[ExecutionPlan] = []
         self._last_ctx: ExecContext | None = None
 
@@ -291,6 +292,7 @@ class ExactKNN:
         self._ds = None
         self._int8 = None
         self._delta_dev = []
+        self._seen_generation = getattr(store, "generation", 0)
         self._seen_mutations = store.mutation_count
         if self._resident:
             host = store.resident()  # tombstones already folded into norms
@@ -402,8 +404,21 @@ class ExactKNN:
         compiled executable are untouched. Mesh views resync the same way —
         tombstones ride the (re-sharded) norms channel, delta shards stay
         on the default device and merge through the host round-trip in
-        :meth:`_merge_delta`."""
-        if self._store is None or self._store.mutation_count == self._seen_mutations:
+        :meth:`_merge_delta`.
+
+        A store whose *generation* moved (a compaction folded the delta
+        into fresh shards) needs more than a norms refresh — the shard
+        count and row layout changed — so the device views are rebuilt
+        outright via :meth:`fit_store`. Geometry is preserved across
+        generations (rows_per_shard, padded_dim), so every compiled
+        executable still applies: the rebuild re-puts data, it compiles
+        nothing new."""
+        if self._store is None:
+            return
+        if getattr(self._store, "generation", 0) != self._seen_generation:
+            self.fit_store(self._store, resident=self._resident)
+            return
+        if self._store.mutation_count == self._seen_mutations:
             return
         self._seen_mutations = self._store.mutation_count
         if self._resident and self._ds is not None:
@@ -612,11 +627,15 @@ class ExactKNN:
     # ------------------------------------------------------------ request API
     @property
     def n_ids(self) -> int:
-        """Size of the global row-id space (main + delta rows, including
-        tombstoned ids — ids are never reused). ``SearchRequest.filter_mask``
-        must have exactly this length."""
+        """Size of the external row-id space (every id ever allocated,
+        including tombstoned and compacted-away ids — ids are never
+        reused). ``SearchRequest.filter_mask`` must have exactly this
+        length."""
         self._require_fit()
         if self._store is not None:
+            n = getattr(self._store, "n_ids", None)
+            if n is not None:
+                return int(n)
             return self._store.n_main + self._store.n_delta
         return int(self._ds.n_valid)
 
@@ -627,8 +646,10 @@ class ExactKNN:
         ds = self._ds
         if mask is None:
             return ds
-        n_main = self._store.n_main if self._store is not None else ds.n_valid
-        keep = _keep_rows(mask, 0, n_main, int(ds.vectors.shape[0]))
+        # ds.n_valid IS the fit-time main-row count of this resident view
+        # (not re-read from the store: a racing compaction must not skew
+        # the slice against the arrays already on device)
+        keep = _keep_rows(mask, 0, ds.n_valid, int(ds.vectors.shape[0]))
         norms = jnp.where(self._put_like(keep, ds.norms), ds.norms, jnp.inf)
         return part.PaddedDataset(ds.vectors, norms, ds.n_valid, ds.base_index)
 
@@ -645,8 +666,9 @@ class ExactKNN:
         q8 = self._int8
         if mask is None:
             return q8
-        keep = _keep_rows(mask, 0, self._store.n_main,
-                          int(q8.norms_sq.shape[0]))
+        n_main = (self._ds.n_valid if self._ds is not None
+                  else self._store.n_main)
+        keep = _keep_rows(mask, 0, n_main, int(q8.norms_sq.shape[0]))
         return q8._replace(
             norms_sq=jnp.where(self._put_like(keep, q8.norms_sq),
                                q8.norms_sq, jnp.inf)
@@ -695,6 +717,33 @@ class ExactKNN:
             if metric != "l2":
                 raise ValueError("int8 tier supports the l2 metric only")
         self._sync_mutations()
+        # pin the generation this search scans: a concurrent compaction may
+        # swap the store's live generation mid-flight, and the pin keeps the
+        # pinned shards (and the id tables that interpret their positions)
+        # alive until the search completes. The loop re-syncs until the
+        # pinned generation matches the device views — they must agree, or
+        # resident arrays and store positions would describe different rows.
+        view = None
+        if self._store is not None and hasattr(self._store, "snapshot"):
+            view = self._store.snapshot()
+            while view.generation != self._seen_generation:
+                view.release()
+                self._sync_mutations()
+                view = self._store.snapshot()
+        try:
+            return self._search_pinned(request, k, metric, tier, view)
+        finally:
+            if view is not None:
+                view.release()
+
+    def _search_pinned(self, request: SearchRequest, k: int, metric: str,
+                       tier: str, view) -> SearchResult:
+        """The body of :meth:`search`, run with `view` pinning the store
+        generation the engine's device views mirror (None when no store /
+        a store without generations is attached). Filter masks arrive in
+        EXTERNAL id space and are translated to the generation's positional
+        layout here; result indices are translated back at the end — in
+        between, everything is positional."""
         qv = self._pad_queries(request.queries)
         m = int(qv.shape[0])
         mode = request.mode_hint
@@ -710,20 +759,28 @@ class ExactKNN:
                     "filter_mask must cover the engine's global id space "
                     f"({self.n_ids} rows), got {mask.shape[0]}"
                 )
+            if view is not None:
+                mask = view.positional_mask(mask)
         max_retries = (self.max_retries if request.max_retries is None
                        else int(request.max_retries))
         allow_partial = bool(request.allow_partial)
         t0 = time.perf_counter()
+        # every read below goes through the pinned view when one exists, so
+        # a mid-search generation swap cannot mix shards of two epochs
+        src_store = view if view is not None else self._store
+        meta = (view.meta(device_resident=self._resident, tier=tier,
+                          sharded=self.mesh is not None)
+                if view is not None else self.dataset_meta(tier=tier))
         if not self._resident:
             # tier="int8" survives planning here: the out-of-core scan
             # streams 1 B/element codes and rescores candidate rows only
             p = plan_fn(
-                qv.shape, self.dataset_meta(tier=tier), self.config(),
+                qv.shape, meta, self.config(),
                 "fqsd-streamed",
-                stream_rows=self._store.rows_per_shard, k=k, metric=metric,
+                stream_rows=src_store.rows_per_shard, k=k, metric=metric,
             )
-            source = (self._store if mask is None
-                      else _MaskedShardSource(self._store, mask))
+            source = (src_store if mask is None
+                      else _MaskedShardSource(src_store, mask))
             # pipeline-knob precedence: request pin > engine pin > tuned
             # plan > engine default (the executor resolves a None trigger
             # against plan.spec_trigger, then DEFAULT_SPEC_TRIGGER)
@@ -742,7 +799,7 @@ class ExactKNN:
             # streamed scans fold delta shards (mask applied) in-pass
         else:
             p = plan_fn(
-                (m, self._padded_dim()), self.dataset_meta(tier=tier),
+                (m, self._padded_dim()), meta,
                 self.config(), mode, k=k, metric=metric,
             )
             if p.executor == "fdsq-sharded-int8":
@@ -750,8 +807,8 @@ class ExactKNN:
                 # backing store for the candidate-only f32 rescore (masked
                 # view when the request filters — gather/delta/fallback all
                 # see the same exclusions)
-                src = (self._store if mask is None
-                       else _MaskedShardSource(self._store, mask))
+                src = (src_store if mask is None
+                       else _MaskedShardSource(src_store, mask))
                 dataset = MeshTiered(self._masked_int8(mask), src)
             elif p.tier == "int8":
                 dataset = TieredResident(self._masked_resident(mask),
@@ -762,6 +819,12 @@ class ExactKNN:
                             allow_partial=allow_partial)
             if not self._last_ctx.delta_folded:
                 out = self._merge_delta(out, qv, k=k, metric=metric, mask=mask)
+        if view is not None and not view.identity:
+            # positions within a compacted generation are internal — hand
+            # the caller back the stable external ids (a pure relabeling of
+            # the indices channel; scores and ordering are untouched)
+            idx = np.asarray(jax.device_get(out.indices))
+            out = TopK(out.scores, jnp.asarray(view.external_ids(idx)))
         dispatch_ms = (time.perf_counter() - t0) * 1e3
         ctx = self._last_ctx
         cert = ctx.certificate if (ctx is not None and p.tier == "int8") else None

@@ -28,11 +28,28 @@ The injector is either installed per store (``store.fault_injector =
 inj``) or process-wide (`install` / the `installed` context manager —
 this is what reaches the `device_put_partition` hook, which has no store
 in scope).
+
+Crash-point injection (durability faults)
+    Beyond read-path faults, a plan can arm exactly one *crash point*: a
+    named site in the store's write paths (journal append, compactor —
+    see :data:`CRASH_SITES`) at which the k-th visit dies. Two modes:
+
+    * ``crash_mode="exit"`` — the process hard-exits via ``os._exit``
+      (no Python cleanup, no buffer flush: what a power cut / SIGKILL
+      leaves behind). Used by the subprocess kill-and-reopen matrix.
+    * ``crash_mode="raise"`` — raises :class:`InjectedCrash` (a
+      ``BaseException``, so ordinary ``except Exception`` recovery code
+      cannot accidentally absorb it). Used for in-process reopen tests.
+
+    The ``*.torn`` journal site additionally truncates the record being
+    written to ``torn_fraction`` of its bytes before dying, so replay
+    must prove it discards a torn tail.
 """
 from __future__ import annotations
 
 import contextlib
 import dataclasses
+import os
 import threading
 import time
 from collections import Counter
@@ -43,8 +60,11 @@ __all__ = [
     "FaultError",
     "ShardReadError",
     "ShardCorruptError",
+    "InjectedCrash",
     "FaultPlan",
     "FaultInjector",
+    "CRASH_SITES",
+    "CRASH_EXIT_CODE",
     "install",
     "uninstall",
     "active",
@@ -69,8 +89,47 @@ class ShardCorruptError(FaultError):
     """A shard's bytes were read but failed their CRC32 check."""
 
 
+class InjectedCrash(BaseException):
+    """An in-process simulated crash (``crash_mode="raise"``).
+
+    Deliberately a ``BaseException``: recovery machinery written as
+    ``except Exception`` must not be able to absorb a simulated process
+    death — only the test harness catches this, then reopens the store
+    exactly as a fresh process would.
+    """
+
+    def __init__(self, site: str):
+        super().__init__(f"injected crash at {site}")
+        self.site = site
+
+
+#: Exit status the hard crash mode dies with (``os._exit``); the
+#: subprocess kill-and-reopen matrix asserts on it to distinguish an
+#: injected crash from an accidental one.
+CRASH_EXIT_CODE = 43
+
+#: Every named crash site in the store's write paths, in protocol order.
+#: Journal sites fire inside ``store.journal.Journal.append`` (one durable
+#: mutation); compactor sites fire inside ``DatasetStore.compact`` (one
+#: generation build + atomic pointer swap). The kill-and-reopen matrix
+#: iterates this tuple — adding a write-path site without listing it here
+#: leaves it untested, so keep them in sync.
+CRASH_SITES = (
+    "journal.append.begin",        # nothing written -> mutation absent
+    "journal.append.torn",         # partial record bytes -> tail discarded
+    "journal.append.after_write",  # full bytes, fsync pending
+    "journal.append.after_fsync",  # durable, ack never returned
+    "compact.begin",               # nothing built -> old generation serves
+    "compact.after_shards",        # new shards on disk, no manifest
+    "compact.after_manifest",      # new manifest, pointer still old
+    "compact.before_current",      # tail journal written, pointer still old
+    "compact.after_current",       # pointer swapped, old gen not yet GC'd
+    "compact.after_gc",            # fully complete
+)
+
 _TIER_CODES = {"f32": 0, "int8": 1, "int8_meta": 2, "": 3}
-_OP_CODES = {"read": 0, "corrupt": 1, "slow": 2, "put": 3, "gather": 4}
+_OP_CODES = {"read": 0, "corrupt": 1, "slow": 2, "put": 3, "gather": 4,
+             "crash": 5}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -93,6 +152,10 @@ class FaultPlan:
     fail_shards: tuple = ()        # persistent: these shards always fail
     fail_tier: str | None = None   # restrict fail_shards to one tier
     max_failures_per_op: int = 2   # consecutive transient failures cap
+    crash_site: str = ""           # "" = no crash point armed
+    crash_occurrence: int = 1      # die on the k-th visit of crash_site
+    crash_mode: str = "raise"      # "raise" (InjectedCrash) | "exit" (os._exit)
+    torn_fraction: float = 0.5     # bytes written before a *.torn crash
 
     def __post_init__(self):
         for f in ("read_error_rate", "corrupt_rate", "slow_rate",
@@ -108,6 +171,19 @@ class FaultPlan:
         if self.fail_tier is not None and self.fail_tier not in ("f32", "int8"):
             raise ValueError(f"fail_tier must be 'f32'|'int8'|None, got "
                              f"{self.fail_tier!r}")
+        if self.crash_site and self.crash_site not in CRASH_SITES:
+            raise ValueError(
+                f"unknown crash_site {self.crash_site!r}; known: "
+                + ", ".join(CRASH_SITES))
+        if self.crash_occurrence < 1:
+            raise ValueError("crash_occurrence must be >= 1, got "
+                             f"{self.crash_occurrence!r}")
+        if self.crash_mode not in ("raise", "exit"):
+            raise ValueError("crash_mode must be 'raise'|'exit', got "
+                             f"{self.crash_mode!r}")
+        if not 0.0 < float(self.torn_fraction) < 1.0:
+            raise ValueError("torn_fraction must be in (0, 1), got "
+                             f"{self.torn_fraction!r}")
 
 
 class FaultInjector:
@@ -204,6 +280,42 @@ class FaultInjector:
             self._log("gather", -1, "f32")
             raise ShardReadError(
                 f"injected gather failure ({n_ids} candidate rows)")
+
+    # ------------------------------------------------------- crash points
+    def _site_armed(self, site: str) -> bool:
+        """True iff this visit of `site` is the one the plan kills.
+
+        Each site keeps its own visit counter, so ``crash_occurrence=k``
+        deterministically targets the k-th durable write through that
+        site no matter what other sites fired in between."""
+        if site != self.plan.crash_site:
+            return False
+        with self._lock:
+            self._calls[("crash", site)] += 1
+            return self._calls[("crash", site)] == self.plan.crash_occurrence
+
+    def crash_now(self, site: str) -> None:
+        """Unconditionally die at `site` (mode per plan). Write-path code
+        calls this after :meth:`torn_write_armed` said to tear a write."""
+        self._log("crash", -1, site)
+        if self.plan.crash_mode == "exit":
+            os._exit(CRASH_EXIT_CODE)  # no flush, no atexit: a real crash
+        raise InjectedCrash(site)
+
+    def crash_point(self, site: str) -> None:
+        """Ordered crash hook for the store's write paths: dies iff the
+        plan armed this `site` and this is its k-th visit."""
+        if self._site_armed(site):
+            self.crash_now(site)
+
+    def torn_write_armed(self, site: str) -> float | None:
+        """Arm a torn write: returns the fraction of the record's bytes the
+        caller must write before calling :meth:`crash_now`, or None to
+        write normally. Torn sites model a crash *mid*-write — the bytes
+        on disk are a prefix of a valid record, which replay must discard."""
+        if self._site_armed(site):
+            return float(self.plan.torn_fraction)
+        return None
 
     # ------------------------------------------------------------- reporting
     def counts(self) -> dict:

@@ -115,10 +115,12 @@ def _build_router(args):
                      prefetch_depth=args.prefetch_depth,
                      spec_trigger=args.spec_trigger,
                      max_retries=args.max_retries)
-    if args.verify_on_open:
+    if args.verify_on_open or args.compact_min_pending is not None:
         # write the corpus through the disk store and reopen it verified:
         # full CRC audit at open, plus CRC-on-read armed on every streamed
-        # shard for the life of the server
+        # shard for the life of the server. A disk-backed store is also
+        # what journals mutations and compacts, so --compact-min-pending
+        # implies this path.
         import atexit
         import shutil
         import tempfile
@@ -130,7 +132,13 @@ def _build_router(args):
         # the store's memmaps stay open for the life of the server
         atexit.register(shutil.rmtree, tmp, ignore_errors=True)
         DatasetStore.from_array(x, directory=tmp, tiers=tiers)
-        store = DatasetStore.open(tmp, verify=True, verify_on_read=True)
+        store = DatasetStore.open(tmp, verify=True,
+                                  verify_on_read=args.verify_on_open)
+        if args.compact_min_pending is not None:
+            # background compactor: fold delta + tombstones into a fresh
+            # generation once this many rows are pending (atomic swap;
+            # in-flight searches keep their pinned generation)
+            store.auto_compact_pending = args.compact_min_pending
         router.create(args.collection, store=store, **engine_kw)
     else:
         router.create(args.collection, x, **engine_kw)
@@ -168,7 +176,8 @@ def serve_http(args):
                   f"tenant_qps={args.tenant_qps} "
                   f"queue_timeout_ms={args.queue_timeout_ms})")
             print("endpoints: POST /v1/collections/"
-                  f"{args.collection}/{{search,upsert,delete}}  "
+                  f"{args.collection}/{{search,upsert,delete,compact}}  "
+                  f"GET /v1/collections/{args.collection}/compact  "
                   "GET /healthz  GET /stats  WS /v1/stats/stream")
             try:
                 await server.serve_forever()
@@ -314,6 +323,14 @@ def main(argv=None):
                          "that stays unreadable after retries + quarantine "
                          "is skipped and the result is flagged partial "
                          "(default: strict — such a shard raises)")
+    ap.add_argument("--compact-min-pending", type=_positive_int, default=None,
+                    help="background-compact the collection's store once "
+                         "this many rows are pending (delta rows + "
+                         "tombstoned rows): folds them into a fresh shard "
+                         "generation and swaps it in atomically without "
+                         "blocking searches. Implies a disk-backed store "
+                         "(like --verify-on-open). Default: compaction only "
+                         "via the POST .../compact endpoint")
     ap.add_argument("--max-retries", type=_nonneg_int, default=None,
                     help="bounded retry budget (>= 0, exponential backoff) "
                          "for streamed shard reads / candidate gathers / "

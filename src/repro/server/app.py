@@ -5,6 +5,8 @@ Endpoints (HTTP/1.1, persistent connections, JSON bodies):
     POST /v1/collections/<name>/search    one SearchRequest -> one result
     POST /v1/collections/<name>/upsert    {"vectors": [[...], ...]} -> ids
     POST /v1/collections/<name>/delete    {"ids": [...]} -> count
+    POST /v1/collections/<name>/compact   fold delta+tombstones; {"wait": true}
+    GET  /v1/collections/<name>/compact   compaction status (generation, ...)
     GET  /healthz                         liveness + per-collection health
     GET  /stats                           schedulers + admission + router
     GET  /v1/stats/stream                 WebSocket: pushed stats frames
@@ -237,6 +239,9 @@ class KnnServer:
                 _require_post(req)
                 await self._delete(name, req, writer)
                 return False
+            if action == "compact":
+                await self._compact(name, req, writer)
+                return False
         raise _not_found(path)
 
     async def _respond(self, writer, status, payload, headers=None) -> None:
@@ -357,6 +362,39 @@ class KnnServer:
         except (ValueError, TypeError, KeyError, IndexError) as e:
             raise protocol.BadRequest(str(e)) from None
         await self._respond(writer, 200, {"deleted": int(ids.size)})
+
+    # ------------------------------------------------------------- compaction
+    async def _compact(self, name: str, req: protocol.HttpRequest,
+                       writer: asyncio.StreamWriter) -> None:
+        """POST triggers compaction of the collection's store; GET reads its
+        status. The default trigger is asynchronous (the store's own
+        background compactor thread — searches keep streaming their pinned
+        generation, so the endpoint returns immediately with the live
+        status); ``{"wait": true}`` runs it to completion on the dispatch
+        worker (admin tooling, tests) so the response reflects the swap."""
+        if req.method == "GET":
+            await self._respond(writer, 200,
+                                self.router.compaction_status(name))
+            return
+        _require_post(req)
+        payload = req.json() if req.body else {}
+        if not isinstance(payload, dict):
+            raise protocol.BadRequest(
+                'compact body must be a JSON object, e.g. {} or '
+                '{"wait": true}')
+        wait = bool(payload.get("wait", False))
+        loop = asyncio.get_running_loop()
+        try:
+            if wait:
+                # share the dispatch worker: the drain-and-swap then
+                # serializes with mutations exactly like upsert/delete
+                status = await loop.run_in_executor(
+                    self._executor, self.router.compact, name, True)
+            else:
+                status = self.router.compact(name, False)
+        except (ValueError, RuntimeError) as e:
+            raise protocol.BadRequest(str(e)) from None
+        await self._respond(writer, 200, status)
 
     # ----------------------------------------------------------------- stats
     def _healthz(self) -> dict:

@@ -648,6 +648,16 @@ class AdaptiveScheduler:
             clock += dt_s
             yield from results
 
+    def _compaction_health(self) -> dict | None:
+        """Compaction/generation status of the served collection's store,
+        or None when there is no compactable DatasetStore behind it."""
+        if self.router is None or self.collection is None:
+            return None
+        try:
+            return self.router.compaction_status(self.collection)
+        except (KeyError, ValueError):
+            return None
+
     # ---------------------------------------------------------------- stats
     def stats(self) -> dict:
         """Uniform per-plan accounting: every served dispatch label reports
@@ -695,6 +705,10 @@ class AdaptiveScheduler:
                 "degraded": sorted(self._health_agg["degraded"]),
                 "slow_shards": sorted(self._health_agg["slow_shards"]),
                 "shed": self.shed,
+                # store lifecycle: generation + compactor state of the
+                # served collection (None when the engine is array-backed
+                # or the scheduler runs without a Router)
+                "compaction": self._compaction_health(),
             },
             "circuit_breaker": {
                 "open": self._breaker_open,

@@ -1,24 +1,44 @@
 """repro.store — tiered dataset storage behind one interface.
 
     DatasetStore    manifest-backed shards (in-memory or np.memmap),
-                    f32 + int8 tiers, online upsert/delete
-    Manifest        durable JSON shard table (geometry, tiers, checksums)
+                    f32 + int8 tiers, online upsert/delete, journaled
+                    mutations + background compaction (crash-safe
+                    generation lifecycle)
+    StoreView       refcount-pinned read snapshot of one generation
+                    (what in-flight searches stream from across a swap)
+    Manifest        durable JSON shard table (geometry, tiers, checksums,
+                    generation + external-id metadata)
+    Journal         CRC-framed write-ahead log (the durability point of
+                    every upsert/delete)
 
 See README.md in this package for the manifest format, tier semantics,
-and the streamed-path failure semantics (retry / quarantine / partial).
+the generation/journal on-disk layout, the recovery state machine, and
+the streamed-path failure semantics (retry / quarantine / partial).
 """
 from repro.faults import FaultError, ShardCorruptError, ShardReadError
-from repro.store.manifest import Manifest, ShardMeta, crc32_of
+from repro.store.journal import JOURNAL_NAME, Journal
+from repro.store.manifest import (
+    CURRENT_NAME,
+    Manifest,
+    ManifestError,
+    ShardMeta,
+    crc32_of,
+    read_current,
+    write_current,
+)
 from repro.store.store import (
     DELTA_ROWS_DEFAULT,
     F32_TIER,
     INT8_TIER,
     DatasetStore,
     Int8Shard,
+    StoreView,
 )
 
 __all__ = [
-    "DatasetStore", "Manifest", "ShardMeta", "Int8Shard", "crc32_of",
+    "DatasetStore", "StoreView", "Manifest", "ManifestError", "ShardMeta",
+    "Int8Shard", "crc32_of", "Journal", "JOURNAL_NAME",
+    "CURRENT_NAME", "read_current", "write_current",
     "F32_TIER", "INT8_TIER", "DELTA_ROWS_DEFAULT",
     "FaultError", "ShardReadError", "ShardCorruptError",
 ]

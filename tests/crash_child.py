@@ -1,0 +1,110 @@
+"""Kill-and-reopen child: die mid-write at a named crash site (exit 43).
+
+Run as a subprocess by tests/test_crash_recovery.py:
+
+    python tests/crash_child.py WORKDIR SITE OP SEED
+
+Builds a directory-backed store with a journaled mutation history, installs
+a process-wide :class:`repro.faults.FaultInjector` armed to ``os._exit`` at
+``SITE`` (``crash_mode="exit"``: no flush, no atexit — what SIGKILL or a
+power cut leaves on disk), then runs the crashing operation ``OP``
+(``upsert`` / ``delete`` / ``compact``). Exit code 43
+(``faults.CRASH_EXIT_CODE``) means the site fired; exit 0 means the
+operation completed without reaching it (a matrix bug the parent fails on).
+
+The module is also imported *by* the parent test for :func:`build`,
+:func:`crash_op`, and :func:`digest`, so the oracle workloads and the
+canonical state digest are byte-for-byte the same code in both processes.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import zlib
+
+import numpy as np
+
+N0 = 300         # seed corpus rows (3 shards: 128 + 128 + 44)
+D = 16           # true dim
+ROWS_PER_SHARD = 128  # the row-alignment floor (LANE)
+SETUP_UPSERTS = 5
+CRASH_OP_ROWS = 4
+
+
+def corpus(seed: int) -> np.ndarray:
+    return np.random.default_rng(seed).standard_normal(
+        (N0, D)).astype(np.float32)
+
+
+def build(directory: str, seed: int):
+    """The pre-crash workload: a written store plus journaled history
+    (an upsert batch and two deletes), identical in child and oracles."""
+    from repro.store import DatasetStore
+
+    store = DatasetStore.from_array(corpus(seed),
+                                    rows_per_shard=ROWS_PER_SHARD,
+                                    directory=directory)
+    rng = np.random.default_rng(seed + 1)
+    store.upsert(rng.standard_normal((SETUP_UPSERTS, D)).astype(np.float32))
+    store.delete([3, N0 + 1])  # one main row, one delta row
+    return store
+
+
+def crash_op(store, op: str, seed: int) -> None:
+    """The operation the armed site interrupts (or the oracle completes)."""
+    rng = np.random.default_rng(seed + 2)
+    if op == "upsert":
+        store.upsert(
+            rng.standard_normal((CRASH_OP_ROWS, D)).astype(np.float32))
+    elif op == "delete":
+        store.delete([0, N0 // 2, N0 + 2])
+    elif op == "compact":
+        store.compact()
+    else:
+        raise ValueError(f"unknown crash op {op!r}")
+
+
+def digest(store) -> dict:
+    """Canonical logical state: id space size + CRC of every live row.
+
+    Two stores with equal digests answer every exact query identically
+    (same live vectors under the same external ids), so "recovered
+    bit-identical to before or after" reduces to digest equality. Rows are
+    hashed at true dim through a pinned view — main shards, then delta,
+    tombstones excluded via the +inf-norm sentinel every executor masks on.
+    """
+    live: dict[int, int] = {}
+    with store.snapshot() as view:
+        pieces = [view.read_shard(i) for i in range(view.n_shards)]
+        pieces += view.delta_shards()
+        for ds in pieces:
+            x = np.asarray(ds.vectors)
+            norms = np.asarray(ds.norms)
+            nv = int(ds.n_valid)
+            pos = int(ds.base_index) + np.flatnonzero(
+                np.isfinite(norms[:nv]))
+            ext = view.external_ids(pos)
+            for p, g in zip(pos, ext):
+                row = np.ascontiguousarray(
+                    x[p - int(ds.base_index), :store.dim])
+                live[int(g)] = zlib.crc32(row.tobytes())
+    return {"n_ids": int(store.n_ids), "live": live}
+
+
+def main(argv) -> int:
+    workdir, site, op, seed = argv[0], argv[1], argv[2], int(argv[3])
+    from repro import faults
+
+    store = build(os.path.join(workdir, "store"), seed)
+    inj = faults.FaultInjector(
+        faults.FaultPlan(crash_site=site, crash_mode="exit"))
+    faults.install(inj)
+    try:
+        crash_op(store, op, seed)  # os._exit(43) fires inside, or...
+    finally:
+        faults.uninstall()
+    return 0  # ...the armed site was never reached
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

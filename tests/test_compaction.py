@@ -1,0 +1,521 @@
+"""Crash-safe store lifecycle (ISSUE 10): journaled mutations, background
+compaction with an atomic generation swap, and recovery.
+
+Covers the write-ahead journal (round trip, torn-tail repair, CRC
+discard), the in-process crash matrix (every named crash site recovers to
+a state bit-identical to "before" or "after" the interrupted operation —
+the subprocess kill variant lives in test_crash_recovery.py), structural
+manifest validation at open, compaction semantics (fold + atomic swap +
+id stability + zero recompiles + searches never blocked), per-row CRC
+verification on candidate gathers, and the chaos-marked churn soak
+(thousands of mutations with flat bytes/query, exact recall, and a flat
+executable cache)."""
+import json
+import os
+import time
+
+import numpy as np
+import pytest
+
+import crash_child as cc
+from repro.core import ExactKNN, cache_info
+from repro.faults import (
+    CRASH_SITES,
+    FaultInjector,
+    FaultPlan,
+    InjectedCrash,
+    ShardCorruptError,
+    installed,
+)
+from repro.store import (
+    JOURNAL_NAME,
+    DatasetStore,
+    Journal,
+    ManifestError,
+    read_current,
+)
+from repro.store.journal import decode_upsert, encode_delete, encode_upsert
+
+RNG = np.random.default_rng(11)
+
+JOURNAL_SITES = tuple(s for s in CRASH_SITES if s.startswith("journal."))
+COMPACT_SITES = tuple(s for s in CRASH_SITES if s.startswith("compact."))
+
+
+def _digest_dir(directory: str) -> dict:
+    store = DatasetStore.open(directory)
+    try:
+        return cc.digest(store)
+    finally:
+        store.close()
+
+
+def _oracles(tmp_path, op: str, seed: int = 0) -> tuple[dict, dict]:
+    """Digests of the scripted workload stopped just before / run just
+    past the crashing operation (no faults installed)."""
+    b = cc.build(str(tmp_path / "oracle_before"), seed)
+    before = cc.digest(b)
+    b.close()
+    a = cc.build(str(tmp_path / "oracle_after"), seed)
+    cc.crash_op(a, op, seed)
+    after = cc.digest(a)
+    a.close()
+    return before, after
+
+
+# -------------------------------------------------------------- the journal
+class TestJournal:
+    def test_roundtrip_and_idempotent_replay(self, tmp_path):
+        path = str(tmp_path / JOURNAL_NAME)
+        j = Journal(path)
+        v = RNG.standard_normal((3, 8)).astype(np.float32)
+        j.append(encode_upsert(10, v))
+        j.append(encode_delete([1, 4]))
+        j.close()
+        recs = Journal(path).replay()
+        assert [r["op"] for r in recs] == ["upsert", "delete"]
+        id0, got = decode_upsert(recs[0])
+        assert id0 == 10
+        np.testing.assert_array_equal(got, v)
+        assert recs[1]["ids"] == [1, 4]
+        assert Journal(path).replay() == recs  # replay of a clean log is pure
+
+    def test_torn_tail_truncated_and_appendable(self, tmp_path):
+        path = str(tmp_path / JOURNAL_NAME)
+        j = Journal(path)
+        j.append(encode_delete([1]))
+        j.append(encode_delete([2]))
+        j.close()
+        clean_size = os.path.getsize(path)
+        with open(path, "ab") as f:  # a crash mid-append: half a frame
+            f.write(b"KJNL\x99\x00")
+        recs = Journal(path).replay()
+        assert [r["ids"] for r in recs] == [[1], [2]]
+        # replay repaired the file: the torn tail is gone, and a later
+        # append lands after valid bytes, not after garbage
+        assert os.path.getsize(path) == clean_size
+        j2 = Journal(path)
+        j2.append(encode_delete([3]))
+        j2.close()
+        assert [r["ids"] for r in Journal(path).replay()] == [[1], [2], [3]]
+
+    def test_crc_mismatch_discards_tail(self, tmp_path):
+        path = str(tmp_path / JOURNAL_NAME)
+        j = Journal(path)
+        j.append(encode_delete([7]))
+        j.append(encode_delete([8]))
+        j.close()
+        raw = bytearray(open(path, "rb").read())
+        raw[-1] ^= 0xFF  # bit-rot inside the second record's payload
+        open(path, "wb").write(bytes(raw))
+        assert [r["ids"] for r in Journal(path).replay()] == [[7]]
+
+    def test_replay_of_missing_file_is_empty(self, tmp_path):
+        assert Journal(str(tmp_path / "absent.wal")).replay() == []
+
+
+# ----------------------------------------- in-process crash-recovery matrix
+class TestInProcessCrashRecovery:
+    """``crash_mode="raise"``: InjectedCrash is a BaseException, so the
+    store's own recovery code cannot absorb it. The crashed in-memory
+    store is discarded (as a dead process's heap would be); recovery is
+    whatever ``DatasetStore.open`` reconstructs from disk."""
+
+    #: protocol truth per journal site: before the record is durable the
+    #: mutation must vanish; after, it must replay.
+    _JOURNAL_EXPECT = {
+        "journal.append.begin": "before",
+        "journal.append.torn": "before",
+        "journal.append.after_write": "after",  # bytes reached the OS
+        "journal.append.after_fsync": "after",
+    }
+
+    @pytest.mark.parametrize("op", ["upsert", "delete"])
+    @pytest.mark.parametrize("site", JOURNAL_SITES)
+    def test_journal_sites(self, tmp_path, site, op):
+        before, after = _oracles(tmp_path, op)
+        assert before != after  # the matrix must be able to tell them apart
+        store = cc.build(str(tmp_path / "store"), seed=0)
+        with installed(FaultInjector(FaultPlan(crash_site=site))):
+            with pytest.raises(InjectedCrash):
+                cc.crash_op(store, op, seed=0)
+        store.close()
+        recovered = _digest_dir(str(tmp_path / "store"))
+        want = (before if self._JOURNAL_EXPECT[site] == "before" else after)
+        assert recovered == want
+
+    @pytest.mark.parametrize("site", COMPACT_SITES)
+    def test_compact_sites(self, tmp_path, site):
+        before, after = _oracles(tmp_path, "compact")
+        assert before == after  # compaction never changes logical state
+        store = cc.build(str(tmp_path / "store"), seed=0)
+        with installed(FaultInjector(FaultPlan(crash_site=site))):
+            with pytest.raises(InjectedCrash):
+                store.compact()
+        store.close()
+        recovered = DatasetStore.open(str(tmp_path / "store"))
+        try:
+            assert cc.digest(recovered) == before
+            # the CURRENT pointer is the commit point: generations only
+            # become visible once it flipped
+            want_gen = (1 if site in ("compact.after_current",
+                                      "compact.after_gc") else 0)
+            assert recovered.generation == want_gen
+            if want_gen == 0:
+                # the crashed build's orphan directory was swept at open
+                assert not (tmp_path / "store" / "gen_000001").exists()
+            # recovery is not a dead end: the reopened store compacts
+            stats = recovered.compact()
+            assert stats["generation"] == want_gen + 1
+            assert cc.digest(recovered) == before
+        finally:
+            recovered.close()
+
+
+# ------------------------------------------- manifest validation at open
+class TestOpenRejectsInvalidManifests:
+    def _doctored(self, tmp_path, mutate) -> str:
+        directory = str(tmp_path / "store")
+        DatasetStore.from_array(
+            RNG.standard_normal((256, 8)).astype(np.float32),
+            rows_per_shard=128, directory=directory)
+        path = os.path.join(directory, "manifest.json")
+        with open(path) as f:
+            d = json.load(f)
+        mutate(d)
+        with open(path, "w") as f:
+            json.dump(d, f)
+        return directory
+
+    def _rejects(self, directory: str, field: str, match: str):
+        with pytest.raises(ManifestError, match=match) as ei:
+            DatasetStore.open(directory)
+        assert ei.value.field == field
+
+    def test_duplicate_shard_id(self, tmp_path):
+        d = self._doctored(tmp_path,
+                           lambda m: m["shards"][1].update(shard_id=0))
+        self._rejects(d, "shards", "duplicate shard_id")
+
+    def test_overlapping_row_ranges(self, tmp_path):
+        d = self._doctored(tmp_path,
+                           lambda m: m["shards"][1].update(row_start=0))
+        self._rejects(d, "shards[1].row_start", "tile contiguously")
+
+    def test_geometry_mismatch(self, tmp_path):
+        d = self._doctored(tmp_path,
+                           lambda m: m["shards"][0].update(padded_rows=999))
+        self._rejects(d, "shards[0].padded_rows", "share the store geometry")
+
+    def test_missing_base_tier(self, tmp_path):
+        d = self._doctored(tmp_path, lambda m: m.update(tiers=["int8"]))
+        self._rejects(d, "tiers", "f32")
+
+    def test_empty_shard_table(self, tmp_path):
+        d = self._doctored(tmp_path, lambda m: m.update(shards=[]))
+        self._rejects(d, "shards", "empty shard table")
+
+    def test_n_valid_overflows_shards(self, tmp_path):
+        d = self._doctored(tmp_path, lambda m: m.update(n_valid=10**6))
+        self._rejects(d, "n_valid", "cannot fit")
+
+    def test_missing_file_entry(self, tmp_path):
+        d = self._doctored(tmp_path,
+                           lambda m: m["shards"][1]["files"].pop("f32"))
+        self._rejects(d, "shards[1].files", "missing")
+
+
+# ------------------------------------------------------ compaction proper
+class TestCompaction:
+    def _mutated_store(self, tmp_path, tiers=("f32",)):
+        x = RNG.standard_normal((300, 16)).astype(np.float32)
+        store = DatasetStore.from_array(x, rows_per_shard=128,
+                                        directory=str(tmp_path),
+                                        tiers=tiers)
+        store.upsert(RNG.standard_normal((40, 16)).astype(np.float32))
+        store.delete([3, 310, 17])
+        return store
+
+    def test_fold_swap_gc_and_reopen(self, tmp_path):
+        store = self._mutated_store(tmp_path, tiers=("f32", "int8"))
+        dig0 = cc.digest(store)
+        stats = store.compact()
+        assert stats["generation"] == 1
+        assert stats["delta_folded"] == 40
+        assert stats["rows_reclaimed"] == 3
+        assert store.generation == 1 and store.n_delta == 0
+        assert store.n_live == 337 and store.n_ids == 340
+        assert cc.digest(store) == dig0  # logical state untouched
+        # disk: the pointer names the new generation and the superseded
+        # root-generation files are gone (GC ran — nothing pinned it)
+        assert read_current(str(tmp_path)) == "gen_000001"
+        assert (tmp_path / "gen_000001" / "manifest.json").exists()
+        assert not (tmp_path / "manifest.json").exists()
+        assert not (tmp_path / "shard_00000.f32.bin").exists()
+        reopened = DatasetStore.open(str(tmp_path), verify=True)
+        try:
+            assert cc.digest(reopened) == dig0
+            assert reopened.has_tier("int8")  # tier re-quantized, not lost
+            # external ids are stable across the fold...
+            reopened.delete([5])
+            # ...and the allocator never reuses an id
+            assert list(reopened.upsert(np.ones((1, 16), np.float32))) == [340]
+        finally:
+            reopened.close()
+
+    def test_repeated_compactions_keep_one_generation_on_disk(self, tmp_path):
+        store = self._mutated_store(tmp_path)
+        for expect_gen in (1, 2, 3):
+            store.upsert(RNG.standard_normal((4, 16)).astype(np.float32))
+            assert store.compact()["generation"] == expect_gen
+        gens = sorted(p for p in os.listdir(tmp_path) if p.startswith("gen_"))
+        assert gens == ["gen_000003"]  # bounded disk: old ones GC'd
+        assert store.compaction_status()["retired_pinned"] == 0
+
+    def test_pinned_view_defers_gc_until_released(self, tmp_path):
+        store = self._mutated_store(tmp_path)
+        view = store.snapshot()  # an in-flight search's read surface
+        before = cc.digest(store)
+        store.compact()
+        # the old generation's files must outlive the swap while pinned
+        assert store.compaction_status()["retired_pinned"] == 1
+        assert (tmp_path / "manifest.json").exists()
+        np.testing.assert_array_equal(
+            np.asarray(view.read_shard(0).vectors),
+            np.asarray(view.read_shard(0).vectors))  # still readable
+        view.release()
+        assert store.compaction_status()["retired_pinned"] == 0
+        assert not (tmp_path / "manifest.json").exists()  # GC ran on unpin
+        assert cc.digest(store) == before
+
+    def test_concurrent_compact_rejected(self, tmp_path):
+        store = self._mutated_store(tmp_path)
+        with store._lock:
+            store._compact_state["running"] = True
+        try:
+            with pytest.raises(RuntimeError, match="already running"):
+                store.compact()
+            assert store.compact_async() is None
+        finally:
+            with store._lock:
+                store._compact_state["running"] = False
+
+    def test_auto_compact_pending_triggers_background_fold(self, tmp_path):
+        store = self._mutated_store(tmp_path)
+        store.auto_compact_pending = 8  # 40 delta + 3 dead already pending
+        store.upsert(RNG.standard_normal((1, 16)).astype(np.float32))
+        deadline = time.monotonic() + 30
+        while time.monotonic() < deadline:
+            st = store.compaction_status()
+            if st["compactions"] >= 1 and not st["running"]:
+                break
+            time.sleep(0.02)
+        st = store.compaction_status()
+        assert st["compactions"] >= 1 and st["error"] is None
+        assert store.generation >= 1 and st["pending_delta"] == 0
+
+
+# ------------------------------------- engine integration across the swap
+class TestEngineAcrossCompaction:
+    def _engine(self, tmp_path, n=1500, d=32):
+        from repro.api import SearchRequest  # noqa: F401  (used by callers)
+
+        x = RNG.standard_normal((n, d)).astype(np.float32)
+        q = RNG.standard_normal((6, d)).astype(np.float32)
+        DatasetStore.from_array(x, rows_per_shard=512,
+                                directory=str(tmp_path))
+        store = DatasetStore.open(str(tmp_path))
+        eng = ExactKNN(k=5, device_budget_bytes=1,
+                       retry_backoff_s=0.0).fit_store(store)
+        return eng, store, x, q
+
+    def test_zero_recompiles_and_stable_external_ids(self, tmp_path):
+        from repro.api import SearchRequest
+
+        eng, store, x, q = self._engine(tmp_path)
+        ids = eng.upsert((q[:3] + 1e-4).astype(np.float32))
+        eng.delete([int(ids[1]), 7])
+        r1 = eng.search(SearchRequest(queries=q))
+        warm = cache_info()
+        stats = store.compact()
+        assert stats["rows_reclaimed"] == 2
+        r2 = eng.search(SearchRequest(queries=q))  # engine refits on swap
+        # equal geometry across generations -> the compiled streamed steps
+        # carried over: not a single new executable
+        assert cache_info()["misses"] == warm["misses"]
+        # results are bit-identical under the surviving external ids
+        np.testing.assert_array_equal(np.asarray(r1.topk.indices),
+                                      np.asarray(r2.topk.indices))
+        np.testing.assert_array_equal(np.asarray(r1.topk.scores),
+                                      np.asarray(r2.topk.scores))
+        assert int(np.asarray(r2.topk.indices)[0, 0]) == int(ids[0])
+
+    def test_search_keeps_serving_during_background_compaction(self, tmp_path):
+        from repro.api import SearchRequest
+
+        eng, store, x, q = self._engine(tmp_path)
+        eng.upsert(RNG.standard_normal((30, 32)).astype(np.float32))
+        eng.delete([11, 12])
+        baseline = eng.search(SearchRequest(queries=q))
+        t = store.compact_async()
+        assert t is not None
+        served = 0
+        while t.is_alive():  # searches never block on the compactor
+            res = eng.search(SearchRequest(queries=q))
+            np.testing.assert_array_equal(np.asarray(res.topk.indices),
+                                          np.asarray(baseline.topk.indices))
+            served += 1
+        t.join()
+        assert store.compaction_status()["error"] is None
+        assert store.generation == 1
+        after = eng.search(SearchRequest(queries=q))  # post-swap
+        np.testing.assert_array_equal(np.asarray(after.topk.indices),
+                                      np.asarray(baseline.topk.indices))
+        np.testing.assert_array_equal(np.asarray(after.topk.scores),
+                                      np.asarray(baseline.topk.scores))
+
+
+# -------------------------------------- per-row CRC on candidate gathers
+class TestPerRowCRCOnGather:
+    def _flip_row_byte(self, tmp_path, shard: int, row_in_shard: int,
+                       padded_dim: int):
+        victim = tmp_path / f"shard_{shard:05d}.f32.bin"
+        raw = bytearray(victim.read_bytes())
+        raw[(row_in_shard * padded_dim + 2) * 4 + 1] ^= 0xFF
+        victim.write_bytes(bytes(raw))
+
+    def test_gather_rows_flags_flipped_byte(self, tmp_path):
+        x = RNG.standard_normal((200, 16)).astype(np.float32)
+        DatasetStore.from_array(x, rows_per_shard=128,
+                                directory=str(tmp_path))
+        store = DatasetStore.open(str(tmp_path), verify_on_read=True)
+        self._flip_row_byte(tmp_path, shard=1, row_in_shard=36,
+                            padded_dim=store.padded_dim)
+        with pytest.raises(ShardCorruptError, match="per-row CRC"):
+            store.gather_rows([128 + 36])
+        # rows outside the blast radius still verify and gather cleanly
+        np.testing.assert_array_equal(store.gather_rows([0])[0, :16], x[0])
+        # without verify_on_read the same gather is silent (the knob arms it)
+        assert DatasetStore.open(str(tmp_path)).gather_rows(
+            [128 + 36]).shape[0] == 1
+
+    def test_mid_rescore_corruption_is_loud_not_wrong_topk(self, tmp_path):
+        from repro.api import SearchRequest
+
+        x = RNG.standard_normal((1200, 16)).astype(np.float32)
+        DatasetStore.from_array(x, rows_per_shard=256,
+                                directory=str(tmp_path),
+                                tiers=("f32", "int8"))
+        store = DatasetStore.open(str(tmp_path), verify_on_read=True)
+        eng = ExactKNN(k=5, device_budget_bytes=1,
+                       retry_backoff_s=0.0).fit_store(store)
+        eng.enable_int8()
+        q = x[300][None, :].copy()  # plants row 300 as the rank-1 candidate
+        base = eng.search(SearchRequest(queries=q, tier="int8"))
+        assert int(np.asarray(base.topk.indices)[0, 0]) == 300
+        # flip one byte of the candidate's f32 row: the int8 scan (codes
+        # untouched) still nominates it, so the exact rescore must gather
+        # it — and the per-row CRC turns that gather into a loud failure
+        # instead of a silently wrong certified top-k
+        self._flip_row_byte(tmp_path, shard=1, row_in_shard=44,
+                            padded_dim=store.padded_dim)
+        with pytest.raises(ShardCorruptError, match="per-row CRC"):
+            eng.search(SearchRequest(queries=q, tier="int8"))
+
+
+# ------------------------------------------------------------- churn soak
+@pytest.mark.chaos
+def test_churn_soak_flat_bytes_recall_and_cache(tmp_path):
+    """Thousands of journaled mutations with auto-compaction churning
+    generations underneath live serving: recall stays exact against a
+    brute-force oracle of the live set, bytes/query tracks the live row
+    count (compaction reclaims, never leaks), the executable cache stays
+    flat (zero recompiles through every swap), and disk stays bounded
+    (exactly one generation directory at quiesce)."""
+    from repro.api import SearchRequest
+
+    seed = int(os.environ.get("CHAOS_SEED", "0"))
+    rng = np.random.default_rng(1000 + seed)
+    n0, d, k = 2048, 32, 10
+    x = rng.standard_normal((n0, d)).astype(np.float32)
+    DatasetStore.from_array(x, rows_per_shard=512, directory=str(tmp_path),
+                            tiers=("f32", "int8"))
+    store = DatasetStore.open(str(tmp_path))
+    store.auto_compact_pending = 600
+    eng = ExactKNN(k=k, device_budget_bytes=1,
+                   retry_backoff_s=0.0).fit_store(store)
+    eng.enable_int8()
+    q = rng.standard_normal((4, d)).astype(np.float32)
+
+    live = {i: x[i] for i in range(n0)}
+
+    def check_exact():
+        ids = np.fromiter(live, dtype=np.int64)
+        rows = np.stack([live[i] for i in ids])
+        dist = ((q[:, None, :] - rows[None, :, :]) ** 2).sum(-1)
+        order = np.argsort(dist, axis=1, kind="stable")[:, :k]
+        want = ids[order]
+        for tier in ("f32", "int8"):
+            res = eng.search(SearchRequest(queries=q, tier=tier))
+            np.testing.assert_array_equal(np.asarray(res.topk.indices), want)
+        return res  # the int8 result (last)
+
+    res8 = check_exact()
+    bytes8_start = int(res8.stats["bytes_scanned"])
+    warm = cache_info()
+
+    rounds, ups_per, dels_per = 40, 50, 10  # 2400 row mutations
+    for rnd in range(rounds):
+        vs = rng.standard_normal((ups_per, d)).astype(np.float32)
+        ids = eng.upsert(vs)
+        live.update(zip((int(i) for i in ids), vs))
+        dead = rng.choice(np.fromiter(live, dtype=np.int64), size=dels_per,
+                          replace=False)
+        eng.delete([int(g) for g in dead])
+        for g in dead:
+            del live[int(g)]
+        if rnd % 5 == 4:
+            check_exact()
+
+    # quiesce: drain any in-flight background compaction, then fold the
+    # remaining tail so the measured state is fully compacted
+    deadline = time.monotonic() + 60
+    while store.compaction_status()["running"]:
+        assert time.monotonic() < deadline
+        time.sleep(0.02)
+    store.auto_compact_pending = None
+    if store.n_delta or store.compaction_status()["tombstones"]:
+        store.compact()
+    assert store.compaction_status()["compactions"] >= 2  # churn compacted
+
+    res8 = check_exact()
+    resf = eng.search(SearchRequest(queries=q))
+    n_live = n0 + rounds * (ups_per - dels_per)
+    assert store.n_live == n_live and len(live) == n_live
+    assert store.n_ids == n0 + rounds * ups_per  # ids never reused
+
+    # flat executable cache: every generation swap reused compiled steps
+    assert cache_info()["size"] == warm["size"]
+    assert cache_info()["misses"] == warm["misses"]
+
+    # flat bytes/query: scanned bytes track the live row count, so churn
+    # plus compaction neither leaks deleted rows nor re-reads old gens
+    growth = n_live / n0
+    assert int(res8.stats["bytes_scanned"]) <= bytes8_start * growth * 1.25
+    # the int8 tier keeps its bandwidth edge after every re-quantization
+    ratio = (int(res8.stats["bytes_scanned"])
+             / int(resf.stats["bytes_scanned"]))
+    assert ratio <= 0.35, f"int8/f32 bytes ratio {ratio:.3f}"
+
+    # bounded disk: one generation directory, no root-gen leftovers
+    gens = sorted(p for p in os.listdir(tmp_path) if p.startswith("gen_"))
+    assert len(gens) == 1
+    assert not (tmp_path / "manifest.json").exists()
+    assert store.compaction_status()["retired_pinned"] == 0
+
+    # and the whole history reopens: journal + manifest agree with RAM
+    reopened = DatasetStore.open(str(tmp_path), verify=True)
+    try:
+        assert cc.digest(reopened) == cc.digest(store)
+    finally:
+        reopened.close()

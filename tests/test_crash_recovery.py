@@ -1,0 +1,113 @@
+"""Kill-and-reopen matrix (ISSUE 10 acceptance): a real process death at
+every named crash site, then recovery from the bytes left on disk.
+
+Each case runs tests/crash_child.py in a subprocess that arms one site of
+``repro.faults.CRASH_SITES`` with ``crash_mode="exit"`` (``os._exit`` —
+no interpreter cleanup, no buffer flush, the on-disk state a power cut or
+SIGKILL leaves) and dies mid-operation with exit code 43. The parent then
+reopens the store directory and asserts the recovered state is
+bit-identical to the oracle digest of the workload stopped *before* the
+interrupted operation or run *past* it — never a third state — and that
+the recovered store still mutates, compacts, and reopens (recovery is not
+a dead end).
+
+A four-case smoke subset runs in tier-1; the full site × operation matrix
+is chaos-marked and replayed over the CHAOS_SEED matrix in CI."""
+import os
+import pathlib
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import crash_child as cc
+from repro.faults import CRASH_EXIT_CODE, CRASH_SITES
+from repro.store import DatasetStore
+
+HERE = pathlib.Path(__file__).parent
+
+JOURNAL_SITES = tuple(s for s in CRASH_SITES if s.startswith("journal."))
+COMPACT_SITES = tuple(s for s in CRASH_SITES if s.startswith("compact."))
+MATRIX = ([(s, "upsert") for s in JOURNAL_SITES]
+          + [(s, "delete") for s in JOURNAL_SITES]
+          + [(s, "compact") for s in COMPACT_SITES])
+
+#: tier-1 subset: one torn write, one durable-but-unacked mutation, and
+#: both sides of the compactor's pointer swap
+SMOKE = (
+    ("journal.append.torn", "upsert"),
+    ("journal.append.after_fsync", "delete"),
+    ("compact.before_current", "compact"),
+    ("compact.after_current", "compact"),
+)
+
+
+def _kill_and_reopen(tmp_path, site: str, op: str, seed: int) -> None:
+    workdir = tmp_path / "crash"
+    workdir.mkdir()
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (str(HERE.parent / "src") + os.pathsep + str(HERE)
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    proc = subprocess.run(
+        [sys.executable, str(HERE / "crash_child.py"),
+         str(workdir), site, op, str(seed)],
+        capture_output=True, text=True, env=env, timeout=300)
+    assert proc.returncode == CRASH_EXIT_CODE, (
+        f"{site}/{op}: child exited {proc.returncode} (expected "
+        f"{CRASH_EXIT_CODE} = died at the armed site)\n"
+        f"stdout: {proc.stdout}\nstderr: {proc.stderr}")
+
+    before, after = _oracles(tmp_path, op, seed)
+    store = DatasetStore.open(str(workdir / "store"))
+    try:
+        recovered = cc.digest(store)
+        assert recovered in (before, after), (
+            f"{site}/{op}: recovered state matches neither the pre- nor "
+            f"the post-operation oracle")
+        if op == "compact":
+            # logical no-op either way, but the pointer tells which side
+            # of the swap the crash landed on
+            assert before == after
+            want_gen = (1 if site in ("compact.after_current",
+                                      "compact.after_gc") else 0)
+            assert store.generation == want_gen
+
+        # recovery liveness: the reopened store keeps full lifecycle —
+        # journaled mutations, compaction, and a clean reopen
+        n_ids0 = store.n_ids
+        ids = store.upsert(np.ones((1, cc.D), np.float32))
+        assert int(ids[0]) == n_ids0
+        store.delete([int(ids[0])])
+        store.compact()
+        final = cc.digest(store)
+    finally:
+        store.close()
+    verified = DatasetStore.open(str(workdir / "store"), verify=True)
+    try:
+        assert cc.digest(verified) == final
+    finally:
+        verified.close()
+
+
+def _oracles(tmp_path, op: str, seed: int) -> tuple[dict, dict]:
+    b = cc.build(str(tmp_path / "oracle_before"), seed)
+    before = cc.digest(b)
+    b.close()
+    a = cc.build(str(tmp_path / "oracle_after"), seed)
+    cc.crash_op(a, op, seed)
+    after = cc.digest(a)
+    a.close()
+    return before, after
+
+
+@pytest.mark.parametrize("site,op", SMOKE)
+def test_kill_and_reopen_smoke(tmp_path, site, op):
+    _kill_and_reopen(tmp_path, site, op, seed=0)
+
+
+@pytest.mark.chaos
+@pytest.mark.parametrize("site,op", MATRIX)
+def test_kill_and_reopen_matrix(tmp_path, site, op):
+    seed = int(os.environ.get("CHAOS_SEED", "0"))
+    _kill_and_reopen(tmp_path, site, op, seed)
